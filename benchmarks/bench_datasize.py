@@ -1,0 +1,43 @@
+"""Paper Fig. 3 reproduction: jacobi-1d across dataset sizes.
+
+Two configurations — the large-size dedicated one (tensor-style fusion:
+simple, fully sequential, vector-friendly) and pluto-style (skewed,
+enables parallelism) — measured at multiple (T, N) sizes.
+
+Output CSV: size,variant,us_per_call,speedup_vs_pluto
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import config as CFG
+from repro.core.deps import compute_dependences
+from repro.core.scops_polybench import make_jacobi1d
+
+from .common import FAST, Variant, check_checksums, measure
+
+SIZES = [(20, 30), (50, 120), (100, 400), (200, 1000), (500, 4000),
+         (500, 16000), (1000, 64000)]
+
+
+def run(out=sys.stdout):
+    sizes = SIZES[:4] if FAST else SIZES
+    print("size,variant,us_per_call,speedup_vs_pluto", file=out)
+    for t, n in sizes:
+        scop = make_jacobi1d((t, n))
+        deps = compute_dependences(scop)
+        variants = [
+            Variant("pluto-style", CFG.pluto_style),
+            Variant("dedicated(tensor)", CFG.tensor_style),
+            Variant("pluto+tile32+wave", CFG.pluto_style, tile=32, wavefront=True),
+        ]
+        ms = [measure(scop, v, deps=deps) for v in variants]
+        check_checksums(f"jacobi1d:{t}x{n}", ms)
+        base = next(m.seconds for m in ms if m.variant == "pluto-style")
+        for m in ms:
+            print(f"T{t}_N{n},{m.variant},{m.seconds*1e6:.1f},"
+                  f"{base/m.seconds:.3f}", file=out)
+
+
+if __name__ == "__main__":
+    run()

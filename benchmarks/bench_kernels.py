@@ -1,0 +1,17 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU — structural
+validation; real perf is the roofline analysis). Filled by kernels/."""
+from __future__ import annotations
+import sys
+
+
+def run(out=sys.stdout):
+    try:
+        from repro.kernels import bench as kb
+    except ImportError:
+        print("kernels,not_built_yet,0,skip", file=out)
+        return
+    kb.run(out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Roofline terms per (arch × shape × mesh × variant) from dry-run
+artifacts. Run `python -m repro.launch.dryrun --all` first."""
+from __future__ import annotations
+import json, sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run(out=sys.stdout):
+    files = sorted(RESULTS.glob("*.json")) if RESULTS.exists() else []
+    if not files:
+        print("roofline,no_dryrun_artifacts_yet,0,run repro.launch.dryrun", file=out)
+        return
+    print("arch,shape,mesh,variant,mem_gib,compute_s,memory_s,collective_s,"
+          "bottleneck,model_flops_frac,mfu_upper_bound", file=out)
+    n_ok = 0
+    for f in files:
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            print(f"{d['arch']},{d['shape']},{d['mesh']},{d['variant']},"
+                  f"FAILED,,,,,,", file=out)
+            continue
+        r = d["roofline"]
+        n_ok += 1
+        print(f"{d['arch']},{d['shape']},{d['mesh']},{d['variant']},"
+              f"{d['memory']['bytes_per_device']/2**30:.2f},"
+              f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['collective_s']:.4g},{r['bottleneck']},"
+              f"{r['model_flops_frac']:.3f},{r['mfu_upper_bound']:.5f}",
+              file=out)
+    print(f"TOTAL,cells_ok,{n_ok},of {len(files)}", file=out)
+
+
+if __name__ == "__main__":
+    run()

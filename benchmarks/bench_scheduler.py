@@ -1,0 +1,39 @@
+"""Scheduler-cost benchmark: wall time of PolyTOPS itself per kernel and
+strategy (dependence analysis + ILP solving), plus ILP solve counts.
+
+Output CSV: kernel,strategy,sched_ms,ilp_solves,deps
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import config as CFG
+from repro.core.deps import compute_dependences
+from repro.core.scheduler import PolyTOPSScheduler
+from repro.core.scops_polybench import REGISTRY
+
+KERNELS = ["gemm", "mm2", "atax", "symm", "lu", "covariance",
+           "jacobi2d", "heat3d", "fdtd2d", "durbin"]
+
+
+def run(out=sys.stdout):
+    print("kernel,strategy,sched_ms,ilp_solves,deps", file=out)
+    fast = __import__("os").environ.get("POLYTOPS_BENCH_FAST") == "1"
+    for name in (KERNELS[:4] if fast else KERNELS):
+        scop = REGISTRY[name]()
+        t0 = time.time()
+        deps = compute_dependences(scop)
+        dep_ms = (time.time() - t0) * 1e3
+        print(f"{name},dependence-analysis,{dep_ms:.1f},0,{len(deps)}", file=out)
+        for cfg in (CFG.pluto_style(), CFG.tensor_style(), CFG.isl_style()):
+            sch = PolyTOPSScheduler(scop, cfg, deps=[d for d in deps])
+            t0 = time.time()
+            sch.schedule()
+            ms = (time.time() - t0) * 1e3
+            print(f"{name},{cfg.name},{ms:.1f},{sch.stats['ilp_solves']},"
+                  f"{len(deps)}", file=out)
+
+
+if __name__ == "__main__":
+    run()

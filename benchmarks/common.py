@@ -1,0 +1,141 @@
+"""Shared benchmark machinery: variant → schedule → C source → time.
+
+Results are cached two ways: compiled-run results by source hash
+(crunner) and generated C source by a semantic key, so re-running a
+benchmark suite is cheap. Set POLYTOPS_NO_CACHE=1 to disable.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import config as CFG
+from repro.core.cbackend import CCodeGenerator
+from repro.core.crunner import RunResult, compile_and_run
+from repro.core.deps import compute_dependences
+from repro.core.postproc import tile_schedule
+from repro.core.scheduler import PolyTOPSScheduler, Schedule, SchedulingError
+from repro.core.scop import Scop
+
+SALT = "v7"  # bump to invalidate the source cache after codegen changes
+SRC_CACHE = Path(os.environ.get("POLYTOPS_SRC_CACHE", "/tmp/polytops_src_cache"))
+NO_CACHE = os.environ.get("POLYTOPS_NO_CACHE") == "1"
+FAST = os.environ.get("POLYTOPS_BENCH_FAST") == "1"
+
+SCALARS = {"alpha": 1.5, "beta": 0.7, "zero": 0.0, "one": 1.0,
+           "fn": 500.0, "eps": 0.1}
+
+
+@dataclass
+class Variant:
+    name: str
+    config: Callable[[], CFG.SchedulerConfig]
+    tile: Optional[int] = None
+    wavefront: bool = False
+    autovec: bool = False
+    original: bool = False     # untransformed program order
+
+
+def original_schedule(scop: Scop) -> Schedule:
+    sch = PolyTOPSScheduler(scop, CFG.SchedulerConfig())
+    return sch._fallback_original()
+
+
+@dataclass
+class Measurement:
+    variant: str
+    seconds: float
+    checksum: float
+    sched_seconds: float
+    fallback: bool
+
+    def row(self, kernel: str) -> str:
+        return (f"{kernel},{self.variant},{self.seconds * 1e6:.1f},"
+                f"sched_s={self.sched_seconds:.2f},fallback={int(self.fallback)}")
+
+
+def _source_for(scop: Scop, variant: Variant, deps=None) -> Tuple[str, float, bool]:
+    key = hashlib.sha256(
+        json.dumps([SALT, scop.name, sorted(scop.params.items()), variant.name,
+                    variant.tile, variant.wavefront, variant.autovec,
+                    variant.original]).encode()
+    ).hexdigest()[:24]
+    SRC_CACHE.mkdir(parents=True, exist_ok=True)
+    cfile = SRC_CACHE / f"{key}.json"
+    if not NO_CACHE and cfile.exists():
+        data = json.loads(cfile.read_text())
+        return data["src"], data["sched_s"], data["fallback"]
+    t0 = time.time()
+    if variant.original:
+        sched = original_schedule(scop)
+    else:
+        cfg = variant.config()
+        if variant.autovec:
+            cfg.auto_vectorize = True
+        sched = PolyTOPSScheduler(scop, cfg,
+                                  deps=[d for d in deps] if deps else None).schedule()
+    scan = (tile_schedule(sched, variant.tile, wavefront=variant.wavefront)
+            if variant.tile else None)
+    scalars = {k: v for k, v in SCALARS.items() if k in scop.scalars}
+    src = CCodeGenerator(sched, scan=scan, scalars=scalars).generate()
+    sched_s = time.time() - t0
+    cfile.write_text(json.dumps({"src": src, "sched_s": sched_s,
+                                 "fallback": sched.fallback}))
+    return src, sched_s, sched.fallback
+
+
+def measure(scop: Scop, variant: Variant, deps=None, target_s: float = 0.15,
+            timeout: int = 900) -> Measurement:
+    src, sched_s, fb = _source_for(scop, variant, deps)
+    r = compile_and_run(src, tag=f"{scop.name}_{variant.name}", timeout=timeout,
+                        use_cache=not NO_CACHE)
+    if r.seconds < 0.02:
+        # too fast to trust: rebuild with an internal repeat loop
+        reps = max(3, min(200000, int(target_s / max(r.seconds, 1e-7))))
+        src2 = src.replace("#define REPEATS 1\n", f"#define REPEATS {reps}\n")
+        r = compile_and_run(src2, tag=f"{scop.name}_{variant.name}_r", timeout=timeout,
+                            use_cache=not NO_CACHE)
+    return Measurement(variant.name, r.seconds, r.checksum, sched_s, fb)
+
+
+def check_checksums(kernel: str, ms: Sequence[Measurement], rel: float = 1e-6) -> bool:
+    import math
+    vals = [m.checksum for m in ms]
+    base = vals[0]
+    ok = all(
+        (math.isnan(v) and math.isnan(base))
+        or abs(v - base) <= rel * max(1.0, abs(base))
+        for v in vals
+    )
+    if not ok:
+        print(f"WARNING: checksum mismatch for {kernel}: "
+              + ", ".join(f"{m.variant}={m.checksum:.9e}" for m in ms), file=sys.stderr)
+    return ok
+
+
+def standard_variants() -> List[Variant]:
+    return [
+        Variant("original", CFG.SchedulerConfig, original=True),
+        Variant("pluto-style", CFG.pluto_style),
+        Variant("tensor-style", CFG.tensor_style),
+        Variant("isl-style", CFG.isl_style),
+        Variant("feautrier-style", CFG.feautrier_style),
+    ]
+
+
+def kernel_specific_variants() -> List[Variant]:
+    """The 'playing with cost functions, fusion, vectorization and tiling'
+    search space for kernel-specific configurations (paper §IV-B)."""
+    return [
+        Variant("tensor+autovec", CFG.tensor_style, autovec=True),
+        Variant("pluto+tile32", CFG.pluto_style, tile=32),
+        Variant("tensor+tile32", CFG.tensor_style, tile=32),
+        Variant("pluto+tile32+wave", CFG.pluto_style, tile=32, wavefront=True),
+        Variant("bigloops", CFG.bigloops_style),
+    ]

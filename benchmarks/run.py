@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows per section.
+
+  table1     — NPU custom operators, isl vs PolyTOPS directives (Table I)
+  fig2       — PolyBench, 4 strategies + kernel-specific vs Pluto (Fig 2)
+  fig3       — jacobi-1d dataset-size sweep (Fig 3)
+  fig4       — scheduling-tool comparison (Fig 4 / Table II, reproduced
+               strategies — external tools unavailable offline)
+  scheduler  — PolyTOPS compile-time cost
+  kernels    — Pallas kernel microbenchmarks (framework layer)
+  roofline   — dry-run-derived roofline terms (framework layer; reads
+               launch/dryrun results if present)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Env:   POLYTOPS_BENCH_FAST=1 for a quick subset.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["table1", "fig2", "fig3", "fig4",
+                                "scheduler", "kernels", "roofline"]
+    for s in sections:
+        t0 = time.time()
+        print(f"\n===== {s} =====")
+        try:
+            if s == "table1":
+                from . import bench_custom_ops as m
+            elif s == "fig2":
+                from . import bench_polybench as m
+            elif s == "fig3":
+                from . import bench_datasize as m
+            elif s == "fig4":
+                from . import bench_sota as m
+            elif s == "scheduler":
+                from . import bench_scheduler as m
+            elif s == "kernels":
+                from . import bench_kernels as m
+            elif s == "roofline":
+                from . import bench_roofline as m
+            else:
+                print(f"unknown section {s}")
+                continue
+            m.run()
+        except Exception:
+            import traceback
+            traceback.print_exc()
+            print(f"SECTION_FAILED,{s}")
+        print(f"===== {s} done in {time.time()-t0:.1f}s =====")
+
+
+if __name__ == "__main__":
+    main()

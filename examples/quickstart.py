@@ -1,0 +1,51 @@
+"""PolyTOPS quickstart: schedule a kernel four ways, generate code, run it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import config as CFG
+from repro.core.codegen import CodeGenerator, interpret_scop
+from repro.core.scheduler import schedule_scop
+from repro.core.scop import Scop
+
+
+def build_gemm(n=64):
+    k = Scop("gemm", params={"N": n})
+    with k.loop("i", 0, "N"):
+        with k.loop("j", 0, "N"):
+            k.stmt("C[i,j] = C[i,j] * beta")
+            with k.loop("kk", 0, "N"):
+                k.stmt("C[i,j] = C[i,j] + alpha * A[i,kk] * B[kk,j]")
+    return k
+
+
+def main():
+    scop = build_gemm()
+    print(f"SCoP: {scop}\n")
+    for make in (CFG.pluto_style, CFG.tensor_style, CFG.isl_style,
+                 CFG.feautrier_style):
+        cfg = make()
+        sched = schedule_scop(scop, cfg)
+        print(f"=== {cfg.name} ===")
+        print(sched.pretty())
+        fn, src = CodeGenerator(sched).build()
+        rng = np.random.default_rng(0)
+        n = scop.params["N"]
+        arrays = {"A": rng.standard_normal((n, n)),
+                  "B": rng.standard_normal((n, n)),
+                  "C": rng.standard_normal((n, n))}
+        ref = {k: v.copy() for k, v in arrays.items()}
+        interpret_scop(scop, ref, {"alpha": 1.5, "beta": 0.5})
+        fn(**arrays, alpha=1.5, beta=0.5, N=n)
+        ok = np.allclose(arrays["C"], ref["C"])
+        print(f"matches original semantics: {ok}\n")
+    print("The tensor-style (i,k,j) interchange is the paper's Listing-1 "
+          "mechanism: contiguity puts the stride-1 iterator innermost.")
+
+
+if __name__ == "__main__":
+    main()

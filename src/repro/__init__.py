@@ -1,0 +1,1 @@
+"""repro: PolyTOPS reproduction + multi-pod JAX LM framework."""

@@ -1,0 +1,31 @@
+"""PolyTOPS: configurable, flexible polyhedral scheduler (CGO 2024).
+
+Public API:
+
+    from repro.core import Scop, schedule_scop, config
+
+    k = Scop("gemm", params={"N": 512})
+    with k.loop("i", 0, "N"):
+        with k.loop("j", 0, "N"):
+            with k.loop("kk", 0, "N"):
+                k.stmt("C[i,j] = C[i,j] + A[i,kk] * B[kk,j]")
+    sched = schedule_scop(k, config.tensor_style())
+    print(sched.pretty())
+
+Code generation: repro.core.codegen (numpy) / repro.core.cbackend (C).
+Kernel plans for Pallas: repro.core.akg.
+"""
+from . import config
+from .config import (DimConfig, Directive, FusionSpec, SchedulerConfig,
+                     bigloops_style, feautrier_style, isl_style, pluto_style,
+                     tensor_style)
+from .deps import compute_dependences
+from .scheduler import PolyTOPSScheduler, Schedule, SchedulingError, schedule_scop
+from .scop import Scop
+
+__all__ = [
+    "Scop", "schedule_scop", "PolyTOPSScheduler", "Schedule",
+    "SchedulingError", "SchedulerConfig", "DimConfig", "Directive",
+    "FusionSpec", "compute_dependences", "config", "pluto_style",
+    "tensor_style", "isl_style", "feautrier_style", "bigloops_style",
+]

@@ -1,0 +1,134 @@
+"""AKG bridge: tensor ops → SCoPs → PolyTOPS schedules → kernel plans.
+
+This is how the paper's scheduler becomes a first-class feature of the
+TPU framework (DESIGN.md §2): the loop order, band structure and
+vectorized dimension chosen by PolyTOPS for an operator's SCoP are
+translated into a :class:`KernelPlan` — grid-dimension order, BlockSpec
+tile shapes and the lane-mapped innermost dim — consumed by the Pallas
+kernels in ``repro.kernels``.
+
+TPU adaptation: the vectorized iterator maps to the 128-lane VPU axis,
+the next-inner to 8 sublanes; MXU-facing tiles snap to multiples of
+(128, 128); tile sizes are chosen so the working set fits VMEM (~16 MiB
+usable) — this replaces the paper's externally-provided NPU tile sizes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .config import SchedulerConfig, tensor_style
+from .postproc import find_tilable_bands
+from .scheduler import Schedule, schedule_scop
+from .scop import Scop
+
+VMEM_BYTES = 16 * 2**20
+LANE = 128
+SUBLANE = 8
+
+
+@dataclass(frozen=True)
+class KernelPlan:
+    """Loop-nest plan for a Pallas kernel."""
+    loop_order: Tuple[str, ...]       # outer → inner iterator names
+    vector_iter: Optional[str]        # lane-mapped innermost iterator
+    tile: Dict[str, int]              # iterator -> tile size
+    bands: Tuple[int, ...]            # band id per scheduled dim
+    schedule_str: str = ""            # human-readable schedule (debug)
+
+
+def _matmul_scop(m: int, n: int, k: int) -> Scop:
+    s = Scop("pallas_matmul", params={"M": m, "N": n, "K": k})
+    with s.loop("i", 0, "M"):
+        with s.loop("j", 0, "N"):
+            with s.loop("kk", 0, "K"):
+                s.stmt("C[i,j] = C[i,j] + A[i,kk] * B[kk,j]")
+    return s
+
+
+def _order_from_schedule(sched: Schedule, stmt_idx: int = 0) -> List[str]:
+    stmt = sched.scop.statements[stmt_idx]
+    order = []
+    for row in sched.rows[stmt.index]:
+        if row.kind != "linear":
+            continue
+        itv = row.it_vector(stmt.dim)
+        nz = [k for k, v in enumerate(itv) if v != 0]
+        if len(nz) == 1 and stmt.iters[nz[0]] not in order:
+            order.append(stmt.iters[nz[0]])
+    for it in stmt.iters:     # safety: append anything unplaced
+        if it not in order:
+            order.append(it)
+    return order
+
+
+def _fit_tiles(order: List[str], dims: Dict[str, int], vector_iter: str,
+               bytes_per_elem: int = 2, n_buffers: int = 3) -> Dict[str, int]:
+    """Snap tiles to TPU-friendly sizes under a VMEM budget."""
+    tile = {}
+    for it in order:
+        d = dims[it]
+        if it == vector_iter:
+            tile[it] = min(d, 512 if d % 512 == 0 else LANE * max(d // LANE, 1))
+            tile[it] = max(min(tile[it], d), min(d, LANE))
+        else:
+            tile[it] = min(d, 128 if d >= 128 else d)
+    # shrink until the (rough) working set fits VMEM
+    def wset():
+        t = [tile[i] for i in order]
+        prod2 = 1
+        for a in t[-2:]:
+            prod2 *= a
+        return n_buffers * prod2 * bytes_per_elem * 4
+
+    shrink_order = [it for it in order if it != vector_iter]
+    while wset() > VMEM_BYTES and any(tile[i] > SUBLANE for i in shrink_order):
+        for it in shrink_order:
+            if tile[it] > SUBLANE:
+                tile[it] //= 2
+                break
+    return tile
+
+
+@functools.lru_cache(maxsize=64)
+def plan_matmul(m: int, n: int, k: int,
+                strategy: str = "tensor") -> KernelPlan:
+    """PolyTOPS-planned matmul: tensor-style scheduling yields the
+    cache/VMEM-friendly (i, k, j) order with j vectorized (lanes)."""
+    scop = _matmul_scop(m, n, k)
+    cfg = tensor_style()
+    cfg.auto_vectorize = True
+    sched = schedule_scop(scop, cfg)
+    order = _order_from_schedule(sched)
+    vec = None
+    stmt = scop.statements[0]
+    vi = sched.vector_iter.get(0)
+    if vi is not None:
+        vec = stmt.iters[vi]
+    else:
+        vec = order[-1]
+    tile = _fit_tiles(order, {"i": m, "kk": k, "j": n}, vec)
+    bands = tuple(sched.bands)
+    return KernelPlan(tuple(order), vec, tile, bands, sched.pretty())
+
+
+@functools.lru_cache(maxsize=8)
+def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
+    """Schedule the S = Q·Kᵀ core (q, k, d loops): contiguity puts d
+    innermost (lanes) and yields the q-block × k-block band that the
+    flash kernel tiles over."""
+    s = Scop("attn_score", params={"Q": seq_q, "K": seq_k, "D": head_dim})
+    with s.loop("q", 0, "Q"):
+        with s.loop("kk", 0, "K"):
+            with s.loop("d", 0, "D"):
+                s.stmt("S[q,kk] = S[q,kk] + Qm[q,d] * Km[kk,d]")
+    cfg = tensor_style()
+    sched = schedule_scop(s, cfg)
+    order = _order_from_schedule(sched)
+    tile = _fit_tiles(order, {"q": seq_q, "kk": seq_k, "d": head_dim}, "d")
+    # flash blocking: q and k tiles bounded for the online-softmax state
+    tile["q"] = min(tile.get("q", 128), 128)
+    tile["kk"] = min(tile.get("kk", 128), 128)
+    return KernelPlan(tuple(order), "d", tile, tuple(sched.bands),
+                      sched.pretty())

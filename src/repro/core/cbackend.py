@@ -1,0 +1,235 @@
+"""C backend: emit a self-contained PolyBench-style C program for a
+schedule (kernel + deterministic init + timing + checksum).
+
+The Python/numpy backend (codegen.py) is the correctness oracle; this
+backend is the *measurement* path for the paper's CPU experiments
+(§IV-B/C/D): gcc -O3 -march=native applies real SIMD vectorization and
+real cache behaviour. Parallel dims get ``#pragma omp parallel for`` and
+vectorizable innermost dims ``#pragma omp simd`` (this container has one
+core, so omp-parallel speedups are structural — documented in
+EXPERIMENTS.md; SIMD + locality effects are real).
+
+Concrete parameter values are baked in as compile-time constants,
+exactly like PolyBench reference harnesses.
+"""
+from __future__ import annotations
+
+import math
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .affine import Affine
+from .codegen import (CodeGenerator, ScanStmt, _affine_src, _substitute_body,
+                      _yvar)
+from .polyhedron import maximum, minimum
+from .scheduler import Schedule
+from .scop import Scop, _ACCESS, _split_subscripts
+
+
+def _ceild_c(num: str, den: int) -> str:
+    return num if den == 1 else f"ceild({num}, {den})"
+
+
+def _floord_c(num: str, den: int) -> str:
+    return num if den == 1 else f"floord({num}, {den})"
+
+
+def _fold(fn: str, terms: List[str]) -> str:
+    out = terms[0]
+    for t in terms[1:]:
+        out = f"{fn}({out}, {t})"
+    return out
+
+
+def array_extents(scop: Scop) -> Dict[str, List[int]]:
+    """Numeric extent of each array dim = 1 + max subscript value over all
+    accesses (with the SCoP's concrete parameter values)."""
+    ctx = [({p: Fraction(1), 1: Fraction(-v)}, "==0") for p, v in scop.params.items()]
+    ext: Dict[str, List[int]] = {a: [0] * r for a, r in scop.arrays.items()}
+    for s in scop.statements:
+        cons = list(s.domain) + ctx
+        for acc in s.accesses:
+            for d, sub in enumerate(acc.subscripts):
+                hi = maximum(cons, sub)
+                lo = minimum(cons, sub)
+                if hi is None:   # empty domain
+                    continue
+                if lo is not None and lo < 0:
+                    raise ValueError(f"negative subscript for {acc.array} in S{s.index}")
+                ext[acc.array][d] = max(ext[acc.array][d], int(hi) + 1)
+    return ext
+
+
+class CCodeGenerator(CodeGenerator):
+    def __init__(self, sched: Schedule, scan: Optional[List[ScanStmt]] = None,
+                 scalars: Optional[Dict[str, float]] = None,
+                 omp: bool = True, repeats: int = 1,
+                 func_name: Optional[str] = None):
+        super().__init__(sched, scan=scan, vectorize=False, func_name=func_name)
+        self.scalars = dict(scalars or {})
+        self.omp = omp
+        self.repeats = repeats
+        self._parallel_emitted = False
+
+    # -- program ----------------------------------------------------------
+    def generate(self) -> str:
+        scop = self.scop
+        self.lines = []
+        self.indent = 0
+        self._parallel_emitted = False
+        ext = array_extents(scop)
+        e = self._emit
+        e("#include <stdio.h>")
+        e("#include <stdlib.h>")
+        e("#include <math.h>")
+        e("#include <time.h>")
+        e("#define floord(n,d) (((n)<0) ? -((-(n)+(d)-1)/(d)) : (n)/(d))")
+        e("#define ceild(n,d)  (((n)<0) ? -((-(n))/(d)) : ((n)+(d)-1)/(d))")
+        e("#define MINI(a,b)   (((a)<(b)) ? (a) : (b))")
+        e("#define MAXI(a,b)   (((a)>(b)) ? (a) : (b))")
+        for p, v in scop.params.items():
+            e(f"#define {p} {v}")
+        for sc, v in self.scalars.items():
+            e(f"static const double {sc} = {v!r};")
+        for a, dims in ext.items():
+            dd = "".join(f"[{max(d,1)}]" for d in dims)
+            e(f"static double {a}{dd};")
+        e("")
+        e("static void init_arrays(void) {")
+        self.indent += 1
+        for a, dims in ext.items():
+            idx = [f"i{k}" for k in range(len(dims))]
+            for k, d in enumerate(dims):
+                e("    " * k + f"for (int {idx[k]} = 0; {idx[k]} < {max(d,1)}; {idx[k]}++)")
+            expr = " + ".join(f"{ix}*{7 + 6 * k}" for k, ix in enumerate(idx)) or "0"
+            sub = "".join(f"[{ix}]" for ix in idx)
+            init = scop.c_init.get(
+                a, f"((double)(({expr} + 3) % 251)) / 251.0 + 0.1"
+            )
+            e("    " * len(dims) + f"{a}{sub} = {init};")
+        self.indent -= 1
+        e("}")
+        e("")
+        e("static double checksum(void) {")
+        self.indent += 1
+        e("double cksum_ = 0.0;")
+        for a, dims in ext.items():
+            idx = [f"i{k}" for k in range(len(dims))]
+            for k, d in enumerate(dims):
+                e("    " * k + f"for (int {idx[k]} = 0; {idx[k]} < {max(d,1)}; {idx[k]}++)")
+            sub = "".join(f"[{ix}]" for ix in idx)
+            e("    " * len(dims) + f"cksum_ += {a}{sub} * (1.0 + 0.0001*(({' + '.join(idx) if idx else '0'}) % 17));")
+        e("return cksum_;")
+        self.indent -= 1
+        e("}")
+        e("")
+        e(f"static void {self.func_name}(void) {{")
+        self.indent += 1
+        n_dims = max(ss.n_dims() for ss in self.scan)
+        self._gen_level(list(self.scan), 0, n_dims, {})
+        self.indent -= 1
+        e("}")
+        e("")
+        e(f"#define REPEATS {self.repeats}")
+        e("int main(void) {")
+        self.indent += 1
+        e("init_arrays();")
+        e(f"{self.func_name}();  /* warmup + correctness */")
+        e("double warm = checksum();")
+        e("init_arrays();")
+        e("struct timespec t0, t1;")
+        e("clock_gettime(CLOCK_MONOTONIC, &t0);")
+        e(f"for (int r = 0; r < REPEATS; r++) {self.func_name}();")
+        e("clock_gettime(CLOCK_MONOTONIC, &t1);")
+        e("double secs = (t1.tv_sec - t0.tv_sec) + 1e-9*(t1.tv_nsec - t0.tv_nsec);")
+        e('printf("TIME_S %.9f CHECKSUM %.9e\\n", secs / REPEATS, warm);')
+        e("return 0;")
+        self.indent -= 1
+        e("}")
+        return "\n".join(self.lines)
+
+    # -- loop emission (C syntax + pragmas) ---------------------------------
+    def _gen_loop(self, group, d, n_dims, guards):
+        y = _yvar(d)
+        los, his = [], []
+        for ss in group:
+            lo, hi = self._scanners[ss.stmt.index].bounds[d]
+            los.append(self._bound_c(lo, lower=True))
+            his.append(self._bound_c(hi, lower=False))
+        lo_src = los[0] if len(set(los)) == 1 else _fold("MINI", sorted(set(los)))
+        hi_src = his[0] if len(set(his)) == 1 else _fold("MAXI", sorted(set(his)))
+        mixed = len(group) > 1 and (len(set(los)) > 1 or len(set(his)) > 1)
+        new_guards = dict(guards)
+        if mixed:
+            for ss, l, h in zip(group, los, his):
+                g = list(new_guards.get(ss.stmt.index, []))
+                g += [f"{y} >= {l}", f"{y} <= {h}"]
+                new_guards[ss.stmt.index] = g
+        sd = min(ss.dims[d].sched_dim for ss in group)
+        stmt_set = {ss.stmt.index for ss in group}
+        par = self.sched.stmt_parallel_at_set(stmt_set, sd)
+        innermost = all(self._innermost_linear(ss, d) for ss in group)
+        # omp-parallel only on OUTERMOST loops: a parallel region inside a
+        # hot nest pays fork/join per outer iteration (measured ~60 µs of
+        # constant overhead on trsmL when emitted at depth 2)
+        if (self.omp and par and not self._parallel_emitted and not innermost
+                and self.indent == 1):
+            self._emit("#pragma omp parallel for")
+            self._parallel_emitted = True
+        if self.omp and par and innermost:
+            self._emit("#pragma omp simd")
+            for ss in group:
+                self.vectorized_stmts.add(ss.stmt.index)
+        self._emit(f"for (int {y} = {lo_src}; {y} <= {hi_src}; {y}++) {{")
+        self.indent += 1
+        body_start = len(self.lines)
+        self._gen_level(group, d + 1, n_dims, new_guards)
+        if len(self.lines) == body_start:
+            self._emit(";")
+        self.indent -= 1
+        self._emit("}")
+
+    def _bound_c(self, bounds: List[Affine], lower: bool) -> str:
+        terms = []
+        for e in bounds:
+            body, den = _affine_src(e)
+            terms.append(_ceild_c(body, den) if lower else _floord_c(body, den))
+        uniq = sorted(set(terms))
+        return _fold("MAXI" if lower else "MINI", uniq)
+
+    def _emit_leaf(self, ss, guard_exprs):
+        s = ss.stmt
+        scanner = self._scanners[s.index]
+        sub_src = {}
+        guard_exprs = list(guard_exprs)
+        for it, expr in scanner.subst.items():
+            body, den = _affine_src(expr)
+            if den != 1:
+                sub_src[it] = _floord_c(body, den)
+                guard_exprs.append(f"(({body}) % {den}) == 0")
+            else:
+                sub_src[it] = body
+        body = _c_body(s.body, sub_src)
+        if guard_exprs:
+            self._emit("if (" + " && ".join(guard_exprs) + ") {")
+            self.indent += 1
+            self._emit(body + ";")
+            self.indent -= 1
+            self._emit("}")
+        else:
+            self._emit(body + ";")
+
+
+def _c_body(body: str, sub_src: Dict[str, str]) -> str:
+    """Rewrite ``A[i,j]`` → ``A[(i)][(j)]`` and substitute iterators."""
+    out = []
+    pos = 0
+    for m in _ACCESS.finditer(body):
+        out.append(_substitute_body(body[pos:m.start()], sub_src))
+        arr = m.group(1)
+        subs = _split_subscripts(m.group(2))
+        csubs = "".join(f"[{_substitute_body(t.strip(), sub_src)}]" for t in subs)
+        out.append(f"{arr}{csubs}")
+        pos = m.end()
+    out.append(_substitute_body(body[pos:], sub_src))
+    return "".join(out)

@@ -1,0 +1,225 @@
+"""PolyTOPS configuration interfaces (paper §III-A/B/C).
+
+Two interfaces, mirroring the paper:
+
+* **JSON** (static): ``SchedulerConfig.from_json(dict_or_path)``
+  understands the keys shown in paper Listing 2 —
+  ``scheduling_strategy.new_variables``, ``ILP_construction`` (per-dim
+  ``cost_functions``), ``custom_constraints``, ``fusion``
+  (``scheduling_dimension``/``total_distribution``/``stmts_fusion``),
+  ``directives`` and ``auto_vectorization``.
+* **Python callback** (dynamic, ≙ the paper's C++ dynamic-library
+  interface): a callable invoked before each scheduling iteration with
+  the full scheduler state; it returns the :class:`DimConfig` to use for
+  that dimension (see :func:`isl_style` for the paper's Listing 3).
+
+Predefined strategies: :func:`pluto_style`, :func:`tensor_style`,
+:func:`feautrier_style`, :func:`isl_style`, :func:`bigloops_style`.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+
+@dataclass
+class DimConfig:
+    """ILP construction recipe for one scheduling dimension."""
+    cost_functions: List[str] = field(default_factory=lambda: ["proximity"])
+    constraints: List[str] = field(default_factory=list)
+    require_parallel: bool = False      # isl-style: demand a parallel dim
+
+
+@dataclass
+class FusionSpec:
+    dimension: Union[int, str]           # dim index or 'default'
+    total_distribution: bool = False
+    groups: Optional[List[List[int]]] = None   # explicit statement groups
+
+
+@dataclass
+class Directive:
+    type: str            # 'vectorize' | 'parallel' | 'sequential'
+    stmts: List[int]
+    iterator: Optional[int] = None       # iterator index (depth) in the stmt
+
+
+@dataclass
+class SchedulerConfig:
+    new_variables: List[str] = field(default_factory=list)
+    ilp: Dict[Union[int, str], DimConfig] = field(default_factory=dict)
+    custom_constraints: Dict[Union[int, str], List[str]] = field(default_factory=dict)
+    fusion: List[FusionSpec] = field(default_factory=list)
+    directives: List[Directive] = field(default_factory=list)
+    auto_vectorize: bool = False
+    fusion_mode: str = "smart"           # 'smart' | 'max' | 'no'
+    coeff_bound: int = 4
+    cst_bound: int = 32
+    # paper §IV-C (doitgen): parametric shifting is off by default (as in
+    # Pluto); enabling it allows nonzero parameter coefficients in φ
+    parametric_shift: bool = False
+    # the "C++ interface": called before each iteration; wins over `ilp`
+    strategy: Optional[Callable[[Any], DimConfig]] = None
+    name: str = "custom"
+
+    # -- resolution --------------------------------------------------------
+    def dim_config(self, dim: int, state: Any = None) -> DimConfig:
+        if self.strategy is not None and state is not None:
+            return self.strategy(state)
+        dc = self.ilp.get(dim, self.ilp.get("default", DimConfig()))
+        extra = self.custom_constraints.get(dim, self.custom_constraints.get("default", []))
+        if extra:
+            dc = DimConfig(dc.cost_functions, list(dc.constraints) + list(extra),
+                           dc.require_parallel)
+        return dc
+
+    def fusion_for(self, dim: int) -> Optional[FusionSpec]:
+        for f in self.fusion:
+            if f.dimension == dim:
+                return f
+        for f in self.fusion:
+            if f.dimension == "default":
+                return f
+        return None
+
+    # -- JSON --------------------------------------------------------------
+    @classmethod
+    def from_json(cls, src: Union[str, dict]) -> "SchedulerConfig":
+        if isinstance(src, str):
+            with open(src) as f:
+                data = json.load(f)
+        else:
+            data = src
+        strat = data.get("scheduling_strategy", data)
+        cfg = cls()
+        cfg.new_variables = list(strat.get("new_variables", []))
+        for entry in strat.get("ILP_construction", []):
+            dim = entry.get("scheduling_dimension", "default")
+            cfg.ilp[dim] = DimConfig(
+                cost_functions=list(entry.get("cost_functions", ["proximity"])),
+                constraints=list(entry.get("constraints", [])),
+                require_parallel=bool(entry.get("require_parallel", False)),
+            )
+        for entry in strat.get("custom_constraints", []):
+            dim = entry.get("scheduling_dimension", "default")
+            cfg.custom_constraints.setdefault(dim, []).extend(entry.get("constraints", []))
+        for entry in strat.get("fusion", []):
+            groups = entry.get("stmts_fusion")
+            if groups is not None:
+                groups = [[int(x) for x in g] for g in groups]
+            cfg.fusion.append(
+                FusionSpec(
+                    dimension=entry.get("scheduling_dimension", 0),
+                    total_distribution=bool(entry.get("total_distribution", False)),
+                    groups=groups,
+                )
+            )
+        for entry in strat.get("directives", []):
+            stmts = entry.get("stmts", [])
+            if isinstance(stmts, (str, int)):
+                stmts = [int(stmts)]
+            else:
+                stmts = [int(x) for x in stmts]
+            it = entry.get("iterator")
+            cfg.directives.append(
+                Directive(entry["type"], stmts, None if it is None else int(it))
+            )
+        cfg.auto_vectorize = bool(strat.get("auto_vectorization", False))
+        cfg.fusion_mode = strat.get("fusion_mode", "smart")
+        cfg.coeff_bound = int(strat.get("coeff_bound", 4))
+        cfg.parametric_shift = bool(strat.get("parametric_shift", False))
+        cfg.name = strat.get("name", "json")
+        return cfg
+
+    def to_json(self) -> dict:
+        out: Dict[str, Any] = {"scheduling_strategy": {}}
+        s = out["scheduling_strategy"]
+        if self.new_variables:
+            s["new_variables"] = self.new_variables
+        s["ILP_construction"] = [
+            {
+                "scheduling_dimension": dim,
+                "cost_functions": dc.cost_functions,
+                **({"constraints": dc.constraints} if dc.constraints else {}),
+                **({"require_parallel": True} if dc.require_parallel else {}),
+            }
+            for dim, dc in self.ilp.items()
+        ]
+        if self.fusion:
+            s["fusion"] = [
+                {
+                    "scheduling_dimension": f.dimension,
+                    "total_distribution": f.total_distribution,
+                    **({"stmts_fusion": f.groups} if f.groups else {}),
+                }
+                for f in self.fusion
+            ]
+        if self.directives:
+            s["directives"] = [
+                {"type": d.type, "stmts": d.stmts, "iterator": d.iterator}
+                for d in self.directives
+            ]
+        if self.auto_vectorize:
+            s["auto_vectorization"] = True
+        s["fusion_mode"] = self.fusion_mode
+        s["name"] = self.name
+        return out
+
+
+# ---------------------------------------------------------------------------
+# predefined strategies (paper §IV: pluto-style, tensor-scheduler-style,
+# isl-style, feautrier-style, bigLoopsFirst)
+# ---------------------------------------------------------------------------
+
+def pluto_style(**kw) -> SchedulerConfig:
+    cfg = SchedulerConfig(name="pluto-style", **kw)
+    cfg.ilp["default"] = DimConfig(cost_functions=["proximity"])
+    return cfg
+
+
+def tensor_style(**kw) -> SchedulerConfig:
+    """contiguity first, proximity second, no skewing (paper Listing 5)."""
+    cfg = SchedulerConfig(name="tensor-style", **kw)
+    cfg.ilp["default"] = DimConfig(
+        cost_functions=["contiguity", "proximity"], constraints=["no-skewing"]
+    )
+    return cfg
+
+
+def feautrier_style(**kw) -> SchedulerConfig:
+    cfg = SchedulerConfig(name="feautrier-style", **kw)
+    cfg.ilp["default"] = DimConfig(cost_functions=["feautrier"])
+    return cfg
+
+
+def bigloops_style(**kw) -> SchedulerConfig:
+    cfg = SchedulerConfig(name="bigloops-style", **kw)
+    cfg.ilp["default"] = DimConfig(cost_functions=["bigLoopsFirst", "proximity"])
+    return cfg
+
+
+def isl_style(**kw) -> SchedulerConfig:
+    """Paper Listing 3: Pluto-style by default; when proximity fails to
+    extract parallelism at the start of a band, recompute the dimension
+    with the Feautrier cost function (dynamic strategy — this is the
+    Python analogue of the C++ configuration interface)."""
+
+    def strategy(state) -> DimConfig:
+        if state.parallel_failed:
+            return DimConfig(cost_functions=["feautrier"])
+        if state.band_start:
+            return DimConfig(cost_functions=["proximity"], require_parallel=True)
+        return DimConfig(cost_functions=["proximity"])
+
+    cfg = SchedulerConfig(name="isl-style", strategy=strategy, **kw)
+    return cfg
+
+
+STRATEGIES: Dict[str, Callable[..., SchedulerConfig]] = {
+    "pluto": pluto_style,
+    "tensor": tensor_style,
+    "feautrier": feautrier_style,
+    "isl": isl_style,
+    "bigloops": bigloops_style,
+}

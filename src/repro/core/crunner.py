@@ -1,0 +1,59 @@
+"""Compile-and-run harness for the C backend, with on-disk caching."""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import tempfile
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional, Tuple
+
+CACHE_DIR = Path(os.environ.get("POLYTOPS_CC_CACHE", "/tmp/polytops_cc_cache"))
+CFLAGS = ["-O3", "-march=native", "-fopenmp", "-lm"]
+
+
+@dataclass
+class RunResult:
+    seconds: float
+    checksum: float
+    cached: bool = False
+
+
+MAX_SOURCE_BYTES = 400_000      # FM blowups produce pathological sources
+GCC_MEM_KB = 6 * 1024 * 1024    # cap cc1 at 6 GB (observed 36 GB OOM on
+                                # a wavefront-tiled 3D stencil at -O3)
+
+
+def compile_and_run(source: str, tag: str = "kernel", timeout: int = 600,
+                    use_cache: bool = True) -> RunResult:
+    key = hashlib.sha256((source + " ".join(CFLAGS)).encode()).hexdigest()[:24]
+    CACHE_DIR.mkdir(parents=True, exist_ok=True)
+    cache_file = CACHE_DIR / f"{key}.json"
+    if use_cache and cache_file.exists():
+        data = json.loads(cache_file.read_text())
+        return RunResult(data["seconds"], data["checksum"], cached=True)
+    if len(source) > MAX_SOURCE_BYTES:
+        raise RuntimeError(
+            f"generated source too large for {tag} "
+            f"({len(source)} B > {MAX_SOURCE_BYTES}) — codegen blowup")
+    with tempfile.TemporaryDirectory(prefix="polytops_cc_") as td:
+        csrc = Path(td) / f"{tag}.c"
+        exe = Path(td) / tag
+        csrc.write_text(source)
+        gcc_cmd = " ".join(["gcc", str(csrc), "-o", str(exe)] + CFLAGS)
+        cp = subprocess.run(
+            ["bash", "-c", f"ulimit -v {GCC_MEM_KB}; exec {gcc_cmd}"],
+            capture_output=True, text=True, timeout=timeout,
+        )
+        if cp.returncode != 0:
+            raise RuntimeError(f"gcc failed for {tag}:\n{cp.stderr[:4000]}\n--- source ---\n{source[:4000]}")
+        rp = subprocess.run([str(exe)], capture_output=True, text=True, timeout=timeout)
+        if rp.returncode != 0:
+            raise RuntimeError(f"run failed for {tag}: {rp.stderr[:2000]}")
+        out = rp.stdout.strip().split()
+        seconds = float(out[out.index("TIME_S") + 1])
+        checksum = float(out[out.index("CHECKSUM") + 1])
+    cache_file.write_text(json.dumps({"seconds": seconds, "checksum": checksum}))
+    return RunResult(seconds, checksum)

@@ -1,0 +1,67 @@
+"""Farkas-lemma linearization (paper §II-B2).
+
+Given a polyhedron P = {z | A z + b ≥ 0 (+ equalities)} and an affine
+form f(z) whose coefficients are themselves affine expressions over ILP
+variables (schedule coefficients T, bounding coefficients u/w, ...), the
+affine form of Farkas' lemma states:
+
+    f(z) ≥ 0  ∀ z ∈ P   ⟺   f ≡ λ₀ + Σᵢ λᵢ (Aᵢ z + bᵢ),  λ₀, λᵢ ≥ 0
+
+(multipliers of equality rows are sign-free). Equating coefficients of
+each z variable and the constant yields *equality* constraints linking
+the fresh multipliers λ to the ILP variables — exactly what
+:class:`repro.core.ilp.ILPProblem` consumes.
+"""
+from __future__ import annotations
+
+import itertools
+from fractions import Fraction
+from typing import Dict, List, Sequence, Tuple
+
+from .affine import Affine
+from .ilp import ILPProblem
+from .polyhedron import Constraint
+
+_counter = itertools.count()
+
+
+def add_farkas_nonneg(
+    prob: ILPProblem,
+    poly: Sequence[Constraint],
+    coef_of_z: Dict[str, Affine],
+    const_term: Affine,
+    tag: str = "",
+) -> None:
+    """Add constraints enforcing  f(z) = Σ_z coef_of_z[z]·z + const ≥ 0
+    over ``poly``. coef_of_z / const_term are affine over ILP vars.
+    """
+    uid = next(_counter)
+    lam0 = prob.var(f"l{uid}_0{tag}", lb=0, integer=False)
+    lams: List[Tuple[str, Constraint]] = []
+    for i, (expr, kind) in enumerate(poly):
+        name = f"l{uid}_{i + 1}{tag}"
+        prob.var(name, lb=0 if kind == ">=0" else None, integer=False)
+        lams.append((name, (expr, kind)))
+
+    zvars = set()
+    for expr, _ in poly:
+        zvars.update(k for k in expr if k != 1)
+    zvars.update(coef_of_z)
+
+    # coefficient of each z variable: coef_of_z[z] − Σ λᵢ Aᵢ[z] == 0
+    for z in sorted(zvars):
+        eq: Affine = dict(coef_of_z.get(z, {}))
+        for name, (expr, _) in lams:
+            c = expr.get(z, Fraction(0))
+            if c:
+                eq[name] = eq.get(name, Fraction(0)) - c
+        if eq:
+            prob.add(eq, "==0")
+    # constant: const_term − λ₀ − Σ λᵢ bᵢ == 0
+    eq = dict(const_term)
+    eq[lam0] = eq.get(lam0, Fraction(0)) - 1
+    for name, (expr, _) in lams:
+        c = expr.get(1, Fraction(0))
+        if c:
+            eq[name] = eq.get(name, Fraction(0)) - c
+    prob.add(eq, "==0")

@@ -1,0 +1,411 @@
+"""(I)LP solving for the scheduler.
+
+Two engines:
+
+* ``HiGHSEngine`` — scipy.optimize.linprog(method='highs') with the
+  ``integrality`` vector: a real branch-and-cut MILP solver. Primary.
+* ``ExactEngine`` — two-phase exact-rational simplex (Bland's rule) +
+  branch & bound on integer variables. Dependency-free, exact; used as
+  fallback and as a cross-check oracle in tests.
+
+Both are wrapped by :class:`ILPProblem`, which exposes the lexicographic
+multi-objective minimization the paper relies on (Section III-A1: cost
+functions are "minimized in lexicographic order").
+
+All problem data is rational; solutions are returned as Fractions with
+integer variables snapped exactly.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Union
+
+from .affine import Affine
+
+INF = float("inf")
+
+
+@dataclass
+class _Var:
+    name: str
+    lb: Optional[Fraction]
+    ub: Optional[Fraction]
+    integer: bool
+
+
+class ILPProblem:
+    """An ILP over named variables with affine constraints.
+
+    Constraints are Affine dicts ({var: coeff, 1: const}) with kind
+    '>=0' or '==0'.
+    """
+
+    def __init__(self, engine: str = "highs"):
+        self.vars: Dict[str, _Var] = {}
+        self.cons: List[tuple[Affine, str]] = []
+        self.engine = engine
+
+    # -- model building ---------------------------------------------------
+    def var(self, name: str, lb=0, ub=None, integer: bool = True) -> str:
+        if name in self.vars:
+            raise ValueError(f"duplicate var {name}")
+        self.vars[name] = _Var(
+            name,
+            None if lb is None else Fraction(lb),
+            None if ub is None else Fraction(ub),
+            integer,
+        )
+        return name
+
+    def ensure_var(self, name: str, lb=0, ub=None, integer: bool = True) -> str:
+        if name not in self.vars:
+            self.var(name, lb, ub, integer)
+        return name
+
+    def add(self, expr: Affine, kind: str = ">=0") -> None:
+        assert kind in (">=0", "==0"), kind
+        for k in expr:
+            if k != 1 and k not in self.vars:
+                raise KeyError(f"unknown var {k!r} in constraint")
+        self.cons.append((dict(expr), kind))
+
+    def clone(self) -> "ILPProblem":
+        p = ILPProblem(self.engine)
+        p.vars = {k: _Var(v.name, v.lb, v.ub, v.integer) for k, v in self.vars.items()}
+        p.cons = [(dict(e), k) for e, k in self.cons]
+        return p
+
+    # -- solving -----------------------------------------------------------
+    def _order(self) -> List[str]:
+        return list(self.vars)
+
+    def solve_min(self, objective: Affine) -> Optional[tuple[Fraction, Dict[str, Fraction]]]:
+        """Minimize one objective. Returns (value, solution) or None if
+        infeasible. Raises Unbounded if unbounded."""
+        if self.engine == "exact":
+            return _exact_solve(self, objective)
+        return _highs_solve(self, objective)
+
+    def lexmin(self, objectives: Sequence[Affine]) -> Optional[Dict[str, Fraction]]:
+        """Lexicographic minimization: minimize objectives[0], fix its
+        value, then objectives[1], ... Returns the final solution."""
+        prob = self.clone()
+        sol: Optional[Dict[str, Fraction]] = None
+        if not objectives:
+            objectives = [{}]
+        for i, obj in enumerate(objectives):
+            res = prob.solve_min(obj)
+            if res is None:
+                return None
+            val, sol = res
+            # fix this objective at its optimum before the next stage
+            fixed = dict(obj)
+            fixed[1] = fixed.get(1, Fraction(0)) - val
+            prob.add(fixed, "==0")
+        return sol
+
+    def feasible(self) -> bool:
+        return self.solve_min({}) is not None
+
+
+class Unbounded(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# HiGHS engine (scipy)
+# ---------------------------------------------------------------------------
+
+def _highs_solve(prob: ILPProblem, objective: Affine):
+    import numpy as np
+    from scipy.optimize import linprog
+
+    names = prob._order()
+    idx = {n: i for i, n in enumerate(names)}
+    n = len(names)
+    c = np.zeros(n)
+    for k, v in objective.items():
+        if k != 1:
+            c[idx[k]] = float(v)
+    a_ub, b_ub, a_eq, b_eq = [], [], [], []
+    for expr, kind in prob.cons:
+        row = np.zeros(n)
+        for k, v in expr.items():
+            if k != 1:
+                row[idx[k]] = float(v)
+        const = float(expr.get(1, 0))
+        if kind == ">=0":  # row·x + const >= 0  →  -row·x <= const
+            a_ub.append(-row)
+            b_ub.append(const)
+        else:
+            a_eq.append(row)
+            b_eq.append(-const)
+    bounds = []
+    integrality = np.zeros(n)
+    for i, name in enumerate(names):
+        v = prob.vars[name]
+        bounds.append(
+            (None if v.lb is None else float(v.lb), None if v.ub is None else float(v.ub))
+        )
+        integrality[i] = 1 if v.integer else 0
+    res = linprog(
+        c,
+        A_ub=np.array(a_ub) if a_ub else None,
+        b_ub=np.array(b_ub) if b_ub else None,
+        A_eq=np.array(a_eq) if a_eq else None,
+        b_eq=np.array(b_eq) if b_eq else None,
+        bounds=bounds,
+        integrality=integrality if integrality.any() else None,
+        method="highs",
+    )
+    if res.status == 2:  # infeasible
+        return None
+    if res.status == 3:
+        raise Unbounded(str(objective))
+    if not res.success:
+        # numerical trouble: retry with exact engine
+        return _exact_solve(prob, objective)
+    sol: Dict[str, Fraction] = {}
+    for i, name in enumerate(names):
+        x = res.x[i]
+        if prob.vars[name].integer:
+            sol[name] = Fraction(round(x))
+        else:
+            sol[name] = Fraction(x).limit_denominator(10**9)
+    val = Fraction(0)
+    for k, v in objective.items():
+        val += v if k == 1 else v * sol[k]
+    return val, sol
+
+
+# ---------------------------------------------------------------------------
+# Exact engine: two-phase rational simplex + branch & bound
+# ---------------------------------------------------------------------------
+
+def _exact_solve(prob: ILPProblem, objective: Affine):
+    names = prob._order()
+    return _branch_and_bound(prob, names, objective, [])
+
+
+def _branch_and_bound(prob, names, objective, extra):
+    lp = _ExactLP.from_problem(prob, names, objective, extra)
+    r = lp.solve()
+    if r is None:
+        return None
+    val, sol = r
+    # find fractional integer var
+    frac_var = None
+    for name in names:
+        if prob.vars[name].integer and sol[name].denominator != 1:
+            frac_var = name
+            break
+    if frac_var is None:
+        return val, sol
+    x = sol[frac_var]
+    floor_v = x.numerator // x.denominator
+    best = None
+    for lo_hi in ("le", "ge"):
+        if lo_hi == "le":
+            con = ({frac_var: Fraction(-1), 1: Fraction(floor_v)}, ">=0")
+        else:
+            con = ({frac_var: Fraction(1), 1: Fraction(-(floor_v + 1))}, ">=0")
+        sub = _branch_and_bound(prob, names, objective, extra + [con])
+        if sub is not None and (best is None or sub[0] < best[0]):
+            best = sub
+    return best
+
+
+class _ExactLP:
+    """min c·x s.t. Ax = b, x >= 0 — two-phase simplex, Bland's rule.
+
+    General bounds/frees are handled by shifting and splitting at
+    construction time.
+    """
+
+    def __init__(self, a: List[List[Fraction]], b: List[Fraction], c: List[Fraction]):
+        self.a, self.b, self.c = a, b, c
+
+    @classmethod
+    def from_problem(cls, prob: ILPProblem, names, objective, extra=()):  # noqa: C901
+        # variable mapping: each model var -> expression over nonneg simplex vars
+        cols: List[str] = []          # simplex column names
+        expr_of: Dict[str, Dict[str, Fraction]] = {}  # model var -> {col: coeff} + const
+        const_of: Dict[str, Fraction] = {}
+        for name in names:
+            v = prob.vars[name]
+            if v.lb is not None:
+                col = f"x:{name}"
+                cols.append(col)
+                expr_of[name] = {col: Fraction(1)}
+                const_of[name] = v.lb
+            else:
+                cp, cn = f"xp:{name}", f"xn:{name}"
+                cols.extend([cp, cn])
+                expr_of[name] = {cp: Fraction(1), cn: Fraction(-1)}
+                const_of[name] = Fraction(0)
+        rows: List[tuple[Dict[str, Fraction], str, Fraction]] = []
+
+        def add_row(expr: Affine, kind: str):
+            row: Dict[str, Fraction] = {}
+            const = expr.get(1, Fraction(0))
+            for k, coef in expr.items():
+                if k == 1:
+                    continue
+                const += coef * const_of[k]
+                for col, cc in expr_of[k].items():
+                    row[col] = row.get(col, Fraction(0)) + coef * cc
+            rows.append((row, kind, const))
+
+        for expr, kind in list(prob.cons) + list(extra):
+            add_row(expr, kind)
+        for name in names:
+            v = prob.vars[name]
+            if v.ub is not None:
+                add_row({name: Fraction(-1), 1: v.ub}, ">=0")
+
+        # to standard form Ax = b, x >= 0 with slacks
+        ncols = {c: i for i, c in enumerate(cols)}
+        nslack = sum(1 for _, kind, _ in rows if kind == ">=0")
+        width = len(cols) + nslack
+        a: List[List[Fraction]] = []
+        b: List[Fraction] = []
+        slack_i = 0
+        for row, kind, const in rows:
+            r = [Fraction(0)] * width
+            for col, cc in row.items():
+                r[ncols[col]] = cc
+            if kind == ">=0":  # r·x + const >= 0 → r·x - s = -const
+                r[len(cols) + slack_i] = Fraction(-1)
+                slack_i += 1
+            a.append(r)
+            b.append(-const)
+        # objective over simplex columns
+        c_vec = [Fraction(0)] * width
+        obj_const = objective.get(1, Fraction(0))
+        for k, coef in objective.items():
+            if k == 1:
+                continue
+            obj_const += coef * const_of[k]
+            for col, cc in expr_of[k].items():
+                c_vec[ncols[col]] += coef * cc
+        lp = cls(a, b, c_vec)
+        lp._cols = cols
+        lp._width = width
+        lp._expr_of = expr_of
+        lp._const_of = const_of
+        lp._names = names
+        lp._obj_const = obj_const
+        lp._prob = prob
+        return lp
+
+    def solve(self):
+        a = [row[:] for row in self.a]
+        b = self.b[:]
+        m = len(a)
+        if m == 0:
+            names = self._names
+            sol = {n: self._const_of[n] for n in names}
+            return self._obj_const, sol
+        width = len(a[0])
+        # make b >= 0
+        for i in range(m):
+            if b[i] < 0:
+                a[i] = [-x for x in a[i]]
+                b[i] = -b[i]
+        # phase 1: artificials
+        for i in range(m):
+            for j in range(m):
+                a[i].append(Fraction(1) if i == j else Fraction(0))
+        basis = list(range(width, width + m))
+        cost1 = [Fraction(0)] * width + [Fraction(1)] * m
+        val = self._simplex(a, b, cost1, basis)
+        if val is None or val > 0:
+            return None
+        # drive artificials out of basis if possible
+        for i in range(m):
+            if basis[i] >= width:
+                piv = None
+                for j in range(width):
+                    if a[i][j] != 0:
+                        piv = j
+                        break
+                if piv is not None:
+                    self._pivot(a, b, basis, i, piv)
+        # drop artificial columns & redundant rows
+        keep = [i for i in range(m) if basis[i] < width]
+        a = [a[i][:width] for i in keep]
+        b = [b[i] for i in keep]
+        basis = [basis[i] for i in keep]
+        cost2 = self.c[:width]
+        val = self._simplex(a, b, cost2, basis)
+        if val is None:
+            raise Unbounded("exact LP unbounded")
+        x = [Fraction(0)] * width
+        for i, bi in enumerate(basis):
+            x[bi] = b[i]
+        sol: Dict[str, Fraction] = {}
+        ncols = {c: i for i, c in enumerate(self._cols)}
+        for name in self._names:
+            v = self._const_of[name]
+            for col, cc in self._expr_of[name].items():
+                v += cc * x[ncols[col]]
+            sol[name] = v
+        obj = Fraction(0)
+        for i in range(min(width, len(self.c))):
+            obj += self.c[i] * x[i]
+        return obj + self._obj_const, sol
+
+    @staticmethod
+    def _pivot(a, b, basis, r, c):
+        m, n = len(a), len(a[0])
+        pv = a[r][c]
+        a[r] = [x / pv for x in a[r]]
+        b[r] = b[r] / pv
+        for i in range(m):
+            if i != r and a[i][c] != 0:
+                f = a[i][c]
+                a[i] = [x - f * y for x, y in zip(a[i], a[r])]
+                b[i] = b[i] - f * b[r]
+        basis[r] = c
+
+    @classmethod
+    def _simplex(cls, a, b, cost, basis):
+        """Min cost·x. Returns objective value, or None if unbounded is
+        signalled via exception by caller convention (phase2)."""
+        m = len(a)
+        n = len(a[0]) if m else 0
+        while True:
+            # reduced costs: z_j - c_j
+            y = {}
+            red = [Fraction(0)] * n
+            cb = [cost[basis[i]] if basis[i] < len(cost) else Fraction(0) for i in range(m)]
+            for j in range(n):
+                zj = Fraction(0)
+                for i in range(m):
+                    if a[i][j] != 0 and cb[i] != 0:
+                        zj += cb[i] * a[i][j]
+                red[j] = (cost[j] if j < len(cost) else Fraction(0)) - zj
+            enter = None
+            for j in range(n):  # Bland: first negative reduced cost
+                if red[j] < 0 and j not in basis:
+                    enter = j
+                    break
+            if enter is None:
+                val = Fraction(0)
+                for i in range(m):
+                    val += cb[i] * b[i]
+                return val
+            # ratio test (Bland: smallest index on ties)
+            leave = None
+            best = None
+            for i in range(m):
+                if a[i][enter] > 0:
+                    ratio = b[i] / a[i][enter]
+                    if best is None or ratio < best or (ratio == best and basis[i] < basis[leave]):
+                        best = ratio
+                        leave = i
+            if leave is None:
+                return None  # unbounded
+            cls._pivot(a, b, basis, leave, enter)

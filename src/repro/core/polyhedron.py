@@ -1,0 +1,169 @@
+"""Polyhedron helpers: feasibility, affine optimization, Fourier–Motzkin.
+
+A polyhedron is a list of (Affine, kind) constraints over named
+variables, kind in {'>=0', '==0'}. Variables not mentioned in ``free``
+are unbounded rationals. Feasibility and optimization go through the LP
+layer (rational relaxation — conservative for dependence analysis, see
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .affine import Affine, affine_scale, affine_sub
+from .ilp import ILPProblem, Unbounded
+
+Constraint = Tuple[Affine, str]
+
+
+def _vars_of(cons: Sequence[Constraint]) -> List[str]:
+    seen: List[str] = []
+    for expr, _ in cons:
+        for k in expr:
+            if k != 1 and k not in seen:
+                seen.append(k)
+    return seen
+
+
+def _build_lp(cons: Sequence[Constraint], extra_vars: Iterable[str] = ()) -> ILPProblem:
+    p = ILPProblem()
+    for v in list(_vars_of(cons)) + list(extra_vars):
+        p.ensure_var(v, lb=None, integer=False)
+    for expr, kind in cons:
+        p.add(expr, kind)
+    return p
+
+
+def feasible(cons: Sequence[Constraint]) -> bool:
+    """Rational feasibility (conservative over integer feasibility)."""
+    return _build_lp(cons).feasible()
+
+
+def minimum(cons: Sequence[Constraint], obj: Affine) -> Optional[Fraction]:
+    """Rational min of obj over the polyhedron.
+
+    Returns None if empty, -inf (float) if unbounded below.
+    """
+    p = _build_lp(cons, [k for k in obj if k != 1])
+    try:
+        r = p.solve_min({k: v for k, v in obj.items()})
+    except Unbounded:
+        return Fraction(-(10 ** 18))  # sentinel: unbounded below
+    if r is None:
+        return None
+    return r[0]
+
+
+def maximum(cons: Sequence[Constraint], obj: Affine) -> Optional[Fraction]:
+    m = minimum(cons, {k: -v for k, v in obj.items()})
+    if m is None:
+        return None
+    return -m
+
+
+# ---------------------------------------------------------------------------
+# Fourier–Motzkin elimination (used by codegen to derive loop bounds)
+# ---------------------------------------------------------------------------
+
+def fm_eliminate(cons: Sequence[Constraint], var: str) -> List[Constraint]:
+    """Eliminate ``var`` from the system by Fourier–Motzkin.
+
+    Equalities involving var are used as substitutions first.
+    The result is the projection (rational); redundant rows are pruned
+    cheaply (exact duplicates + trivially-true rows).
+    """
+    cons = [(dict(e), k) for e, k in cons]
+    # substitution via an equality if available
+    for i, (expr, kind) in enumerate(cons):
+        if kind == "==0" and expr.get(var):
+            c = expr[var]
+            # var = -(expr - c*var)/c
+            rest = {k: v for k, v in expr.items() if k != var}
+            sub = affine_scale(rest, Fraction(-1) / c)
+            out: List[Constraint] = []
+            for j, (e2, k2) in enumerate(cons):
+                if j == i:
+                    continue
+                if e2.get(var):
+                    coef = e2[var]
+                    e3 = {k: v for k, v in e2.items() if k != var}
+                    for k3, v3 in sub.items():
+                        e3[k3] = e3.get(k3, Fraction(0)) + coef * v3
+                    e3 = {k: v for k, v in e3.items() if v != 0}
+                    out.append((e3, k2))
+                else:
+                    out.append((e2, k2))
+            return _prune(out)
+    lowers, uppers, rest = [], [], []
+    for expr, kind in cons:
+        c = expr.get(var, Fraction(0))
+        if kind == "==0" or c == 0:
+            if c == 0:
+                rest.append((expr, kind))
+            continue
+        if c > 0:
+            lowers.append((expr, c))   # c*var + rest >= 0  →  var >= -rest/c
+        else:
+            uppers.append((expr, c))   # c*var + rest >= 0  →  var <= rest/(-c)
+    out = list(rest)
+    for le, lc in lowers:
+        for ue, uc in uppers:
+            # combine: (-uc)*le + lc*ue  eliminates var
+            comb: Affine = {}
+            for k, v in le.items():
+                comb[k] = comb.get(k, Fraction(0)) + (-uc) * v
+            for k, v in ue.items():
+                comb[k] = comb.get(k, Fraction(0)) + lc * v
+            comb.pop(var, None)
+            comb = {k: v for k, v in comb.items() if v != 0}
+            out.append((comb, ">=0"))
+    return _prune(out)
+
+
+def _prune(cons: List[Constraint]) -> List[Constraint]:
+    out: List[Constraint] = []
+    seen = set()
+    for expr, kind in cons:
+        expr = {k: v for k, v in expr.items() if v != 0}
+        nonconst = {k: v for k, v in expr.items() if k != 1}
+        if not nonconst:
+            c = expr.get(1, Fraction(0))
+            if (kind == ">=0" and c >= 0) or (kind == "==0" and c == 0):
+                continue  # trivially true
+            # trivially false → keep to signal emptiness
+            out.append((expr, kind))
+            continue
+        key = (kind, tuple(sorted(((str(k), v) for k, v in expr.items()))))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((expr, kind))
+    return out
+
+
+def bounds_of(cons: Sequence[Constraint], var: str, inner: Sequence[str]):
+    """Return (lower_exprs, upper_exprs) for var after eliminating the
+    ``inner`` variables. Bounds are affine in the remaining variables:
+    lower:  var >= ceil(expr) ;  upper:  var <= floor(expr)
+    Each returned as (affine_over_outer, denominator) with
+    var >= expr/denom (lower) etc.
+    """
+    sys = list(cons)
+    for v in inner:
+        sys = fm_eliminate(sys, v)
+    lowers, uppers = [], []
+    for expr, kind in sys:
+        c = expr.get(var, Fraction(0))
+        kinds = [kind] if kind == ">=0" else [">=0", "<=0"]
+        for kk in kinds:
+            e = expr if kk == ">=0" else {k: -v for k, v in expr.items()}
+            cc = e.get(var, Fraction(0))
+            if cc == 0:
+                continue
+            rest = {k: -v / cc for k, v in e.items() if k != var}
+            if cc > 0:
+                lowers.append(rest)   # var >= rest
+            else:
+                uppers.append(rest)   # var <= rest
+    return lowers, uppers

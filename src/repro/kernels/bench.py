@@ -1,0 +1,54 @@
+"""Pallas kernel microbenchmarks.
+
+On this CPU container the kernels execute in interpret mode, so absolute
+times are NOT TPU times — the CSV reports (a) interpret-mode sanity
+timings, (b) the PolyTOPS plan for each kernel (the actual deliverable:
+grid order/tiles), and (c) the XLA-reference timing for context.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..core.akg import plan_attention, plan_matmul
+from . import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(out=sys.stdout):
+    print("kernel,us_per_call,plan", file=out)
+    r = jax.random.PRNGKey(0)
+    for m, n, k in [(256, 256, 256), (512, 512, 512)]:
+        a = jax.random.normal(r, (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(r, 1), (k, n), jnp.float32)
+        plan = plan_matmul(m, n, k)
+        t_i = _time(lambda x, y: ops.matmul(x, y), a, b, reps=1)
+        t_x = _time(lambda x, y: ref.matmul_ref(x, y), a, b)
+        print(f"matmul_{m}x{n}x{k}_interpret,{t_i:.1f},"
+              f"order={'>'.join(plan.loop_order)} tiles={plan.tile}", file=out)
+        print(f"matmul_{m}x{n}x{k}_xla_ref,{t_x:.1f},-", file=out)
+    b_, s, h, d = 1, 512, 4, 64
+    q = jax.random.normal(r, (b_, s, h, d), jnp.float32) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(r, 2), (b_, s, h, d), jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(r, 3), (b_, s, h, d), jnp.float32)
+    plan = plan_attention(s, s, d)
+    t_i = _time(lambda *x: ops.flash_attention(*x), q, kk, v, reps=1)
+    print(f"flash_attn_{s}_interpret,{t_i:.1f},"
+          f"bq={plan.tile['q']} bk={plan.tile['kk']} lanes={plan.vector_iter}",
+          file=out)
+    a_bar = jax.nn.sigmoid(jax.random.normal(r, (1, 128, 256, 16))) * 0.9
+    b_bar = jax.random.normal(jax.random.fold_in(r, 4), (1, 128, 256, 16)) * 0.1
+    c = jax.random.normal(jax.random.fold_in(r, 5), (1, 128, 16))
+    t_i = _time(lambda *x: ops.selective_scan(*x), a_bar, b_bar, c, reps=1)
+    print(f"mamba_scan_128_interpret,{t_i:.1f},state-in-VMEM chunked", file=out)

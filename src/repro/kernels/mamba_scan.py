@@ -1,0 +1,64 @@
+"""Selective-scan (Mamba-1 recurrence) Pallas kernel.
+
+h_t = a_t ⊙ h_{t-1} + b_t over the sequence, with the hidden state
+(d_block × state) resident in VMEM scratch across sequence chunks:
+grid = (batch, d_blocks, seq_chunks), the chunk axis minormost. Inside a
+chunk the recurrence runs as a fori_loop (sequential in time, vector
+across the d_block lanes — the TPU-native layout for this kernel: state
+dim broadcast over lanes, time sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int, n_chunks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)        # (bd, st)
+        b_t = b_ref[0, t].astype(jnp.float32)        # (bd, st)
+        c_t = c_ref[0, t].astype(jnp.float32)        # (st,)
+        h = a_t * h + b_t
+        o_ref[0, t] = (h @ c_t).astype(o_ref.dtype)  # (bd,)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def selective_scan(a_bar: jnp.ndarray, b_bar: jnp.ndarray, c: jnp.ndarray,
+                   d_block: int = 512, chunk: int = 128,
+                   interpret: bool = True) -> jnp.ndarray:
+    """a_bar, b_bar: (batch, seq, d_inner, state); c: (batch, seq, state).
+    Returns y: (batch, seq, d_inner) = Σ_n h[., ., d, n]·c[., ., n]."""
+    bsz, seq, di, st = a_bar.shape
+    d_block = min(d_block, di)
+    while di % d_block:
+        d_block //= 2
+    chunk = min(chunk, seq)
+    while seq % chunk:
+        chunk //= 2
+    n_chunks = seq // chunk
+    grid = (bsz, di // d_block, n_chunks)
+    # layout: (b, seq, d, st) blocks of (1, chunk, d_block, st)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block, st), lambda b, dblk, t: (b, t, dblk, 0)),
+            pl.BlockSpec((1, chunk, d_block, st), lambda b, dblk, t: (b, t, dblk, 0)),
+            pl.BlockSpec((1, chunk, st), lambda b, dblk, t: (b, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_block), lambda b, dblk, t: (b, t, dblk)),
+        out_shape=jax.ShapeDtypeStruct((bsz, seq, di), a_bar.dtype),
+        scratch_shapes=[pltpu.VMEM((d_block, st), jnp.float32)],
+        interpret=interpret,
+    )(a_bar, b_bar, c)
+    return out

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (the
+kernels target TPU; interpret mode executes the kernel bodies in Python
+for correctness validation). On TPU set REPRO_PALLAS_COMPILE=1.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import mamba_scan as _ms
+from . import matmul_polytops as _mm
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def matmul(a, b, interpret: bool = INTERPRET):
+    return _mm.matmul(a, b, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = INTERPRET):
+    """q: (b, s, h, d); k/v: (b, s, hkv, d) — GQA repeats kv heads."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, interpret=interpret)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def selective_scan(a_bar, b_bar, c, interpret: bool = INTERPRET):
+    return _ms.selective_scan(a_bar, b_bar, c, interpret=interpret)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q, k, v: (bh, seq, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(a_bar: jnp.ndarray, b_bar: jnp.ndarray,
+                       c: jnp.ndarray) -> jnp.ndarray:
+    """Associative-scan reference for the Mamba recurrence."""
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    a32 = a_bar.astype(jnp.float32)
+    b32 = b_bar.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
+    return y.astype(a_bar.dtype)

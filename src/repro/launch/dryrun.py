@@ -1,0 +1,418 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including jax):
+# jax locks the device count at first initialization.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces:
+  * compiled.memory_analysis()  — bytes per device (fits-on-chip proof)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective byte counts      — parsed from the optimized HLO text
+and writes artifacts/dryrun/<arch>__<shape>__<mesh>.json consumed by
+benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                                get_arch, runnable_cells)
+from ..model import transformer as T
+from ..model.sharding import (clear_logical_rules, clear_param_handlers,
+                              set_logical_rules, set_moe_groups,
+                              set_param_handlers)
+from ..optim import adamw
+from ..train import steps as STEPS
+from . import mesh as M
+from .roofline import collective_bytes_from_hlo, roofline_terms
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# §Perf variants: module-level model knobs applied around lowering.
+# 'baseline' is the paper-faithful configuration recorded first.
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    "chunked_attn": {"attn_chunk": 512},
+    "chunked_attn_256": {"attn_chunk": 256},
+    "remat_dots": {"remat": "dots"},
+    "chunked_remat_dots": {"attn_chunk": 512, "remat": "dots"},
+    "no_remat": {"remat": "none"},
+    # serving: drop tensor-parallel sharding (params replicated, DP only)
+    # — removes the per-layer all-reduce chain for tiny per-token compute
+    "tp_off": {"tp_off": True},
+    "tp_off_chunked": {"tp_off": True, "attn_chunk": 512},
+    # decode: one-hot embed = local shard matmul + tiny AR instead of
+    # all-gathering the whole vocab-sharded table per step
+    "onehot_embed": {"embed_mode": "onehot"},
+    # decode: keep TP but drop FSDP — weights stay resident (sharded
+    # 1/16 on 'model'), no per-layer data-axis all-gather per token step
+    "no_fsdp": {"fsdp_off": True},
+    "no_fsdp_onehot": {"fsdp_off": True, "embed_mode": "onehot"},
+    # train: fewer microbatches → fewer FSDP param re-gathers
+    "micro_half": {"n_micro_div": 2},
+    "micro_quarter": {"n_micro_div": 4},
+}
+
+
+class _variant_ctx:
+    def __init__(self, name: str):
+        self.knobs = VARIANTS[name]
+
+    def __enter__(self):
+        from ..model import attention as A
+        from ..model import layers as L
+        from ..model import transformer as TMOD
+        self.prev = (A.ATTN_CHUNK, TMOD.REMAT, L.EMBED_MODE)
+        A.ATTN_CHUNK = self.knobs.get("attn_chunk", 0)
+        TMOD.REMAT = self.knobs.get("remat", "full")
+        L.EMBED_MODE = self.knobs.get("embed_mode", "take")
+        return self
+
+    def __exit__(self, *exc):
+        from ..model import attention as A
+        from ..model import layers as L
+        from ..model import transformer as TMOD
+        A.ATTN_CHUNK, TMOD.REMAT, L.EMBED_MODE = self.prev
+        return False
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+    gb, seq = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        text_len = seq - (cfg.frontend_len if cfg.family == "vlm" else 0)
+        batch = {
+            "tokens": sds((gb, text_len), jnp.int32),
+            "labels": sds((gb, text_len), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["frontend"] = sds((gb, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_layers:
+            batch["enc_frontend"] = sds((gb, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        text_len = seq - (cfg.frontend_len if cfg.family == "vlm" else 0)
+        batch = {"tokens": sds((gb, text_len), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["frontend"] = sds((gb, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_layers:
+            batch["enc_frontend"] = sds((gb, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one token + a full-length cache
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, gb, seq))
+    batch = {
+        "token": sds((gb, 1), jnp.int32),
+        "cache": cache,
+        "cache_len": sds((), jnp.int32),
+    }
+    if cfg.enc_layers:
+        batch["memory"] = sds((gb, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, batch, mesh):
+    bspec = M.batch_pspec(mesh, shape.global_batch)
+
+    def spec_for(path, leaf):
+        keys = [M._key_str(k) for k in path]
+        name = keys[0] if keys else ""
+        if name in ("tokens", "labels", "token"):
+            return P(*bspec) if not isinstance(bspec, P) else bspec
+        if name in ("frontend", "enc_frontend", "memory"):
+            return P(bspec[0] if len(bspec) else None, None, None)
+        if name == "cache":
+            return None  # handled separately
+        return P()
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, batch)
+    if "cache" in batch:
+        specs = dict(specs)
+        specs["cache"] = M.cache_pspecs(batch["cache"], cfg, mesh,
+                                        shape.global_batch)
+        specs["cache_len"] = P()
+    return specs
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               n_micro: Optional[int] = None, variant: str = "baseline",
+               donate: bool = True, cfg: Optional[ArchConfig] = None):
+    cfg = cfg or get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    knobs = VARIANTS.get(variant, {})
+    tp_off = knobs.get("tp_off", False)
+    rules = M.logical_rules(cfg, mesh, batch=shape.global_batch)
+    if tp_off:
+        rules = {k: (v if k == "batch" else None) for k, v in rules.items()}
+        cfg = cfg.scaled(fsdp=False)
+    elif knobs.get("fsdp_off"):
+        cfg = cfg.scaled(fsdp=False)
+    set_logical_rules(mesh, rules)
+    gather_fn, grad_fn = M.make_param_handlers(cfg, mesh)
+    set_param_handlers(gather_fn, grad_fn)
+    dp_n = M.axis_size(mesh, M.dp_axes(mesh))
+    set_moe_groups(dp_n)
+    vctx = _variant_ctx(variant)
+    vctx.__enter__()
+    try:
+        params_shape = jax.eval_shape(
+            lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+        pspecs = M.param_pspecs(params_shape, cfg, mesh)
+        if tp_off:
+            pspecs = jax.tree.map(lambda s: P(), pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+        pshard = M.shardings_for(pspecs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        bspecs = batch_pspecs(cfg, shape, batch, mesh)
+        if tp_off:
+            dp_axes_set = {"data", "pod"}
+
+            def keep_dp(s):
+                return P(*[ax if (ax in dp_axes_set
+                                  or (isinstance(ax, tuple)
+                                      and set(ax) <= dp_axes_set)) else None
+                           for ax in s])
+            bspecs = jax.tree.map(keep_dp, bspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+        bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        if shape.kind == "train":
+            dp_n = M.axis_size(mesh, M.dp_axes(mesh))
+            nm = n_micro or max(shape.global_batch // dp_n, 1)
+            nm = max(nm // VARIANTS.get(variant, {}).get("n_micro_div", 1), 1)
+            opt_cfg = adamw.AdamWConfig()
+            step = STEPS.make_train_step(cfg, opt_cfg, nm)
+            opt_shape = jax.eval_shape(adamw.init, params_shape)
+            opt_specs = adamw.AdamWState(
+                step=P(),
+                m=pspecs, v=pspecs)
+            opt_shard = M.shardings_for(opt_specs, mesh)
+            fn = jax.jit(
+                step,
+                in_shardings=(pshard, opt_shard, bshard),
+                out_shardings=(pshard, opt_shard,
+                               jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                            {"grad_norm": 0, "lr": 0, "loss": 0})),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            with mesh:
+                lowered = fn.lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            step = STEPS.make_prefill_step(cfg)
+            fn = jax.jit(step, in_shardings=(pshard, bshard))
+            with mesh:
+                lowered = fn.lower(params_shape, batch)
+        else:
+            step = STEPS.make_serve_step(cfg)
+            fn = jax.jit(
+                step,
+                in_shardings=(pshard, bshard),
+                donate_argnums=(1,) if donate else (),
+            )
+            with mesh:
+                lowered = fn.lower(params_shape, batch)
+        return mesh, lowered
+    finally:
+        vctx.__exit__()
+        clear_logical_rules()
+        clear_param_handlers()
+
+
+def _compile_stats(arch_id, shape_name, multi_pod, cfg, variant):
+    mesh, lowered = lower_cell(arch_id, shape_name, multi_pod,
+                               variant=variant, cfg=cfg)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return mesh, compiled, cost, coll
+
+
+def _probe_cfg(cfg: ArchConfig, mult: int) -> ArchConfig:
+    from ..model.transformer import pattern_period
+    period = pattern_period(cfg, "decoder")
+    return cfg.scaled(
+        n_layers=mult * period,
+        enc_layers=mult if cfg.enc_layers else 0,
+    )
+
+
+def extrapolated_costs(arch_id, shape_name, multi_pod, cfg, shape, variant,
+                       n_micro: int):
+    """Scan bodies are counted ONCE by cost_analysis; recover true totals
+    by compiling depth=P and depth=2P probes and extrapolating linearly:
+      F(R) = F_fixed + M·(F_mb + R·F_unit)   (train; M = micro steps)
+      F(R) = F_fixed + R·F_unit              (prefill / decode)
+    """
+    from ..model import transformer as TMOD
+    from ..model.transformer import pattern_period
+    period = pattern_period(cfg, "decoder")
+    TMOD.UNROLL = True   # probes must unroll (while bodies count once)
+    try:
+        _, _, cost_a, coll_a = _compile_stats(arch_id, shape_name, multi_pod,
+                                              _probe_cfg(cfg, 1), variant)
+        _, _, cost_b, coll_b = _compile_stats(arch_id, shape_name, multi_pod,
+                                              _probe_cfg(cfg, 2), variant)
+    finally:
+        TMOD.UNROLL = False
+
+    repeats = cfg.n_layers // period
+    tail = cfg.n_layers - repeats * period
+    r_eff = repeats + tail / period
+    m = n_micro if shape.kind == "train" else 1
+    # optimizer flops outside the micro scan (analytic, ~12 flop/param)
+    n_params = active_params_total(cfg)
+    f_opt = 12.0 * n_params if shape.kind == "train" else 0.0
+
+    def scale(key, a, b, is_flops=False):
+        unit = max(b - a, 0.0)
+        base = a - (f_opt if is_flops else 0.0)
+        return (f_opt if is_flops else 0.0) + m * (base + (r_eff - 1) * unit)
+
+    flops = scale("flops", float(cost_a.get("flops", 0)),
+                  float(cost_b.get("flops", 0)), is_flops=True)
+    bytes_acc = scale("bytes", float(cost_a.get("bytes accessed", 0)),
+                      float(cost_b.get("bytes accessed", 0)))
+    coll = {}
+    for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        coll[k] = {
+            "count": coll_a[k]["count"],
+            "bytes": scale(k, float(coll_a[k]["bytes"]),
+                           float(coll_b[k]["bytes"])),
+        }
+    from .roofline import _FACTORS
+    coll["weighted_bytes"] = sum(
+        coll[k]["bytes"] * f for k, f in _FACTORS.items())
+    return ({"flops": flops, "bytes accessed": bytes_acc}, coll)
+
+
+def active_params_total(cfg: ArchConfig) -> float:
+    """All parameters (not just active) — for optimizer flop estimates."""
+    from .roofline import active_params
+    total = active_params(cfg)
+    if cfg.n_experts:
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        n_moe_layers = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+        total += per_expert * (cfg.n_experts - cfg.top_k) * n_moe_layers
+    return total
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             save: bool = True, variant: str = "baseline") -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    out: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "ok": False,
+    }
+    try:
+        cfg = get_arch(arch_id)
+        shape = SHAPES[shape_name]
+        mesh, lowered = lower_cell(arch_id, shape_name, multi_pod,
+                                   variant=variant)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        n_dev = mesh.size
+        dp_n = M.axis_size(mesh, M.dp_axes(mesh))
+        nm = max(shape.global_batch // dp_n, 1) if shape.kind == "train" else 1
+        nm = max(nm // VARIANTS.get(variant, {}).get("n_micro_div", 1), 1)
+        cost, coll = extrapolated_costs(arch_id, shape_name, multi_pod, cfg,
+                                        shape, variant, nm)
+        rf = roofline_terms(cfg, shape, cost, coll, n_dev)
+        out.update(
+            ok=True,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            devices=n_dev,
+            memory={
+                "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0),
+                "temp": getattr(mem, "temp_size_in_bytes", 0),
+                "arguments": getattr(mem, "argument_size_in_bytes", 0),
+                "output": getattr(mem, "output_size_in_bytes", 0),
+                "aliased": getattr(mem, "alias_size_in_bytes", 0),
+            },
+            cost={
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0),
+            },
+            collectives=coll,
+            roofline=rf,
+        )
+    except Exception as e:
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        ART.mkdir(parents=True, exist_ok=True)
+        (ART / f"{arch_id}__{shape_name}__{mesh_name}__{variant}.json").write_text(
+            json.dumps(out, indent=1, default=str))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        pairs = runnable_cells()
+    else:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        pairs = [(a, s) for a in archs for s in shapes
+                 if (a, s) in runnable_cells()]
+    for a, s in pairs:
+        meshes = [False, True]
+        if args.multi_pod or args.multi_pod_only:
+            meshes = [True]
+        elif args.single_pod_only:
+            meshes = [False]
+        for mp in meshes:
+            cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        art = ART / f"{a}__{s}__{mesh_name}__{args.variant}.json"
+        if args.skip_existing and art.exists():
+            prev = json.loads(art.read_text())
+            if prev.get("ok"):
+                print(f"[dryrun] {a} × {s} × {mesh_name}: SKIP (exists)", flush=True)
+                continue
+        r = run_cell(a, s, mp, variant=args.variant)
+        status = "OK" if r["ok"] else f"FAIL ({r.get('error', '?')[:120]})"
+        extra = ""
+        if r["ok"]:
+            gb = r["memory"]["bytes_per_device"] / 2**30
+            bt = r["roofline"]["bottleneck"]
+            extra = f" mem/dev={gb:.2f}GiB bottleneck={bt} compile={r['compile_s']}s"
+        print(f"[dryrun] {a} × {s} × {'2x16x16' if mp else '16x16'}: {status}{extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

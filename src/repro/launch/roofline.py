@@ -1,0 +1,138 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per brief):
+  peak 197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs / (chips × peak)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes_per_chip / link_bw
+
+cost_analysis() reports whole-program (per-device-program × device
+count semantics differ by backend: on the CPU SPMD backend the numbers
+are for one device's program — we therefore treat them as per-chip and
+do NOT divide again; see EXPERIMENTS.md §Dry-run notes).
+
+Collective bytes are parsed from the optimized HLO: each all-reduce
+counts 2× its shard bytes (ring), all-gather/reduce-scatter/all-to-all
+count ~1× (×(n−1)/n ≈ 1), collective-permute 1×.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s
+ICI_BW = 50e9            # B/s per link (≈ aggregate per-chip usable)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"(\S+)\s*=\s*((?:\([^)]*\)|\S+))\s*(all-reduce|all-gather|reduce-scatter"
+    r"|all-to-all|collective-permute)(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s32|u32|s8|u8|s16|u16|s64|u64|pred)"
+                       r"\[([0-9,]*)\]")
+
+_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, Any]:
+    """Sum result-shape bytes per collective kind over the optimized HLO."""
+    out: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in _FACTORS}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).lower()
+        shape_txt = m.group(2)
+        b = _shape_bytes(shape_txt)
+        if kind in out:
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += b
+    out["weighted_bytes"] = sum(
+        v["bytes"] * _FACTORS[k] for k, v in out.items() if k in _FACTORS)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (training) / 2·N_active·D (inference) useful FLOPs."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE counts top_k experts)."""
+    d, hd = cfg.d_model, cfg.hd
+    per_layer_attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+        + cfg.n_heads * hd * d
+    per_layer_mlp = 3 * d * cfg.d_ff if cfg.d_ff else 0
+    per_layer_moe = 3 * d * cfg.d_ff * cfg.top_k if cfg.n_experts else 0
+    if cfg.shared_expert:
+        per_layer_moe += per_layer_mlp
+    di = cfg.d_inner
+    per_layer_mamba = 2 * d * di + di * (cfg.dt_rank_ + 2 * cfg.ssm_state) \
+        + cfg.dt_rank_ * di + di * d
+    total = 0.0
+    from ..model.transformer import layer_specs
+    for spec in layer_specs(cfg, "decoder"):
+        if spec.mixer == "attn":
+            total += per_layer_attn
+        elif spec.mixer == "mamba":
+            total += per_layer_mamba
+        if spec.cross:
+            total += per_layer_attn
+        if spec.ffn == "moe":
+            total += per_layer_moe
+        elif spec.ffn == "mlp":
+            total += per_layer_mlp
+    for _ in range(cfg.enc_layers):
+        total += per_layer_attn + 3 * cfg.d_model * cfg.d_ff
+    total += 2 * cfg.vocab * cfg.d_model   # embed + head
+    return total
+
+
+def roofline_terms(cfg, shape, cost: Dict, coll: Dict, n_dev: int) -> Dict[str, Any]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = float(coll.get("weighted_bytes", 0)) / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+    mf = model_flops(cfg, shape)
+    hlo_total = flops * n_dev
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_per_dev": flops,
+        "model_flops_frac": (mf / hlo_total) if hlo_total else 0.0,
+        "step_time_lower_bound_s": max(terms.values()),
+        "mfu_upper_bound": (mf / (n_dev * PEAK_FLOPS)) / max(max(terms.values()), 1e-12),
+    }

@@ -1,0 +1,54 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b \
+        --steps 100 --batch 8 --seq 256 --ckpt /tmp/ckpt [--smoke]
+
+On a real TPU fleet this process runs per host with jax.distributed
+initialization; on this box it drives the same Trainer on one device
+(--smoke reduces the arch). The --mesh flag lowers onto the production
+mesh topology (requires the 512-device env, i.e. run under dryrun's
+XLA_FLAGS — documented, not default).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs.registry import get_arch
+from ..optim.adamw import AdamWConfig
+from ..train.loop import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="use the production mesh (needs 512 host devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.smoke:
+        arch = arch.smoke()
+    cfg = TrainConfig(
+        arch=arch, total_steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, n_micro=args.n_micro, ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every,
+        opt=AdamWConfig(lr=args.lr, total_steps=args.steps),
+        use_mesh=args.mesh, multi_pod=args.multi_pod,
+    )
+    trainer = Trainer(cfg)
+    out = trainer.fit()
+    print(f"done: {out}")
+    trainer.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Core layers (pure JAX, pytree params, no framework dependency).
+
+Conventions:
+* params are nested dicts of jnp arrays; per-layer stacks carry a
+  leading layer axis and are consumed via lax.scan (fast compile —
+  essential for the 512-device dry-run on one CPU host).
+* matmul params live in the model dtype (bf16 by default); norms,
+  softmax and rope math run in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, object]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rmsnorm_init(dim: int) -> jnp.ndarray:
+    return jnp.zeros((dim,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e6) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e6) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int] = (1, 1, 2),
+                theta: float = 1e6) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the head_dim/2 rotary channels are split into
+    (t, h, w) sections, each rotated by its own position stream.
+    positions3: (..., seq, 3)."""
+    half = x.shape[-1] // 2
+    tot = sum(sections)
+    bounds = [half * s // tot for s in sections]
+    freqs = rope_freqs(x.shape[-1], theta)
+    # per-channel section id
+    sec_id = jnp.concatenate([
+        jnp.full((b,), i, jnp.int32) for i, b in enumerate(bounds)
+    ])
+    p = positions3.astype(jnp.float32)                       # (..., seq, 3)
+    chan_pos = jnp.take(p, sec_id, axis=-1)                  # (..., seq, half)
+    angles = chan_pos * freqs
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+# embedding lookup mode: 'take' all-gathers a vocab-sharded table (best
+# for many tokens, e.g. training); 'onehot' contracts a one-hot against
+# the local table shard + tiny all-reduce (best for decode, where
+# gathering the whole table for a handful of tokens dominates the
+# collective term). The launcher flips this per shape.
+EMBED_MODE = "take"
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    if EMBED_MODE == "onehot":
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        return oh @ table
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return x @ table.T

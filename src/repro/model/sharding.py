@@ -1,0 +1,77 @@
+"""Logical-axis activation sharding.
+
+Models annotate activations with *logical* axis names; the launcher
+installs a mapping to physical mesh axes. Outside any mesh (unit tests)
+the constraints are identity.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_logical_rules(mesh, rules: Dict[str, Optional[object]]):
+    """rules: logical name -> physical mesh axis (str | tuple | None)."""
+    _state.mesh = mesh
+    _state.rules = dict(rules)
+
+
+def clear_logical_rules():
+    _state.mesh = None
+    _state.rules = None
+
+
+def shard_activation(x, logical_axes: Sequence[Optional[str]]):
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec = []
+    for ax in logical_axes:
+        spec.append(None if ax is None else rules.get(ax))
+    # trailing axes default to unsharded
+    spec = spec[: x.ndim] + [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def set_moe_groups(n: int):
+    """Number of routing groups for MoE dispatch (= DP shard count).
+    Grouped routing keeps dispatch tensors linear in tokens-per-shard;
+    the group axis maps to the 'batch' logical rule."""
+    _state.moe_groups = n
+
+
+def moe_groups() -> int:
+    return getattr(_state, "moe_groups", None) or 1
+
+
+def set_param_handlers(gather_fn=None, grad_fn=None):
+    """Install FSDP handlers: ``gather_fn(tree)`` re-constrains sliced
+    per-layer params to their compute (TP-only) sharding *inside* scan
+    bodies — preventing XLA from hoisting the data-axis all-gather of the
+    whole stacked parameters out of the loop; ``grad_fn(tree)`` pins
+    gradient accumulators back to the full (FSDP) spec so each micro-step
+    reduce-scatters instead of keeping full gradients live."""
+    _state.gather_fn = gather_fn
+    _state.grad_fn = grad_fn
+
+
+def clear_param_handlers():
+    _state.gather_fn = None
+    _state.grad_fn = None
+    _state.moe_groups = None
+
+
+def gather_params_for_compute(tree):
+    fn = getattr(_state, "gather_fn", None)
+    return fn(tree) if fn is not None else tree
+
+
+def constrain_grads(tree):
+    fn = getattr(_state, "grad_fn", None)
+    return fn(tree) if fn is not None else tree

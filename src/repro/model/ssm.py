@@ -1,0 +1,113 @@
+"""Mamba-1 block (selective SSM) — falcon-mamba / jamba layers.
+
+Sequence processing uses an associative scan over the diagonal SSM
+recurrence h_t = a_t ⊙ h_{t-1} + b_t (a_t = exp(Δ_t·A)), which is both
+TPU-friendly (log-depth) and exact. Decode keeps (conv_state, ssm_state)
+as the cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ArchConfig
+from .layers import dense_init
+from .sharding import shard_activation
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Dict:
+    d, di, st, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * st, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_scan(a, b):
+    """Associative scan over (decay, increment) pairs along axis 1."""
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+    return jax.lax.associative_scan(combine, (a, b), axis=1)
+
+
+def _selective_ssm(p, cfg: ArchConfig, xs, return_last: bool = False):
+    """xs: (b, s, di) post-conv activations; returns ((b, s, di), h_last)."""
+    st, dtr = cfg.ssm_state, cfg.dt_rank_
+    proj = xs @ p["x_proj"]                                     # (b, s, dtr+2st)
+    dt_r, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])                                    # (di, st)
+    a_bar = jnp.exp(dt[..., None] * A)                          # (b, s, di, st)
+    b_bar = (dt[..., None] * Bm[..., None, :]) * xs.astype(jnp.float32)[..., None]
+    _, h = _ssm_scan(a_bar, b_bar)                              # (b, s, di, st)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+    y = y + xs.astype(jnp.float32) * p["d_skip"]
+    return y.astype(xs.dtype), (h[:, -1] if return_last else None)
+
+
+def mamba(p, cfg: ArchConfig, x, return_state: bool = False):
+    """Full-sequence Mamba block. x: (b, s, d)."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, [di], axis=-1)
+    xs = shard_activation(xs, ("batch", "seq", "ffn"))
+    # causal depthwise conv
+    w = p["conv_w"].astype(jnp.float32)                        # (cw, di)
+    cw = w.shape[0]
+    pre_conv = xs
+    pad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + xs.shape[1], :] * w[i] for i in range(cw))
+    xs = jax.nn.silu(conv + p["conv_b"]).astype(x.dtype)
+    y, h_last = _selective_ssm(p, cfg, xs, return_last=return_state)
+    y = y * jax.nn.silu(z)
+    y = shard_activation(y, ("batch", "seq", "ffn"))
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = pre_conv[:, -(cw - 1):, :]
+        return out, (conv_state, h_last)
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, layer_count: int, dtype) -> Dict:
+    di = cfg.d_inner
+    return {
+        "conv": jnp.zeros((layer_count, batch, cfg.conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((layer_count, batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg: ArchConfig, x, conv_state, ssm_state
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (b, 1, d); conv_state: (b, cw-1, di);
+    ssm_state: (b, di, st)."""
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, [di], axis=-1)                       # (b, 1, di)
+    w = p["conv_w"].astype(jnp.float32)
+    hist = jnp.concatenate([conv_state.astype(jnp.float32),
+                            xs.astype(jnp.float32)], axis=1)    # (b, cw, di)
+    conv = jnp.einsum("bcd,cd->bd", hist, w) + p["conv_b"]
+    xs1 = jax.nn.silu(conv).astype(x.dtype)                    # (b, di)
+    proj = xs1 @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    a_bar = jnp.exp(dt[..., None] * A)                          # (b, di, st)
+    b_bar = (dt[..., None] * Bm[:, None, :]) * xs1.astype(jnp.float32)[..., None]
+    h = ssm_state * a_bar + b_bar
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xs1.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = y @ p["out_proj"]
+    return out, hist[:, 1:].astype(conv_state.dtype), h

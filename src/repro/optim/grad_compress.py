@@ -1,0 +1,41 @@
+"""Gradient compression with error feedback (cross-pod traffic saver).
+
+At 2+ pods the inter-pod all-reduce rides the slower DCI links; casting
+gradients to bf16 for the reduction halves that traffic. Error feedback
+(Seide et al.) accumulates the quantization residual locally so the
+compression is unbiased over time.
+
+Usage inside the train step (see train/loop.py): the accumulated f32
+gradients are compressed before the optimizer; the residual buffer is
+part of the training state (sharded like the params).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual) -> Tuple[Any, Any]:
+    """Returns (compressed bf16 grads, new residual)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q = corrected.astype(jnp.bfloat16)
+        new_r = corrected - q.astype(jnp.float32)
+        return q, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = treedef.unflatten([o[0] for o in out])
+    new_res = treedef.unflatten([o[1] for o in out])
+    return comp, new_res
+
+
+def decompress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)

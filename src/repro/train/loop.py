@@ -1,0 +1,119 @@
+"""Training orchestrator: mesh, data, steps, checkpoints, fault hooks.
+
+Scales from a single CPU device (integration tests, examples) to the
+production mesh (same code path the dry-run lowers). The loop is
+deliberately framework-shaped: config in, metrics out, restart-safe.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import ArchConfig
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..model import transformer as T
+from ..model.sharding import (clear_logical_rules, clear_param_handlers,
+                              set_logical_rules, set_moe_groups,
+                              set_param_handlers)
+from ..optim import adamw
+from . import checkpoint as CKPT
+from . import fault as FAULT
+from . import steps as STEPS
+
+
+@dataclass
+class TrainConfig:
+    arch: ArchConfig
+    total_steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    n_micro: int = 1
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    opt: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+    use_mesh: bool = False          # production mesh (dry-run topology)
+    multi_pod: bool = False
+    grad_compress: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: TrainConfig):
+        self.cfg = cfg
+        self.arch = cfg.arch
+        self.mesh = None
+        if cfg.use_mesh:
+            from ..launch import mesh as M
+            self.mesh = M.make_production_mesh(multi_pod=cfg.multi_pod)
+            rules = M.logical_rules(self.arch, self.mesh, batch=cfg.global_batch)
+            set_logical_rules(self.mesh, rules)
+            gf, gr = M.make_param_handlers(self.arch, self.mesh)
+            set_param_handlers(gf, gr)
+            set_moe_groups(M.axis_size(self.mesh, M.dp_axes(self.mesh)))
+        self.data = SyntheticLM(DataConfig(
+            vocab=self.arch.vocab, seq_len=cfg.seq_len,
+            global_batch=cfg.global_batch, seed=cfg.seed))
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = T.init_params(key, self.arch)
+        self.opt_state = adamw.init(self.params)
+        self.step_fn = jax.jit(
+            STEPS.make_train_step(self.arch, cfg.opt, cfg.n_micro))
+        self.step = 0
+        self.history: list = []
+
+    # -- checkpointing ----------------------------------------------------
+    def save(self, step: int):
+        if self.cfg.ckpt_dir:
+            CKPT.save(self.cfg.ckpt_dir, step, self.params, self.opt_state,
+                      extra={"arch": self.arch.name})
+
+    def restore(self) -> int:
+        if not self.cfg.ckpt_dir:
+            return 0
+        latest = CKPT.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return 0
+        self.params, self.opt_state, meta = CKPT.restore(self.cfg.ckpt_dir)
+        self.step = meta["step"]
+        return self.step
+
+    # -- main loop ----------------------------------------------------------
+    def run_step(self, step: int) -> Dict[str, float]:
+        batch = {k: jnp.asarray(v) for k, v in self.data.batch(step).items()}
+        if self.arch.family == "vlm":
+            batch["frontend"] = jnp.zeros(
+                (self.cfg.global_batch, self.arch.frontend_len,
+                 self.arch.d_model), jnp.bfloat16)
+        if self.arch.enc_layers:
+            batch["enc_frontend"] = jnp.zeros(
+                (self.cfg.global_batch, self.arch.frontend_len,
+                 self.arch.d_model), jnp.bfloat16)
+        self.params, self.opt_state, metrics = self.step_fn(
+            self.params, self.opt_state, batch)
+        m = {k: float(v) for k, v in metrics.items()}
+        self.history.append(m)
+        if step % self.cfg.log_every == 0:
+            print(f"[train] step={step} loss={m['loss']:.4f} "
+                  f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.3f}", flush=True)
+        return m
+
+    def fit(self) -> Dict:
+        start = self.restore()
+        policy = FAULT.FaultPolicy(checkpoint_every=self.cfg.ckpt_every)
+        out = FAULT.run_resilient(
+            self.run_step, start, self.cfg.total_steps,
+            restore_fn=self.restore, save_fn=self.save, policy=policy)
+        if self.cfg.ckpt_dir:
+            self.save(self.cfg.total_steps)
+        return out
+
+    def close(self):
+        clear_logical_rules()
+        clear_param_handlers()

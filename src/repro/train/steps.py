@@ -1,0 +1,79 @@
+"""jit-able train / prefill / serve step builders.
+
+``make_train_step`` implements microbatched gradient accumulation
+(lax.scan over micro-steps, f32 accumulators) + AdamW. The returned
+functions are pure — the launcher decides shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ArchConfig, ShapeConfig
+from ..model import transformer as T
+from ..optim import adamw
+
+
+def _batch_kw(cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
+    kw = {}
+    if cfg.family == "vlm":
+        kw["frontend"] = batch["frontend"]
+    if cfg.enc_layers:
+        kw["enc_frontend"] = batch["enc_frontend"]
+    return kw
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, n_micro: int):
+    def loss_fn(params, tokens, labels, extra):
+        return T.lm_loss(params, cfg, tokens, labels, **extra)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        gb, seq = tokens.shape
+        mb = gb // n_micro
+        tok_m = tokens.reshape(n_micro, mb, seq)
+        lab_m = labels.reshape(n_micro, mb, seq)
+        extra = _batch_kw(cfg, batch)
+        extra_m = jax.tree.map(
+            lambda x: x.reshape((n_micro, mb) + x.shape[1:]), extra)
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        from ..model.sharding import constrain_grads
+
+        def micro(acc, xs):
+            tok, lab, ex = xs
+            loss, grads = jax.value_and_grad(loss_fn)(params, tok, lab, ex)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return constrain_grads(acc), loss
+
+        acc, losses = jax.lax.scan(micro, acc0, (tok_m, lab_m, extra_m))
+        grads = jax.tree.map(lambda a: a / n_micro, acc)
+        params2, opt_state2, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=jnp.mean(losses))
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        extra = _batch_kw(cfg, batch)
+        logits, cache = T.prefill(params, cfg, batch["tokens"], **extra)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step over a full KV cache (the decode_*/long_* shape)."""
+    def serve_step(params, batch):
+        memory = batch.get("memory")
+        logits, new_cache = T.decode_step(
+            params, cfg, batch["token"], batch["cache"], batch["cache_len"],
+            memory)
+        return logits, new_cache
+    return serve_step

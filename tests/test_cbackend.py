@@ -1,0 +1,41 @@
+"""C backend: compile+run, checksum equivalence across schedule variants."""
+import shutil
+
+import pytest
+
+from repro.core import config as CFG
+from repro.core.cbackend import CCodeGenerator
+from repro.core.crunner import compile_and_run
+from repro.core.postproc import tile_schedule
+from repro.core.scheduler import schedule_scop
+from repro.core.scops_polybench import make_gemm, make_jacobi1d
+
+pytestmark = pytest.mark.skipif(shutil.which("gcc") is None,
+                                reason="no C compiler")
+
+
+def _checksum(scop, cfg, tile=None, wavefront=False):
+    sched = schedule_scop(scop, cfg)
+    scan = tile_schedule(sched, tile, wavefront=wavefront) if tile else None
+    src = CCodeGenerator(sched, scan=scan,
+                         scalars={"alpha": 1.5, "beta": 0.7}).generate()
+    r = compile_and_run(src, tag=f"t_{scop.name}_{cfg.name}_{tile}_{wavefront}",
+                        use_cache=False)
+    return r.checksum
+
+
+def test_gemm_variants_agree():
+    scop = make_gemm(48)
+    cks = [
+        _checksum(scop, CFG.pluto_style()),
+        _checksum(scop, CFG.tensor_style()),
+        _checksum(scop, CFG.pluto_style(), tile=16),
+    ]
+    assert max(cks) - min(cks) < 1e-6 * max(1.0, abs(cks[0]))
+
+
+def test_jacobi_wavefront_agrees():
+    scop = make_jacobi1d((6, 40))
+    base = _checksum(scop, CFG.pluto_style())
+    wf = _checksum(scop, CFG.pluto_style(), tile=8, wavefront=True)
+    assert abs(base - wf) < 1e-6 * max(1.0, abs(base))

@@ -1,0 +1,99 @@
+"""Codegen equivalence: transformed code ≡ original semantics.
+
+Includes the flagship property test: random SCoPs × random strategies →
+schedule → generate → execute → allclose against the independent
+interpreter oracle.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import config as CFG
+from repro.core.cbackend import array_extents
+from repro.core.codegen import CodeGenerator, interpret_scop
+from repro.core.postproc import tile_schedule
+from repro.core.scheduler import schedule_scop
+from repro.core.scop import Scop
+from repro.core.scops_polybench import REGISTRY
+
+SMALL = {"gemm": 13, "mm2": 9, "atax": 17, "symm": 10, "trmm": 11,
+         "trisolv": 14, "lu": 11, "durbin": 11, "gesummv": 12,
+         "jacobi1d": (5, 17), "jacobi2d": (4, 11), "fdtd2d": (4, 9),
+         "seidel2d": (3, 10), "doitgen": (4, 5, 6)}
+SCALARS = {"alpha": 1.5, "beta": 0.7, "zero": 0.0, "one": 1.0,
+           "fn": 10.0, "eps": 0.1}
+
+
+def _arrays(scop, seed=0):
+    ext = array_extents(scop)
+    r = np.random.default_rng(seed)
+    return {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
+            for a, dims in ext.items()}
+
+
+def _check(scop, cfg, tile=None, wavefront=False):
+    sched = schedule_scop(scop, cfg)
+    scan = tile_schedule(sched, tile, wavefront=wavefront) if tile else None
+    fn, src = CodeGenerator(sched, scan=scan).build()
+    a1, a2 = _arrays(scop), _arrays(scop)
+    sc = {k: v for k, v in SCALARS.items() if k in scop.scalars}
+    interpret_scop(scop, a1, sc)
+    fn(**a2, **sc, **scop.params)
+    for k in a1:
+        np.testing.assert_allclose(a1[k], a2[k], rtol=1e-7, atol=1e-9,
+                                   err_msg=f"{scop.name} {cfg.name} {k}\n{src}")
+
+
+@pytest.mark.parametrize("name", list(SMALL))
+@pytest.mark.parametrize("style", ["pluto", "tensor", "isl"])
+def test_polybench_equivalence(name, style):
+    scop = REGISTRY[name](SMALL[name])
+    _check(scop, CFG.STRATEGIES[style]())
+
+
+@pytest.mark.parametrize("name,tile,wf", [
+    ("gemm", 8, False), ("jacobi1d", 4, False), ("jacobi1d", 4, True),
+    ("jacobi2d", 4, True), ("trmm", 8, False)])
+def test_tiled_equivalence(name, tile, wf):
+    scop = REGISTRY[name](SMALL[name])
+    _check(scop, CFG.pluto_style(), tile=tile, wavefront=wf)
+
+
+# ---------------------------------------------------------------------------
+# property test: random SCoPs stay semantically equivalent
+# ---------------------------------------------------------------------------
+
+_subscript = st.sampled_from(["i", "i-1", "i+1", "j", "j-1", "j+1"])
+
+
+@st.composite
+def random_scop(draw):
+    n1 = draw(st.integers(4, 9))
+    n2 = draw(st.integers(4, 9))
+    k = Scop("rand", params={"N": n1, "M": n2})
+    n_stmts = draw(st.integers(1, 3))
+    with k.loop("i", 1, "N-1"):
+        with k.loop("j", 1, "M-1"):
+            for s in range(n_stmts):
+                arr_w = draw(st.sampled_from(["A", "B"]))
+                arr_r1 = draw(st.sampled_from(["A", "B", "C"]))
+                arr_r2 = draw(st.sampled_from(["A", "B", "C"]))
+                w1, w2 = draw(_subscript), draw(_subscript)
+                r1, r2 = draw(_subscript), draw(_subscript)
+                r3, r4 = draw(_subscript), draw(_subscript)
+                k.stmt(f"{arr_w}[{w1},{w2}] = 0.5*{arr_r1}[{r1},{r2}]"
+                       f" + 0.25*{arr_r2}[{r3},{r4}]")
+    return k
+
+
+@settings(max_examples=20, deadline=None)
+@given(scop=random_scop(), style=st.sampled_from(["pluto", "tensor", "isl",
+                                                  "feautrier"]))
+def test_random_scop_equivalence(scop, style):
+    _check(scop, CFG.STRATEGIES[style]())
+
+
+@settings(max_examples=10, deadline=None)
+@given(scop=random_scop(), tile=st.sampled_from([2, 4]))
+def test_random_scop_tiled_equivalence(scop, tile):
+    _check(scop, CFG.pluto_style(), tile=tile)

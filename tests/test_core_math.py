@@ -1,0 +1,72 @@
+"""Affine parser + exact linear algebra properties."""
+from fractions import Fraction
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.affine import (affine_eval, parse_affine, parse_constraint)
+from repro.core.linalg_q import (eye, inverse, mat, matmul, nullspace,
+                                 orth_complement_basis, orth_complement_rows,
+                                 rank, rref, scale_to_int)
+
+
+def test_parse_basic():
+    e = parse_affine("2*i + j - N + 3")
+    assert e == {"i": 2, "j": 1, "N": -1, 1: 3}
+    assert parse_affine("-(i - 1)") == {"i": -1, 1: 1}
+    assert parse_affine("16*l + kv") == {"l": 16, "kv": 1}
+    assert parse_affine("0") == {1: 0}
+
+
+def test_parse_constraint_normalization():
+    e, k = parse_constraint("i <= N - 1")
+    assert k == ">=0" and e == {"i": -1, "N": 1, 1: -1}
+    e, k = parse_constraint("x < 1")       # strict → integerized
+    assert e == {"x": -1, 1: 0} and k == ">=0"
+    e, k = parse_constraint("a == b")
+    assert k == "==0" and e == {"a": 1, "b": -1}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-9, 9), st.integers(-9, 9), st.integers(-9, 9))
+def test_parse_eval_roundtrip(a, b, c):
+    e = parse_affine(f"{a}*i + {b}*j + {c}")
+    assert affine_eval(e, {"i": 2, "j": -3}) == 2 * a - 3 * b + c
+
+
+def test_rank_inverse():
+    m = mat([[1, 2], [3, 5]])
+    assert rank(m) == 2
+    inv = inverse(m)
+    assert matmul(m, inv) == eye(2)
+
+
+def test_nullspace_orthogonal():
+    m = mat([[1, 1, 0]])
+    ns = nullspace(m)
+    assert len(ns) == 2
+    for v in ns:
+        assert sum(a * b for a, b in zip(m[0], v)) == 0
+
+
+def test_orth_complement_paper_eq3():
+    # after finding (1, 1), the complement of its row space
+    rows = orth_complement_rows(mat([[1, 1]]), 2)
+    # projector rows sum to zero — the degenerate case the basis avoids
+    s = [sum(col) for col in zip(*rows)]
+    assert all(x == 0 for x in s)
+    basis = orth_complement_basis(mat([[1, 1]]), 2)
+    assert len(basis) == 1 and basis[0][0] == -basis[0][1]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(-3, 3), min_size=3, max_size=3),
+                min_size=1, max_size=2))
+def test_orth_basis_is_orthogonal_property(rows_in):
+    m = mat(rows_in)
+    r = rank(m)
+    basis = orth_complement_basis(m, 3)
+    assert len(basis) == 3 - r
+    for b in basis:
+        for row in m:
+            assert sum(x * y for x, y in zip(row, b)) == 0

@@ -1,0 +1,60 @@
+"""Dry-run smoke: one small cell through lower+compile+roofline in a
+subprocess (the 512-device XLA flag must be set before jax init, so it
+cannot run inside the main pytest process)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run(args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=1200, env=env, cwd=ROOT)
+
+
+def test_dryrun_smallest_cell_single_pod():
+    cp = _run(["--arch", "qwen3_0_6b", "--shape", "decode_32k",
+               "--single-pod-only"])
+    assert "OK" in cp.stdout, cp.stdout + cp.stderr[-2000:]
+    art = ROOT / "artifacts" / "dryrun" / \
+        "qwen3_0_6b__decode_32k__pod16x16__baseline.json"
+    d = json.loads(art.read_text())
+    assert d["ok"] and d["devices"] == 256
+    rf = d["roofline"]
+    assert rf["compute_s"] > 0 and rf["memory_s"] > 0
+    assert rf["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < rf["model_flops_frac"] <= 1.5
+
+
+def test_dryrun_multi_pod_axis():
+    cp = _run(["--arch", "qwen3_0_6b", "--shape", "decode_32k",
+               "--multi-pod-only"])
+    assert "OK" in cp.stdout, cp.stdout + cp.stderr[-2000:]
+    art = ROOT / "artifacts" / "dryrun" / \
+        "qwen3_0_6b__decode_32k__pod2x16x16__baseline.json"
+    d = json.loads(art.read_text())
+    assert d["ok"] and d["devices"] == 512
+
+
+def test_roofline_hlo_parser():
+    from repro.launch.roofline import collective_bytes_from_hlo
+    hlo = """
+      %ar = bf16[16,128]{1,0} all-reduce(%x), replica_groups={{0,1}}
+      %ag.1 = f32[256]{0} all-gather(%y), dimensions={0}
+      %cp = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute-start(%z)
+    """
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["bytes"] == 16 * 128 * 2
+    assert out["all-gather"]["bytes"] == 256 * 4
+    assert out["collective-permute"]["count"] == 1
+    assert out["weighted_bytes"] > 0

@@ -1,0 +1,86 @@
+"""ILP layer: HiGHS engine vs the exact rational engine (cross-oracle)."""
+from fractions import Fraction
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ilp import ILPProblem
+
+
+def _mk(engine):
+    p = ILPProblem(engine)
+    p.var("x", ub=10)
+    p.var("y", ub=10)
+    p.add({"x": 2, "y": 1, 1: -5})      # 2x + y >= 5
+    p.add({"x": 1, "y": 3, 1: -6})      # x + 3y >= 6
+    return p
+
+
+def test_min_matches_engines():
+    vh, _ = _mk("highs").solve_min({"x": 1, "y": 1})
+    ve, _ = _mk("exact").solve_min({"x": 1, "y": 1})
+    assert vh == ve == 4
+
+
+def test_lexmin_stages():
+    for eng in ("highs", "exact"):
+        p = ILPProblem(eng)
+        p.var("u")
+        p.var("w")
+        p.var("t", ub=4)
+        p.add({"u": 1, "w": 1, "t": 1, 1: -3})
+        p.add({"t": 1, 1: -2})
+        sol = p.lexmin([{"u": 1}, {"w": 1}, {"t": 1}])
+        assert (sol["u"], sol["w"], sol["t"]) == (0, 0, 3)
+
+
+def test_infeasible_returns_none():
+    p = ILPProblem()
+    p.var("x", ub=1)
+    p.add({"x": 1, 1: -2})
+    assert p.solve_min({"x": 1}) is None
+    assert not p.feasible()
+
+
+def test_branch_and_bound_integrality():
+    for eng in ("highs", "exact"):
+        p = ILPProblem(eng)
+        p.var("y")
+        p.add({"y": 2, 1: -3})           # y >= 1.5 → integer y >= 2
+        v, sol = p.solve_min({"y": 1})
+        assert v == 2 and sol["y"] == 2
+
+
+def test_equality_constraints():
+    p = ILPProblem()
+    p.var("a", ub=10)
+    p.var("b", ub=10)
+    p.add({"a": 1, "b": 1, 1: -7}, "==0")
+    v, sol = p.solve_min({"a": 1})
+    assert v == 0 and sol["b"] == 7
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    c=st.lists(st.integers(-3, 3), min_size=2, max_size=2),
+    rows=st.lists(
+        st.tuples(st.integers(-3, 3), st.integers(-3, 3), st.integers(-6, 6)),
+        min_size=1, max_size=4),
+)
+def test_engines_agree_property(c, rows):
+    """Random small bounded ILPs: both engines find the same optimum."""
+    def build(eng):
+        p = ILPProblem(eng)
+        p.var("x", ub=7)
+        p.var("y", ub=7)
+        for (a, b, d) in rows:
+            p.add({"x": a, "y": b, 1: d})
+        return p
+
+    obj = {"x": c[0], "y": c[1]}
+    rh = build("highs").solve_min(obj)
+    re_ = build("exact").solve_min(obj)
+    if rh is None or re_ is None:
+        assert rh is None and re_ is None
+    else:
+        assert rh[0] == re_[0]

@@ -1,0 +1,67 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.akg import plan_attention, plan_matmul
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 512, 128),
+                                   (64, 256, 512), (32, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_allclose(m, n, k, dtype):
+    r = jax.random.PRNGKey(0)
+    a = jax.random.normal(r, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(r, 1), (k, n), dtype)
+    got = np.asarray(ops.matmul(a, b), np.float32)
+    want = np.asarray(ref.matmul_ref(a, b), np.float32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * k ** 0.5)
+
+
+def test_matmul_plan_is_polytops_derived():
+    plan = plan_matmul(256, 256, 256)
+    assert plan.loop_order[0] == "i"
+    assert plan.loop_order[-1] == "j"        # lanes innermost (contiguity)
+    assert plan.vector_iter == "j"
+    assert plan.tile["j"] % 128 == 0 or plan.tile["j"] == 256
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d", [(2, 256, 4, 2, 64), (1, 128, 2, 2, 32),
+                                         (2, 64, 4, 4, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_allclose(b, s, h, hkv, d, causal):
+    r = jax.random.PRNGKey(1)
+    q = jax.random.normal(r, (b, s, h, d), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(r, 2), (b, s, hkv, d), jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(r, 3), (b, s, hkv, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    rep = h // hkv
+    kr, vr = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+    want = ref.attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        kr.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        vr.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        causal=causal).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,di,st", [(2, 64, 256, 16), (1, 128, 128, 8)])
+def test_selective_scan_allclose(b, s, di, st):
+    r = jax.random.PRNGKey(2)
+    a_bar = jax.nn.sigmoid(jax.random.normal(r, (b, s, di, st))) * 0.9
+    b_bar = jax.random.normal(jax.random.fold_in(r, 4), (b, s, di, st)) * 0.1
+    c = jax.random.normal(jax.random.fold_in(r, 5), (b, s, st))
+    got = ops.selective_scan(a_bar, b_bar, c)
+    want = ref.selective_scan_ref(a_bar, b_bar, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_plan_lanes():
+    plan = plan_attention(512, 512, 128)
+    assert plan.vector_iter == "d"           # head_dim on lanes
+    assert plan.tile["q"] <= 128 and plan.tile["kk"] <= 128

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced configs, forward + decode on CPU,
+shape and NaN assertions (the FULL configs are exercised by the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_arch, runnable_cells
+from repro.model import transformer as T
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_loss(arch_id, key):
+    cfg = get_arch(arch_id).smoke()
+    params = T.init_params(key, cfg)
+    b, s = 2, 24
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["frontend"] = jnp.ones((b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers:
+        kw["enc_frontend"] = jnp.ones((b, 16, cfg.d_model), jnp.bfloat16)
+    logits, aux = jax.jit(lambda p, t: T.forward(p, cfg, t, **kw))(params, tokens)
+    exp_seq = s + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, exp_seq, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    loss = T.lm_loss(params, cfg, tokens, labels, **kw)
+    assert jnp.isfinite(loss)
+    # reasonable initial loss ≈ ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.5
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode(arch_id, key):
+    cfg = get_arch(arch_id).smoke()
+    params = T.init_params(key, cfg)
+    b = 2
+    cache = T.init_cache(cfg, b, 32)
+    memory = None
+    if cfg.enc_layers:
+        enc = jnp.ones((b, 16, cfg.d_model), jnp.bfloat16) @ params["frontend_proj"]
+        pos = jnp.broadcast_to(jnp.arange(16)[None], (b, 16))
+        memory, _ = T._run_stack(params["encoder"], cfg, "encoder", enc, pos)
+    token = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    logits, new_cache = jax.jit(
+        lambda p, t, c: T.decode_step(p, cfg, t, c, jnp.int32(3), memory)
+    )(params, token, cache)
+    assert logits.shape == (b, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+def test_prefill_matches_decode_prefix():
+    """Decoding token-by-token must reproduce prefill logits (same cache
+    semantics) — checked on a tiny dense model."""
+    cfg = get_arch("granite_3_2b").smoke()
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    b, s = 1, 8
+    tokens = jax.random.randint(key, (b, s), 2, cfg.vocab)
+    last_logits, _ = T.prefill(params, cfg, tokens)
+    # step-by-step decode
+    cache = T.init_cache(cfg, b, s + 1)
+    for i in range(s):
+        logits_i, cache = T.decode_step(params, cfg, tokens[:, i:i + 1],
+                                        cache, jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(last_logits, np.float32),
+                               np.asarray(logits_i, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_long_500k_skips_full_attention():
+    cells = runnable_cells()
+    assert ("falcon_mamba_7b", "long_500k") in cells
+    assert ("jamba_v0_1_52b", "long_500k") in cells
+    assert ("gemma3_4b", "long_500k") in cells
+    assert ("qwen3_8b", "long_500k") not in cells
+    assert ("granite_3_2b", "long_500k") not in cells
+    assert len(cells) == 33
+
+
+def test_pattern_periods():
+    assert T.pattern_period(get_arch("jamba_v0_1_52b")) == 8
+    assert T.pattern_period(get_arch("gemma3_4b")) == 6
+    assert T.pattern_period(get_arch("falcon_mamba_7b")) == 1
+    assert T.pattern_period(get_arch("llama4_scout_17b_a16e")) == 2
+
+
+def test_jamba_layer_mix():
+    cfg = get_arch("jamba_v0_1_52b")
+    specs = T.layer_specs(cfg)
+    attn = [i for i, sp in enumerate(specs) if sp.mixer == "attn"]
+    moe = [i for i, sp in enumerate(specs) if sp.ffn == "moe"]
+    assert len(attn) == 4 and len(specs) == 32      # 1:7 interleave
+    assert len(moe) == 16                            # every other layer
+
+
+def test_gemma_local_global_mix():
+    cfg = get_arch("gemma3_4b")
+    specs = T.layer_specs(cfg)
+    local = [sp for sp in specs if sp.window]
+    glob = [sp for sp in specs if not sp.window]
+    assert len(local) + len(glob) == 34
+    assert len(local) > 4 * len(glob) - 5            # ≈ 5:1
