@@ -1,38 +1,132 @@
-"""Scheduler-cost benchmark: wall time of PolyTOPS itself per kernel and
-strategy (dependence analysis + ILP solving), plus ILP solve counts.
+"""Scheduler-cost benchmark: wall time of PolyTOPS itself per kernel.
 
-Output CSV: kernel,strategy,sched_ms,ilp_solves,deps
+Compares, per PolyBench/NPU kernel and strategy:
+
+* ``seed``        — the seed pipeline (monolithic ILP, clone-per-lexmin
+                    dense solves, no caching; ``incremental=False``)
+* ``incremental`` — compiled/incremental ILP core, monolithic
+* ``decomposed``  — incremental + per-SCC/component ILP decomposition
+                    (the default scheduler configuration)
+* ``warm``        — repeat scheduling through the structural schedule
+                    cache (``repro.core.schedcache``)
+
+Each timing is best-of-``POLYTOPS_BENCH_REPS`` (default 3) of
+``PolyTOPSScheduler.schedule()`` only; dependence analysis is timed
+separately once per kernel.  Emits CSV rows to stdout and writes
+``BENCH_scheduler.json`` next to this file with per-kernel milliseconds,
+totals, and the geomean speedup of the default configuration over the
+seed path — the number future PRs regress against.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_scheduler
+Env:   POLYTOPS_BENCH_FAST=1 for a 4-kernel subset,
+       POLYTOPS_BENCH_REPS=N for the repeat count.
 """
 from __future__ import annotations
 
+import json
+import math
+import os
 import sys
 import time
+from pathlib import Path
 
 from repro.core import config as CFG
 from repro.core.deps import compute_dependences
+from repro.core.schedcache import ScheduleCache, cached_schedule_scop
 from repro.core.scheduler import PolyTOPSScheduler
+from repro.core.scops_npu import make_lu16, make_trsml, make_trsmu
 from repro.core.scops_polybench import REGISTRY
 
 KERNELS = ["gemm", "mm2", "atax", "symm", "lu", "covariance",
-           "jacobi2d", "heat3d", "fdtd2d", "durbin"]
+           "jacobi2d", "heat3d", "fdtd2d", "durbin", "mm3", "cholesky",
+           "gramschmidt", "trisolv", "seidel2d"]
+NPU_KERNELS = {"npu_trsml": make_trsml, "npu_trsmu": make_trsmu,
+               "npu_lu16": make_lu16}
+STRATEGIES = [("pluto-style", CFG.pluto_style),
+              ("tensor-style", CFG.tensor_style)]
+
+MODES = {
+    "seed": dict(incremental=False),
+    "incremental": dict(incremental=True, decompose=False),
+    "decomposed": dict(incremental=True, decompose=True),
+}
+
+
+def _time_schedule(scop, cfg, deps, reps: int, **kw):
+    best = float("inf")
+    stats = {}
+    for _ in range(reps):
+        for d in deps:
+            d.satisfied_at = None
+        sch = PolyTOPSScheduler(scop, cfg, deps=deps, **kw)
+        t0 = time.perf_counter()
+        sched = sch.schedule()
+        best = min(best, time.perf_counter() - t0)
+        stats = sched.stats
+    return best, stats
 
 
 def run(out=sys.stdout):
-    print("kernel,strategy,sched_ms,ilp_solves,deps", file=out)
-    fast = __import__("os").environ.get("POLYTOPS_BENCH_FAST") == "1"
-    for name in (KERNELS[:4] if fast else KERNELS):
-        scop = REGISTRY[name]()
-        t0 = time.time()
+    fast = os.environ.get("POLYTOPS_BENCH_FAST") == "1"
+    reps = max(1, int(os.environ.get("POLYTOPS_BENCH_REPS", "3")))
+    makers = {k: REGISTRY[k] for k in (KERNELS[:4] if fast else KERNELS)}
+    if not fast:
+        makers.update(NPU_KERNELS)
+
+    # warm scipy/HiGHS once so the first kernel isn't charged for imports
+    from scipy.optimize import linprog  # noqa: F401
+
+    print("kernel,strategy,mode,sched_ms,ilp_solves,deps", file=out)
+    results = {}
+    for name, maker in makers.items():
+        scop = maker()
+        t0 = time.perf_counter()
         deps = compute_dependences(scop)
-        dep_ms = (time.time() - t0) * 1e3
-        print(f"{name},dependence-analysis,{dep_ms:.1f},0,{len(deps)}", file=out)
-        for cfg in (CFG.pluto_style(), CFG.tensor_style(), CFG.isl_style()):
-            sch = PolyTOPSScheduler(scop, cfg, deps=[d for d in deps])
-            t0 = time.time()
-            sch.schedule()
-            ms = (time.time() - t0) * 1e3
-            print(f"{name},{cfg.name},{ms:.1f},{sch.stats['ilp_solves']},"
-                  f"{len(deps)}", file=out)
+        dep_ms = (time.perf_counter() - t0) * 1e3
+        entry = {"deps_ms": round(dep_ms, 2), "n_deps": len(deps),
+                 "strategies": {}}
+        for sname, mk in STRATEGIES:
+            per = {}
+            for mode, kw in MODES.items():
+                secs, stats = _time_schedule(scop, mk(), deps, reps, **kw)
+                per[mode] = round(secs * 1e3, 2)
+                print(f"{name},{sname},{mode},{secs*1e3:.1f},"
+                      f"{stats.get('ilp_solves', 0)},{len(deps)}", file=out)
+            # warm path: repeat scheduling is a structural-cache lookup
+            cache = ScheduleCache(disk=False)
+            cached_schedule_scop(scop, mk(), cache=cache)
+            t0 = time.perf_counter()
+            cached_schedule_scop(scop, mk(), cache=cache)
+            warm = time.perf_counter() - t0
+            per["warm"] = round(warm * 1e3, 4)
+            print(f"{name},{sname},warm,{warm*1e3:.3f},0,{len(deps)}",
+                  file=out)
+            per["speedup"] = round(per["seed"] / per["decomposed"], 2)
+            entry["strategies"][sname] = per
+        results[name] = entry
+
+    speedups = [e["strategies"][s]["speedup"]
+                for e in results.values() for s in e["strategies"]]
+    totals = {
+        mode: round(sum(e["strategies"][s][mode]
+                        for e in results.values() for s in e["strategies"]), 1)
+        for mode in ("seed", "incremental", "decomposed", "warm")
+    }
+    geomean = round(math.exp(sum(math.log(s) for s in speedups)
+                             / len(speedups)), 2)
+    summary = {
+        "kernels": results,
+        "total_ms": totals,
+        "geomean_speedup_decomposed_vs_seed": geomean,
+        "reps": reps,
+        "fast": fast,
+    }
+    out_path = Path(__file__).parent / (
+        "BENCH_scheduler_fast.json" if fast else "BENCH_scheduler.json")
+    out_path.write_text(json.dumps(summary, indent=2, sort_keys=True))
+    print(f"# geomean speedup (decomposed vs seed): {geomean}x; "
+          f"totals {totals} -> {out_path}", file=out)
+    return summary
 
 
 if __name__ == "__main__":

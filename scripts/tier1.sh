@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite plus a scheduler smoke benchmark
+# under a wall-clock budget, so scheduler perf regressions fail loudly
+# alongside correctness regressions.
+#
+# Usage:  scripts/tier1.sh
+# Env:    POLYTOPS_TIER1_BUDGET  smoke-bench budget in seconds (default 180)
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+BUDGET="${POLYTOPS_TIER1_BUDGET:-180}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q || exit 1
+
+echo "== scheduler smoke bench (fast subset, ${BUDGET}s budget) =="
+BENCH_OUT="$(mktemp)"
+if ! POLYTOPS_BENCH_FAST=1 POLYTOPS_BENCH_REPS=2 \
+     timeout "$BUDGET" python -m benchmarks.bench_scheduler > "$BENCH_OUT"; then
+  echo "SMOKE BENCH FAILED or exceeded ${BUDGET}s budget" >&2
+  tail -5 "$BENCH_OUT" >&2
+  rm -f "$BENCH_OUT"
+  exit 1
+fi
+tail -1 "$BENCH_OUT"
+rm -f "$BENCH_OUT"
+
+# the smoke bench must keep a healthy margin over the seed path
+python - <<'PY' || exit 1
+import json, pathlib, sys
+d = json.loads(pathlib.Path("benchmarks/BENCH_scheduler_fast.json").read_text())
+g = d["geomean_speedup_decomposed_vs_seed"]
+if g < 2.0:
+    sys.exit(f"scheduler speedup regressed: geomean {g}x < 2.0x floor")
+print(f"scheduler speedup OK: geomean {g}x (floor 2.0x)")
+PY
+echo "== tier-1 gate passed =="

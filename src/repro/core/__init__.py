@@ -20,11 +20,13 @@ from .config import (DimConfig, Directive, FusionSpec, SchedulerConfig,
                      bigloops_style, feautrier_style, isl_style, pluto_style,
                      tensor_style)
 from .deps import compute_dependences
+from .schedcache import ScheduleCache, cached_schedule_scop
 from .scheduler import PolyTOPSScheduler, Schedule, SchedulingError, schedule_scop
 from .scop import Scop
 
 __all__ = [
-    "Scop", "schedule_scop", "PolyTOPSScheduler", "Schedule",
+    "Scop", "schedule_scop", "cached_schedule_scop", "ScheduleCache",
+    "PolyTOPSScheduler", "Schedule",
     "SchedulingError", "SchedulerConfig", "DimConfig", "Directive",
     "FusionSpec", "compute_dependences", "config", "pluto_style",
     "tensor_style", "isl_style", "feautrier_style", "bigloops_style",

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .config import SchedulerConfig, tensor_style
 from .postproc import find_tilable_bands
+from .schedcache import cached_schedule_scop
 from .scheduler import Schedule, schedule_scop
 from .scop import Scop
 
@@ -99,7 +100,9 @@ def plan_matmul(m: int, n: int, k: int,
     scop = _matmul_scop(m, n, k)
     cfg = tensor_style()
     cfg.auto_vectorize = True
-    sched = schedule_scop(scop, cfg)
+    # structural cache: repeat plans for the same (m, n, k) shape are a
+    # lookup, persisted on disk across serving/benchmark processes
+    sched = cached_schedule_scop(scop, cfg)
     order = _order_from_schedule(sched)
     vec = None
     stmt = scop.statements[0]
@@ -124,7 +127,7 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
             with s.loop("d", 0, "D"):
                 s.stmt("S[q,kk] = S[q,kk] + Qm[q,d] * Km[kk,d]")
     cfg = tensor_style()
-    sched = schedule_scop(s, cfg)
+    sched = cached_schedule_scop(s, cfg)
     order = _order_from_schedule(sched)
     tile = _fit_tiles(order, {"q": seq_q, "kk": seq_k, "d": head_dim}, "d")
     # flash blocking: q and k tiles bounded for the online-softmax state

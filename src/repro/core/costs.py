@@ -17,9 +17,33 @@ from typing import Dict, List, Sequence
 
 from .affine import Affine, affine_eval
 from .deps import Dependence
-from .farkas import add_farkas_nonneg
+from .farkas import add_farkas_nonneg, farkas_expansion, replay_farkas
 from .ilp import ILPProblem
 from .scop import Scop, Statement
+
+
+def cached_farkas(prob: ILPProblem, cache, key: str, dep: Dependence,
+                  build, prefix: str) -> None:
+    """Add dep's Farkas-linearized constraint to ``prob``, memoized in
+    ``cache`` (dict or None).  ``build() -> (coef_of_z, const_term)`` is
+    only called on a miss.
+
+    Expansions are dimension-independent (schedule-coefficient names
+    don't mention the dim), so dimension k+1 replays the expansion
+    memoized at dimension k instead of re-deriving the coefficient maps.
+    (Pluto-style Fourier–Motzkin projection of the multipliers was
+    evaluated here and rejected: on these dependence polyhedra it
+    densifies the system and slows HiGHS by an order of magnitude.)"""
+    if cache is not None:
+        ck = (key, dep.id)
+        exp = cache.get(ck)
+        if exp is None:
+            coef, const = build()
+            exp = cache[ck] = farkas_expansion(dep.cons, coef, const, prefix)
+        replay_farkas(prob, exp)
+        return
+    coef, const = build()
+    replay_farkas(prob, farkas_expansion(dep.cons, coef, const, prefix))
 
 
 def t_it(s: Statement, k: int) -> str:
@@ -64,15 +88,17 @@ def _merge(a: Affine, b: Affine) -> Affine:
 # proximity (Pluto bounding function): u·N + w − (φ_R − φ_S) ≥ 0
 # ---------------------------------------------------------------------------
 
-def setup_proximity(prob: ILPProblem, deps: Sequence[Dependence], params, dim: int):
+def setup_proximity(prob: ILPProblem, deps: Sequence[Dependence], params, dim: int,
+                    cache=None):
     u_vars = [prob.ensure_var(f"u_{p}", lb=0, ub=None, integer=True) for p in params]
     w = prob.ensure_var("w", lb=0, ub=None, integer=True)
     for dep in deps:
-        coef, const = phi_coef_map(dep, params, negate=True)  # −(φ_R − φ_S)
-        for p in params:
-            coef[p] = _merge(coef.get(p, {}), {f"u_{p}": Fraction(1)})
-        const = _merge(const, {w: Fraction(1)})
-        add_farkas_nonneg(prob, dep.cons, coef, const, tag="p")
+        def build(dep=dep):
+            coef, const = phi_coef_map(dep, params, negate=True)  # −(φ_R − φ_S)
+            for p in params:
+                coef[p] = _merge(coef.get(p, {}), {f"u_{p}": Fraction(1)})
+            return coef, _merge(const, {w: Fraction(1)})
+        cached_farkas(prob, cache, "proximity", dep, build, f"lp{dep.id}")
     stages: List[Affine] = []
     if u_vars:
         stages.append({u: Fraction(1) for u in u_vars})
@@ -84,14 +110,17 @@ def setup_proximity(prob: ILPProblem, deps: Sequence[Dependence], params, dim: i
 # feautrier: maximize the number of strongly satisfied dependences
 # ---------------------------------------------------------------------------
 
-def setup_feautrier(prob: ILPProblem, deps: Sequence[Dependence], params, dim: int):
+def setup_feautrier(prob: ILPProblem, deps: Sequence[Dependence], params, dim: int,
+                    cache=None):
     es = []
     for dep in deps:
         e = prob.ensure_var(f"e_{dep.id}", lb=0, ub=1, integer=True)
         es.append(e)
-        coef, const = phi_coef_map(dep, params)
-        const = _merge(const, {e: Fraction(-1)})   # φ_R − φ_S − e ≥ 0
-        add_farkas_nonneg(prob, dep.cons, coef, const, tag="f")
+
+        def build(dep=dep, e=e):
+            coef, const = phi_coef_map(dep, params)
+            return coef, _merge(const, {e: Fraction(-1)})   # φ_R − φ_S − e ≥ 0
+        cached_farkas(prob, cache, "feautrier", dep, build, f"lf{dep.id}")
     if not es:
         return []
     return [{e: Fraction(-1) for e in es}]  # minimize −Σe = maximize satisfied

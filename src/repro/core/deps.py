@@ -32,12 +32,23 @@ class Dependence:
     kind: str                     # 'flow' | 'anti' | 'output'
     array: str
     satisfied_at: Optional[int] = None   # schedule dim that strongly satisfies
+    # lazily-built CompiledPolyhedron over cons (see compiled_poly());
+    # excluded from pickling so cached Schedules stay lean
+    _compiled: Optional[object] = field(default=None, repr=False, compare=False)
 
     def src_var(self, k: int) -> str:
         return f"s{k}"
 
     def tgt_var(self, k: int) -> str:
         return f"t{k}"
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_compiled"] = None
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
 
     def __repr__(self):
         s = f"dep#{self.id} {self.kind} {self.array} S{self.source.index}->S{self.target.index} d={self.depth}"
@@ -168,6 +179,19 @@ def _deps_for_pair(scop, s, r, a, b, kind, ctx, start_id) -> List[Dependence]:
 # schedule-row evaluation over a dependence
 # ---------------------------------------------------------------------------
 
+def compiled_poly(dep: Dependence, params: Sequence[str]):
+    """The dependence polyhedron compiled once per Dependence (numeric LP
+    matrices cached), reused for every distance/satisfaction query across
+    all scheduling dimensions."""
+    if dep._compiled is None:
+        from .polyhedron import CompiledPolyhedron
+
+        extra = [f"s{k}" for k in range(dep.source.dim)]
+        extra += [f"t{k}" for k in range(dep.target.dim)]
+        extra += list(params)
+        dep._compiled = CompiledPolyhedron(dep.cons, extra)
+    return dep._compiled
+
 def phi_difference(dep: Dependence, row_src: Dict, row_tgt: Dict, params: Sequence[str]) -> Affine:
     """Affine form φ_R(t) − φ_S(s) over the dep polyhedron variables,
     given concrete schedule rows {var: Fraction} keyed by
@@ -188,17 +212,40 @@ def phi_difference(dep: Dependence, row_src: Dict, row_tgt: Dict, params: Sequen
     return expr
 
 
-def dep_distance_range(dep: Dependence, row_src, row_tgt, params):
-    """(min, max) of φ_R − φ_S over the dependence polyhedron."""
+def dep_distance_range(dep: Dependence, row_src, row_tgt, params, cache: bool = True):
+    """(min, max) of φ_R − φ_S over the dependence polyhedron.
+
+    ``cache=True`` optimizes over the per-dependence compiled polyhedron
+    (same results, no LP rebuild); ``cache=False`` is the seed path."""
     diff = phi_difference(dep, row_src, row_tgt, params)
+    if cache:
+        cp = compiled_poly(dep, params)
+        return cp.minimum(diff), cp.maximum(diff)
     lo = minimum(dep.cons, diff)
     hi = maximum(dep.cons, diff)
     return lo, hi
 
 
+def dep_distance_min(dep: Dependence, row_src, row_tgt, params, cache: bool = True):
+    """Just the minimum dependence distance (satisfaction tests) — lets
+    hot callers skip the max-side LP when parallelism is already ruled
+    out."""
+    diff = phi_difference(dep, row_src, row_tgt, params)
+    if cache:
+        return compiled_poly(dep, params).minimum(diff)
+    return minimum(dep.cons, diff)
+
+
+def dep_distance_max(dep: Dependence, row_src, row_tgt, params, cache: bool = True):
+    diff = phi_difference(dep, row_src, row_tgt, params)
+    if cache:
+        return compiled_poly(dep, params).maximum(diff)
+    return maximum(dep.cons, diff)
+
+
 def strongly_satisfied(dep: Dependence, row_src, row_tgt, params) -> bool:
     diff = phi_difference(dep, row_src, row_tgt, params)
-    lo = minimum(dep.cons, diff)
+    lo = compiled_poly(dep, params).minimum(diff)
     return lo is not None and lo >= 1
 
 

@@ -15,6 +15,7 @@ the fresh multipliers λ to the ILP variables — exactly what
 from __future__ import annotations
 
 import itertools
+from dataclasses import dataclass
 from fractions import Fraction
 from typing import Dict, List, Sequence, Tuple
 
@@ -25,22 +26,38 @@ from .polyhedron import Constraint
 _counter = itertools.count()
 
 
-def add_farkas_nonneg(
-    prob: ILPProblem,
+@dataclass
+class FarkasExpansion:
+    """The multiplier variables and equality rows produced by one Farkas
+    linearization — a pure, problem-independent value.
+
+    The scheduler re-adds the *same* expansion for every dependence at
+    every scheduling dimension (the schedule-coefficient variable names
+    do not mention the dimension), so expansions are computed once per
+    (dependence, form) and replayed into each fresh per-dimension ILP
+    via :func:`replay_farkas` (see ``PolyTOPSScheduler._farkas_spec``).
+    """
+    multipliers: List[Tuple[str, bool]]       # (name, nonneg?)
+    rows: List[Tuple[Affine, str]]            # all '==0'
+
+
+def farkas_expansion(
     poly: Sequence[Constraint],
     coef_of_z: Dict[str, Affine],
     const_term: Affine,
-    tag: str = "",
-) -> None:
-    """Add constraints enforcing  f(z) = Σ_z coef_of_z[z]·z + const ≥ 0
+    prefix: str,
+) -> FarkasExpansion:
+    """Compute constraints enforcing  f(z) = Σ_z coef_of_z[z]·z + const ≥ 0
     over ``poly``. coef_of_z / const_term are affine over ILP vars.
+    Multiplier names are ``{prefix}_0 .. {prefix}_n`` — the caller picks a
+    prefix unique within any problem the expansion is replayed into.
     """
-    uid = next(_counter)
-    lam0 = prob.var(f"l{uid}_0{tag}", lb=0, integer=False)
+    lam0 = f"{prefix}_0"
+    multipliers: List[Tuple[str, bool]] = [(lam0, True)]
     lams: List[Tuple[str, Constraint]] = []
     for i, (expr, kind) in enumerate(poly):
-        name = f"l{uid}_{i + 1}{tag}"
-        prob.var(name, lb=0 if kind == ">=0" else None, integer=False)
+        name = f"{prefix}_{i + 1}"
+        multipliers.append((name, kind == ">=0"))
         lams.append((name, (expr, kind)))
 
     zvars = set()
@@ -48,6 +65,7 @@ def add_farkas_nonneg(
         zvars.update(k for k in expr if k != 1)
     zvars.update(coef_of_z)
 
+    rows: List[Tuple[Affine, str]] = []
     # coefficient of each z variable: coef_of_z[z] − Σ λᵢ Aᵢ[z] == 0
     for z in sorted(zvars):
         eq: Affine = dict(coef_of_z.get(z, {}))
@@ -56,7 +74,7 @@ def add_farkas_nonneg(
             if c:
                 eq[name] = eq.get(name, Fraction(0)) - c
         if eq:
-            prob.add(eq, "==0")
+            rows.append((eq, "==0"))
     # constant: const_term − λ₀ − Σ λᵢ bᵢ == 0
     eq = dict(const_term)
     eq[lam0] = eq.get(lam0, Fraction(0)) - 1
@@ -64,4 +82,30 @@ def add_farkas_nonneg(
         c = expr.get(1, Fraction(0))
         if c:
             eq[name] = eq.get(name, Fraction(0)) - c
-    prob.add(eq, "==0")
+    rows.append((eq, "==0"))
+    return FarkasExpansion(multipliers, rows)
+
+
+def replay_farkas(prob: ILPProblem, exp: FarkasExpansion) -> None:
+    """Add a (possibly memoized) expansion's multipliers and rows to a
+    problem. Row dicts are copied so the cached expansion stays pristine."""
+    for name, nonneg in exp.multipliers:
+        prob.var(name, lb=0 if nonneg else None, integer=False)
+    for expr, kind in exp.rows:
+        prob.add(expr, kind)
+
+
+def add_farkas_nonneg(
+    prob: ILPProblem,
+    poly: Sequence[Constraint],
+    coef_of_z: Dict[str, Affine],
+    const_term: Affine,
+    tag: str = "",
+) -> None:
+    """One-shot convenience: expand with a globally-unique prefix and add
+    to ``prob`` immediately (the seed interface, still used by callers
+    that don't memoize)."""
+    uid = next(_counter)
+    replay_farkas(
+        prob, farkas_expansion(poly, coef_of_z, const_term, f"l{uid}{tag}")
+    )

@@ -14,13 +14,39 @@ functions are "minimized in lexicographic order").
 
 All problem data is rational; solutions are returned as Fractions with
 integer variables snapped exactly.
+
+Incremental core (the compile-time hot path)
+--------------------------------------------
+
+The scheduler solves *one* constraint system under many objectives:
+each lexicographic stage only appends a single objective-fixing row.
+The seed implementation cloned the whole model per ``lexmin`` and
+re-materialized dense numpy matrices from Fraction dicts on every
+``solve_min``.  Now:
+
+* :class:`CompiledProblem` keeps the constraint system as growing
+  CSR-style ``(indptr, indices, data)`` triplets with a stable variable
+  index; Fraction→float conversion happens exactly once per row.
+* ``lexmin`` runs append-only on the live problem — ``push()`` marks the
+  model, fixing rows are appended per stage, ``pop()`` rewinds both the
+  exact constraint list and the compiled arrays.  The exact-rational
+  engine reads the same appended constraint list, so the cross-check
+  oracle (highs vs exact) exercises the identical incremental path.
+* Warm-start stage skipping: every objective the scheduler emits is
+  over integer variables, so when the previous stage's solution already
+  attains the objective's lower bound implied by variable bounds, the
+  stage is provably optimal at that point and the LP call is skipped
+  (only the fixing row is appended).
+
+``ILPProblem(..., incremental=False)`` preserves the seed clone+dense
+pipeline verbatim for benchmarking and differential tests.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .affine import Affine
 
@@ -35,6 +61,204 @@ class _Var:
     integer: bool
 
 
+class CompiledProblem:
+    """Append-only numeric (float/CSR) image of an :class:`ILPProblem`.
+
+    ``>=0`` rows are stored negated as ``A_ub · x <= b_ub`` and ``==0``
+    rows as ``A_eq · x = b_eq`` — exactly the layout scipy's linprog
+    consumes, so a solve is triplet→csr_matrix + one HiGHS call with no
+    per-row Python work.  ``truncate`` rewinds to an earlier row/var
+    count (lexmin fixing rows, temporary feasibility probes).
+    """
+
+    def __init__(self):
+        self.names: List[str] = []
+        self.idx: Dict[str, int] = {}
+        self.lb: List[float] = []
+        self.ub: List[float] = []
+        self.integrality: List[int] = []
+        self.kinds: List[str] = []          # source-row kinds, append order
+        self.ub_indptr: List[int] = [0]
+        self.ub_indices: List[int] = []
+        self.ub_data: List[float] = []
+        self.ub_rhs: List[float] = []
+        self.eq_indptr: List[int] = [0]
+        self.eq_indices: List[int] = []
+        self.eq_data: List[float] = []
+        self.eq_rhs: List[float] = []
+        self._mats = None   # matrices of the last linprog() call
+
+    @property
+    def n_vars(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.kinds)
+
+    def add_var(self, name: str, lb, ub, integer: bool) -> None:
+        self.idx[name] = len(self.names)
+        self.names.append(name)
+        self.lb.append(-INF if lb is None else float(lb))
+        self.ub.append(INF if ub is None else float(ub))
+        self.integrality.append(1 if integer else 0)
+
+    def add_cons_batch(self, rows) -> None:
+        """Append many constraint rows with one batched Fraction→float
+        conversion (see ``linalg_q.fractions_to_float_array``) — the sync
+        point where whole Farkas expansions cross into float-land."""
+        from .linalg_q import fractions_to_float_array
+
+        flat = []
+        meta = []
+        for expr, kind in rows:
+            cols = []
+            for k, v in expr.items():
+                if k != 1 and v:
+                    cols.append(self.idx[k])
+                    flat.append(v)
+            flat.append(expr.get(1, 0))
+            meta.append((kind, cols))
+        arr = fractions_to_float_array(flat)
+        pos = 0
+        for kind, cols in meta:
+            n = len(cols)
+            coefs = arr[pos:pos + n]
+            const = float(arr[pos + n])
+            pos += n + 1
+            if kind == ">=0":   # row·x + const >= 0  →  -row·x <= const
+                self.ub_indices.extend(cols)
+                self.ub_data.extend((-coefs).tolist())
+                self.ub_indptr.append(len(self.ub_indices))
+                self.ub_rhs.append(const)
+            else:
+                self.eq_indices.extend(cols)
+                self.eq_data.extend(coefs.tolist())
+                self.eq_indptr.append(len(self.eq_indices))
+                self.eq_rhs.append(-const)
+            self.kinds.append(kind)
+
+    def add_con(self, expr: Affine, kind: str) -> None:
+        idx = self.idx
+        const = float(expr.get(1, 0))
+        if kind == ">=0":   # row·x + const >= 0  →  -row·x <= const
+            for k, v in expr.items():
+                if k != 1 and v:
+                    self.ub_indices.append(idx[k])
+                    self.ub_data.append(-float(v))
+            self.ub_indptr.append(len(self.ub_indices))
+            self.ub_rhs.append(const)
+        else:
+            for k, v in expr.items():
+                if k != 1 and v:
+                    self.eq_indices.append(idx[k])
+                    self.eq_data.append(float(v))
+            self.eq_indptr.append(len(self.eq_indices))
+            self.eq_rhs.append(-const)
+        self.kinds.append(kind)
+
+    def truncate(self, n_vars: int, n_rows: int) -> None:
+        while len(self.kinds) > n_rows:
+            kind = self.kinds.pop()
+            if kind == ">=0":
+                self.ub_indptr.pop()
+                nz = self.ub_indptr[-1]
+                del self.ub_indices[nz:]
+                del self.ub_data[nz:]
+                self.ub_rhs.pop()
+            else:
+                self.eq_indptr.pop()
+                nz = self.eq_indptr[-1]
+                del self.eq_indices[nz:]
+                del self.eq_data[nz:]
+                self.eq_rhs.pop()
+        while len(self.names) > n_vars:
+            del self.idx[self.names.pop()]
+            self.lb.pop()
+            self.ub.pop()
+            self.integrality.pop()
+
+    def linprog(self, objective: Affine):
+        """One scipy HiGHS call over the compiled arrays. Returns the raw
+        scipy result (caller interprets status / converts to exact).
+
+        Goes straight to ``_linprog_highs`` (the exact backend that
+        ``linprog(method='highs')`` dispatches to, with the same solver
+        and status mapping) — the public wrapper re-validates and
+        re-canonicalizes every input on every call, which dominates solve
+        time for the scheduler's many small problems.  Falls back to the
+        public API if the private one ever changes shape."""
+        import numpy as np
+        from scipy.optimize import OptimizeResult
+        from scipy.sparse import csr_matrix
+
+        n = len(self.names)
+        c = np.zeros(n)
+        for k, v in objective.items():
+            if k != 1:
+                c[self.idx[k]] = float(v)
+        a_ub = csr_matrix(
+            (self.ub_data, self.ub_indices, self.ub_indptr),
+            shape=(len(self.ub_rhs), n),
+        )
+        b_ub = np.asarray(self.ub_rhs, dtype=float)
+        a_eq = csr_matrix(
+            (self.eq_data, self.eq_indices, self.eq_indptr),
+            shape=(len(self.eq_rhs), n),
+        )
+        b_eq = np.asarray(self.eq_rhs, dtype=float)
+        bounds = np.column_stack([self.lb, self.ub])
+        integrality = np.asarray(self.integrality)
+        if not integrality.any():
+            integrality = None
+        self._mats = (a_ub, b_ub, a_eq, b_eq)
+        try:
+            from scipy.optimize._linprog_highs import _linprog_highs
+            from scipy.optimize._linprog_util import _LPProblem
+
+            lp = _LPProblem(c, a_ub, b_ub, a_eq, b_eq, bounds, None,
+                            integrality)
+            return OptimizeResult(_linprog_highs(lp, solver=None))
+        except (ImportError, TypeError):  # private API moved: public path
+            from scipy.optimize import linprog
+
+            return linprog(
+                c,
+                A_ub=a_ub if len(b_ub) else None,
+                b_ub=b_ub if len(b_ub) else None,
+                A_eq=a_eq if len(b_eq) else None,
+                b_eq=b_eq if len(b_eq) else None,
+                bounds=bounds if n else None,
+                integrality=integrality,
+                method="highs",
+            )
+
+    def check_solution(self, x, tol: float = 1e-6) -> bool:
+        """Float-level sanity check of a solver solution against the
+        compiled system (the seed's public-``linprog`` path ran scipy's
+        ``_check_result``; going straight to the backend skips it, and
+        HiGHS MIP occasionally reports an infeasible point as optimal).
+        """
+        import numpy as np
+
+        a_ub, b_ub, a_eq, b_eq = self._mats
+        if len(b_ub) and np.max(a_ub @ x - b_ub, initial=0.0) > tol * (
+                1.0 + float(np.max(np.abs(b_ub), initial=0.0))):
+            return False
+        if len(b_eq) and np.max(np.abs(a_eq @ x - b_eq), initial=0.0) > tol * (
+                1.0 + float(np.max(np.abs(b_eq), initial=0.0))):
+            return False
+        lb = np.asarray(self.lb)
+        ub = np.asarray(self.ub)
+        if np.any(x < lb - tol) or np.any(x > ub + tol):
+            return False
+        integ = np.asarray(self.integrality, dtype=bool)
+        if integ.any() and np.max(np.abs(x[integ] - np.round(x[integ])),
+                                  initial=0.0) > 1e-5:
+            return False
+        return True
+
+
 class ILPProblem:
     """An ILP over named variables with affine constraints.
 
@@ -42,10 +266,13 @@ class ILPProblem:
     '>=0' or '==0'.
     """
 
-    def __init__(self, engine: str = "highs"):
+    def __init__(self, engine: str = "highs", incremental: bool = True):
         self.vars: Dict[str, _Var] = {}
         self.cons: List[tuple[Affine, str]] = []
         self.engine = engine
+        self.incremental = incremental
+        self.stages_skipped = 0     # warm-skipped stages of the last lexmin
+        self._compiled: Optional[CompiledProblem] = None
 
     # -- model building ---------------------------------------------------
     def var(self, name: str, lb=0, ub=None, integer: bool = True) -> str:
@@ -72,25 +299,212 @@ class ILPProblem:
         self.cons.append((dict(expr), kind))
 
     def clone(self) -> "ILPProblem":
-        p = ILPProblem(self.engine)
+        p = ILPProblem(self.engine, self.incremental)
         p.vars = {k: _Var(v.name, v.lb, v.ub, v.integer) for k, v in self.vars.items()}
         p.cons = [(dict(e), k) for e, k in self.cons]
         return p
+
+    # -- incremental state -------------------------------------------------
+    def _compile(self) -> CompiledProblem:
+        """Sync the compiled image with vars/cons added since last call."""
+        c = self._compiled
+        if c is None:
+            c = self._compiled = CompiledProblem()
+        if c.n_vars < len(self.vars):
+            names = list(self.vars)
+            for name in names[c.n_vars:]:
+                v = self.vars[name]
+                c.add_var(name, v.lb, v.ub, v.integer)
+        pending = self.cons[c.n_rows:]
+        if pending:
+            c.add_cons_batch(pending)
+        return c
+
+    def push(self) -> Tuple[int, int]:
+        """Mark the model; :meth:`pop` rewinds vars/cons added after."""
+        return (len(self.vars), len(self.cons))
+
+    def pop(self, mark: Tuple[int, int]) -> None:
+        n_vars, n_cons = mark
+        del self.cons[n_cons:]
+        if len(self.vars) > n_vars:
+            for name in list(self.vars)[n_vars:]:
+                del self.vars[name]
+        if self._compiled is not None:
+            self._compiled.truncate(n_vars, n_cons)
 
     # -- solving -----------------------------------------------------------
     def _order(self) -> List[str]:
         return list(self.vars)
 
-    def solve_min(self, objective: Affine) -> Optional[tuple[Fraction, Dict[str, Fraction]]]:
+    def solve_min(self, objective: Affine, want=None) -> Optional[tuple[Fraction, Dict[str, Fraction]]]:
         """Minimize one objective. Returns (value, solution) or None if
-        infeasible. Raises Unbounded if unbounded."""
+        infeasible. Raises Unbounded if unbounded.
+
+        ``want`` (incremental highs path only): iterable of variable
+        names to convert to exact Fractions in the returned solution, in
+        addition to the objective's own variables — the float→Fraction
+        snap of hundreds of Farkas multipliers per solve is pure waste
+        for callers that only read schedule coefficients.  ``None``
+        converts everything (the seed behaviour)."""
         if self.engine == "exact":
             return _exact_solve(self, objective)
+        if self.incremental:
+            return _highs_solve_compiled(self, objective, want)
         return _highs_solve(self, objective)
 
-    def lexmin(self, objectives: Sequence[Affine]) -> Optional[Dict[str, Fraction]]:
+    def _objective_lower_bound(self, objective: Affine) -> Optional[Fraction]:
+        """Lower bound of the objective implied by variable bounds alone,
+        or None when some needed bound is missing (unbounded side)."""
+        lb = objective.get(1, Fraction(0))
+        for k, c in objective.items():
+            if k == 1 or c == 0:
+                continue
+            v = self.vars[k]
+            b = v.lb if c > 0 else v.ub
+            if b is None:
+                return None
+            lb += c * b
+        return lb
+
+    # big-M weights above this are unsafe under HiGHS float tolerances
+    _MAX_COMBINE_WEIGHT = 10 ** 6
+
+    def _stage_box(self, obj: Affine) -> Tuple[Fraction, Fraction]:
+        """(min, max) of obj over the variable boxes (vars box-bounded)."""
+        lo = hi = obj.get(1, Fraction(0))
+        for k, c in obj.items():
+            if k == 1 or c == 0:
+                continue
+            v = self.vars[k]
+            lo += c * (v.lb if c > 0 else v.ub)
+            hi += c * (v.ub if c > 0 else v.lb)
+        return lo, hi
+
+    def _combine_tail(self, objectives: Sequence[Affine]):
+        """Split the stage list into ``(head, combined, suffix)``: the
+        maximal safe suffix collapsed into one exact weighted objective
+        (``combined`` is None and ``suffix`` empty when nothing combines;
+        ``suffix`` keeps the original stages as the fallback plan).
+
+        Valid whenever every combined stage is integer-valued (integer
+        coefficients over integer variables) with finite variable boxes:
+        with W > (box range of the lower-priority remainder), minimizing
+        W·f + g forces f to its lexicographic optimum exactly, because f
+        moves in integer steps.  The scheduler's canonical tail
+        (Σ T_par, Σ T_it, weighted order, Σ T_cst) — typically 4 MILP
+        solves per lexmin — becomes a single solve.  Weights are capped
+        so float objectives stay well inside HiGHS tolerances."""
+        def combinable(obj: Affine) -> bool:
+            for k, c in obj.items():
+                if k == 1 or c == 0:
+                    continue
+                if c.denominator != 1:
+                    return False
+                v = self.vars[k]
+                if (not v.integer or v.lb is None or v.ub is None
+                        or v.lb.denominator != 1 or v.ub.denominator != 1):
+                    return False
+            return True
+
+        n = len(objectives)
+        if n < 2 or not combinable(objectives[-1]):
+            return list(objectives), None, []
+        combined = dict(objectives[-1])
+        clo, chi = self._stage_box(combined)
+        first = n - 1                      # index of first absorbed stage
+        while first > 0 and combinable(objectives[first - 1]):
+            w = chi - clo + 1
+            if w > self._MAX_COMBINE_WEIGHT:
+                break
+            stage = objectives[first - 1]
+            slo, shi = self._stage_box(stage)
+            for k, c in stage.items():
+                combined[k] = combined.get(k, Fraction(0)) + w * c
+            clo, chi = w * slo + clo, w * shi + chi
+            first -= 1
+        if first == n - 1:
+            return list(objectives), None, []
+        return (list(objectives[:first]), combined,
+                [dict(o) for o in objectives[first:]])
+
+    def lexmin(self, objectives: Sequence[Affine], want=None) -> Optional[Dict[str, Fraction]]:
         """Lexicographic minimization: minimize objectives[0], fix its
-        value, then objectives[1], ... Returns the final solution."""
+        value, then objectives[1], ... Returns the final solution.
+
+        Incremental mode appends one fixing row per stage to the live
+        model (rewound on exit) instead of cloning; box-bounded integer
+        suffix stages are collapsed into one weighted solve; a stage
+        whose previous-stage solution already attains the bound-implied
+        optimum is skipped outright (see module docstring).  ``want``
+        limits exact solution conversion as in :meth:`solve_min` (every
+        stage objective's variables are converted regardless)."""
+        if not self.incremental:
+            return self._lexmin_cloned(objectives)
+        if not objectives:
+            objectives = [{}]
+        head, combined, suffix = self._combine_tail(objectives)
+        if want is not None:
+            want = set(want)
+            for obj in objectives:
+                want.update(k for k in obj if k != 1)
+        mark = self.push()
+        try:
+            self.stages_skipped = 0
+            sol, ok = self._run_stages(head, None, want)
+            if not ok:
+                return None
+            if combined is not None:
+                try:
+                    sol, ok = self._run_stages([combined], sol, want,
+                                               raise_trouble=True)
+                except NumericalTrouble:
+                    # HiGHS choked on the big-M objective: solve the
+                    # original suffix stage by stage instead
+                    sol, ok = self._run_stages(suffix, sol, want)
+                if not ok:
+                    return None
+            return sol
+        finally:
+            self.pop(mark)
+
+    def _run_stages(self, objs, sol, want, raise_trouble: bool = False):
+        """Run lexicographic stages on the live model, appending one
+        fixing row per stage.  Returns (solution, feasible)."""
+        for obj in objs:
+            val: Optional[Fraction] = None
+            if sol is not None:
+                bound = self._objective_lower_bound(obj)
+                if bound is not None:
+                    cur = obj.get(1, Fraction(0))
+                    for k, c in obj.items():
+                        if k != 1:
+                            cur += c * sol[k]
+                    if cur == bound:
+                        val = cur   # provably optimal: skip the solve
+                        self.stages_skipped += 1
+            if val is None:
+                if raise_trouble and self.engine != "exact":
+                    res = _highs_solve_compiled(self, obj, want,
+                                                on_trouble="raise")
+                else:
+                    res = self.solve_min(obj, want)
+                if res is None:
+                    return None, False
+                val, sol = res
+            # fix this objective at its optimum before the next stage.
+            # obj ≤ val (with obj ≥ val implied by optimality) — the
+            # one-sided form is equivalent to the seed's equality row but
+            # measurably gentler on HiGHS: the equality chains it builds
+            # can make HiGHS mis-report optimality/infeasibility (see
+            # check_solution), the inequality form does not.
+            fixed = {k: -c for k, c in obj.items()}
+            fixed[1] = fixed.get(1, Fraction(0)) + val
+            self.add(fixed, ">=0")
+        return sol, True
+
+    def _lexmin_cloned(self, objectives: Sequence[Affine]) -> Optional[Dict[str, Fraction]]:
+        """The seed clone-per-lexmin path (kept for benchmarking)."""
         prob = self.clone()
         sol: Optional[Dict[str, Fraction]] = None
         if not objectives:
@@ -100,14 +514,13 @@ class ILPProblem:
             if res is None:
                 return None
             val, sol = res
-            # fix this objective at its optimum before the next stage
             fixed = dict(obj)
             fixed[1] = fixed.get(1, Fraction(0)) - val
             prob.add(fixed, "==0")
         return sol
 
     def feasible(self) -> bool:
-        return self.solve_min({}) is not None
+        return self.solve_min({}, want=()) is not None
 
 
 class Unbounded(Exception):
@@ -170,6 +583,51 @@ def _highs_solve(prob: ILPProblem, objective: Affine):
     sol: Dict[str, Fraction] = {}
     for i, name in enumerate(names):
         x = res.x[i]
+        if prob.vars[name].integer:
+            sol[name] = Fraction(round(x))
+        else:
+            sol[name] = Fraction(x).limit_denominator(10**9)
+    val = Fraction(0)
+    for k, v in objective.items():
+        val += v if k == 1 else v * sol[k]
+    return val, sol
+
+
+class NumericalTrouble(Exception):
+    """HiGHS reported success but the point fails validation (or reported
+    a non-status error). Raised only when the caller asked to handle the
+    retry itself (``on_trouble='raise'``)."""
+
+
+def _highs_solve_compiled(prob: ILPProblem, objective: Affine, want=None,
+                          on_trouble: str = "exact"):
+    """Incremental-path twin of :func:`_highs_solve`: same status
+    handling and exact solution snapping, but the constraint matrices
+    come from the cached :class:`CompiledProblem` arrays and only the
+    requested variables (``want`` + objective vars; None = all) are
+    converted to Fractions.  Every accepted point is validated against
+    the compiled system; invalid points go to the exact engine (seed
+    semantics) or raise :class:`NumericalTrouble` (``on_trouble='raise'``)."""
+    comp = prob._compile()
+    res = comp.linprog(objective)
+    if res.status == 2:  # infeasible
+        return None
+    if res.status == 3:
+        raise Unbounded(str(objective))
+    if not res.success or not comp.check_solution(res.x):
+        # numerical trouble: retry with exact engine
+        if on_trouble == "raise":
+            raise NumericalTrouble(str(objective))
+        return _exact_solve(prob, objective)
+    if want is None:
+        names = comp.names
+    else:
+        names = {k for k in objective if k != 1}
+        names.update(k for k in want if k in comp.idx)
+    sol: Dict[str, Fraction] = {}
+    idx = comp.idx
+    for name in names:
+        x = res.x[idx[name]]
         if prob.vars[name].integer:
             sol[name] = Fraction(round(x))
         else:

@@ -143,7 +143,7 @@ def row_basis(h: Mat) -> Mat:
     if not h:
         return []
     r, pivots = rref(h)
-    return [scale_to_int(r[i]) for i in range(len(pivots))]
+    return batch_scale_to_int(r[: len(pivots)])
 
 
 def orth_complement_rows(h: Mat, n: int) -> Mat:
@@ -163,11 +163,8 @@ def orth_complement_rows(h: Mat, n: int) -> Mat:
     for i in range(n):
         for j in range(n):
             comp[i][j] -= proj[i][j]
-    out: Mat = []
-    for row in comp:
-        if any(x != 0 for x in row):
-            out.append(scale_to_int(row))
-    return out
+    return batch_scale_to_int(
+        [row for row in comp if any(x != 0 for x in row)])
 
 
 def orth_complement_basis(h: Mat, n: int) -> Mat:
@@ -179,7 +176,7 @@ def orth_complement_basis(h: Mat, n: int) -> Mat:
     if not rows:
         return []
     r, pivots = rref(rows)
-    return [scale_to_int(r[i]) for i in range(len(pivots))]
+    return batch_scale_to_int(r[: len(pivots)])
 
 
 def scale_to_int(row: Vec) -> Vec:
@@ -195,6 +192,31 @@ def scale_to_int(row: Vec) -> Vec:
     if g > 1:
         ints = [v // g for v in ints]
     return [Fraction(v) for v in ints]
+
+
+def batch_scale_to_int(rows: Mat) -> Mat:
+    """:func:`scale_to_int` over many rows — the single entry point the
+    basis/projector helpers funnel through (a vectorized implementation
+    would slot in here)."""
+    return [scale_to_int(r) for r in rows]
+
+
+def fractions_to_float_array(vals: Sequence[Fraction]):
+    """Batched exact→float conversion (numpy float64 array).
+
+    Fast path: when every value fits int64 as numerator/denominator
+    pairs, the division runs vectorized in numpy instead of calling
+    ``Fraction.__float__`` per element — this is the Fraction→numeric
+    boundary the compiled ILP layer crosses for every constraint row.
+    Falls back to per-element conversion for huge rationals."""
+    import numpy as np
+
+    try:
+        num = np.array([v.numerator for v in vals], dtype=np.int64)
+        den = np.array([v.denominator for v in vals], dtype=np.int64)
+        return num / den
+    except (OverflowError, TypeError):
+        return np.array([float(v) for v in vals], dtype=np.float64)
 
 
 def hnf_row(a: List[List[int]]) -> tuple[List[List[int]], List[List[int]]]:

@@ -62,6 +62,113 @@ def maximum(cons: Sequence[Constraint], obj: Affine) -> Optional[Fraction]:
     return -m
 
 
+class CompiledPolyhedron:
+    """Reusable LP over a *fixed* constraint system.
+
+    The scheduler optimizes many affine forms (per-row dependence
+    distances, satisfaction probes) over the same dependence polyhedron
+    at every scheduling dimension.  Building the LP once and swapping
+    only the objective/extra rows amortizes the Fraction→float
+    compilation across the whole run; results are identical to the
+    module-level :func:`minimum`/:func:`maximum`/:func:`feasible`.
+    """
+
+    def __init__(self, cons: Sequence[Constraint], extra_vars: Iterable[str] = ()):
+        self.prob = _build_lp(cons, extra_vars)
+        self.prob._compile()
+        self._subst = self._hull_substitution(cons)
+        self._memo: Dict[tuple, Optional[Fraction]] = {}
+
+    @staticmethod
+    def _hull_substitution(cons: Sequence[Constraint]):
+        """Pivot-variable substitution map from the rref of the equality
+        rows (the polyhedron's affine hull): pivot var -> affine expr over
+        the free variables.  Used to reduce objectives before solving —
+        roughly half the scheduler's distance queries become constants
+        (e.g. schedule rows equal on both dependence endpoints) and need
+        no LP at all."""
+        from .linalg_q import rref
+
+        eqs = [e for e, k in cons if k == "==0"]
+        if not eqs:
+            return {}
+        vars_ = sorted({v for e in eqs for v in e if v != 1})
+        m = [[Fraction(e.get(v, 0)) for v in vars_] + [Fraction(e.get(1, 0))]
+             for e in eqs]
+        r, pivots = rref(m)
+        subst: Dict[str, Affine] = {}
+        for i, pc in enumerate(pivots):
+            if pc >= len(vars_):
+                continue   # pivot on the constant column: inconsistent row
+            # row: x_pc + Σ_j r_ij x_j + r_ib == 0  →  x_pc = −Σ r_ij x_j − r_ib
+            expr: Affine = {}
+            for j, v in enumerate(vars_):
+                if j != pc and r[i][j]:
+                    expr[v] = -r[i][j]
+            if r[i][len(vars_)]:
+                expr[1] = -r[i][len(vars_)]
+            subst[vars_[pc]] = expr
+        return subst
+
+    def reduce(self, obj: Affine) -> Affine:
+        """Substitute the affine hull into ``obj`` (equal pointwise on the
+        polyhedron)."""
+        if not self._subst:
+            return obj
+        red: Affine = {}
+        for k, c in obj.items():
+            if k != 1 and k in self._subst:
+                for k2, c2 in self._subst[k].items():
+                    red[k2] = red.get(k2, Fraction(0)) + c * c2
+            else:
+                red[k] = red.get(k, Fraction(0)) + c
+        return {k: v for k, v in red.items() if v != 0}
+
+    def _ensure(self, obj: Affine) -> None:
+        for k in obj:
+            if k != 1:
+                self.prob.ensure_var(k, lb=None, integer=False)
+
+    def minimum(self, obj: Affine) -> Optional[Fraction]:
+        """Exact rational min of obj; assumes the polyhedron is non-empty
+        (dependence polyhedra are feasible by construction)."""
+        red = self.reduce(obj)
+        if not any(k != 1 for k in red):
+            return red.get(1, Fraction(0))   # constant on the hull
+        key = tuple(sorted((str(k), v) for k, v in red.items()))
+        if key in self._memo:
+            return self._memo[key]
+        self._ensure(red)
+        try:
+            r = self.prob.solve_min(dict(red), want=())
+        except Unbounded:
+            self._memo[key] = out = Fraction(-(10 ** 18))  # unbounded below
+            return out
+        out = None if r is None else r[0]
+        self._memo[key] = out
+        return out
+
+    def maximum(self, obj: Affine) -> Optional[Fraction]:
+        m = self.minimum({k: -v for k, v in obj.items()})
+        if m is None:
+            return None
+        return -m
+
+    def feasible_with(self, extra: Sequence[Constraint] = ()) -> bool:
+        """Feasibility of the base polyhedron ∩ ``extra`` rows; the extra
+        rows are appended and rewound around a single solve."""
+        mark = self.prob.push()
+        try:
+            for expr, kind in extra:
+                for k in expr:
+                    if k != 1:
+                        self.prob.ensure_var(k, lb=None, integer=False)
+                self.prob.add(expr, kind)
+            return self.prob.feasible()
+        finally:
+            self.prob.pop(mark)
+
+
 # ---------------------------------------------------------------------------
 # Fourier–Motzkin elimination (used by codegen to derive loop bounds)
 # ---------------------------------------------------------------------------

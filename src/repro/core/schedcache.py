@@ -1,0 +1,211 @@
+"""Structural schedule cache: (Scop, SchedulerConfig, engine) → Schedule.
+
+The AKG-style integration puts PolyTOPS on the compile hot path of every
+custom op, and serving/benchmark loops schedule the *same kernel shapes*
+over and over.  This module makes repeat scheduling a dictionary lookup:
+
+* **Cache key** — a SHA-256 over a canonical JSON rendering of the SCoP
+  structure (statement iterators, domains, access subscripts, beta
+  vectors, loop nesting), the full scheduler configuration (including
+  the fields ``to_json`` elides: coefficient bounds, parametric-shift,
+  fusion mode), the engine, and a format version.  Two structurally
+  identical kernels built through any code path hash equal; any change
+  that could alter the resulting schedule changes the key.
+  Configurations with a Python ``strategy`` callback are *uncacheable*
+  (the callback's behaviour is not hashable) and bypass the cache.
+
+* **Two tiers** — a process-local dict, then an on-disk pickle pool
+  (``$POLYTOPS_CACHE_DIR`` or ``~/.cache/polytops/sched``) so separate
+  processes (benchmark sweeps, serving workers) share warm schedules.
+  Disk failures of any kind degrade silently to cache-miss behaviour.
+
+Cached ``Schedule`` objects carry their own ``Scop``/dependence objects;
+per-dependence compiled-LP state is stripped on pickling (see
+``Dependence.__getstate__``), so entries stay compact.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import tempfile
+from typing import Any, Dict, Optional
+
+from .config import SchedulerConfig
+from .scop import Scop
+
+# bump when Schedule layout or scheduler semantics change incompatibly
+CACHE_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+def _affine_json(expr) -> list:
+    return sorted((str(k), str(v)) for k, v in expr.items() if v)
+
+
+def scop_fingerprint(scop: Scop) -> Dict[str, Any]:
+    """Canonical, order-stable rendering of everything about a SCoP that
+    can influence its schedule."""
+    stmts = []
+    for s in scop.statements:
+        stmts.append({
+            "iters": list(s.iters),
+            "domain": sorted((kind, _affine_json(e)) for e, kind in s.domain),
+            "accesses": [
+                [a.array, a.is_write, [_affine_json(sub) for sub in a.subscripts]]
+                for a in s.accesses
+            ],
+            "beta": list(s.beta),
+            "loop_ids": list(s.loop_ids),
+        })
+    return {
+        "params": dict(sorted(scop.params.items())),
+        "param_min": scop.param_min,
+        "stmts": stmts,
+    }
+
+
+def config_fingerprint(cfg: SchedulerConfig) -> Optional[Dict[str, Any]]:
+    """Canonical config rendering, or None when the config is not
+    cacheable (dynamic strategy callback)."""
+    if cfg.strategy is not None:
+        return None
+    fp = cfg.to_json()
+    # to_json omits fields that nevertheless steer the scheduler
+    fp["coeff_bound"] = cfg.coeff_bound
+    fp["cst_bound"] = cfg.cst_bound
+    fp["parametric_shift"] = cfg.parametric_shift
+    fp["custom_constraints"] = {
+        str(k): list(v) for k, v in sorted(cfg.custom_constraints.items(),
+                                           key=lambda kv: str(kv[0]))
+    }
+    return fp
+
+
+def schedule_key(scop: Scop, cfg: SchedulerConfig, engine: str,
+                 extra: Optional[Dict[str, Any]] = None) -> Optional[str]:
+    """Stable digest for a (Scop, config, engine) triple, or None when
+    the combination cannot be cached.  ``extra`` carries any scheduler
+    kwargs that can change the result (``incremental``, ``decompose``) —
+    the seed and incremental pipelines may pick different optimal
+    vertices, so they must not share cache entries."""
+    cfp = config_fingerprint(cfg)
+    if cfp is None:
+        return None
+    payload = json.dumps(
+        {"v": CACHE_VERSION, "engine": engine,
+         "scop": scop_fingerprint(scop), "config": cfp,
+         "extra": dict(sorted((extra or {}).items()))},
+        sort_keys=True, separators=(",", ":"),
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# the cache
+# ---------------------------------------------------------------------------
+
+def default_cache_dir() -> Optional[str]:
+    d = os.environ.get("POLYTOPS_CACHE_DIR")
+    if d:
+        return d
+    home = os.path.expanduser("~")
+    return os.path.join(home, ".cache", "polytops", "sched")
+
+
+class ScheduleCache:
+    """In-memory + on-disk schedule cache with silent disk degradation."""
+
+    def __init__(self, cache_dir: Optional[str] = None, disk: bool = True):
+        self.mem: Dict[str, Any] = {}
+        self.dir = cache_dir if cache_dir is not None else default_cache_dir()
+        self.disk = disk and self.dir is not None
+        self.stats = {"hits": 0, "misses": 0, "disk_hits": 0}
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, key[:2], key + ".pkl")
+
+    def get(self, key: Optional[str]):
+        if key is None:
+            self.stats["misses"] += 1
+            return None
+        hit = self.mem.get(key)
+        if hit is not None:
+            self.stats["hits"] += 1
+            return hit
+        if self.disk:
+            try:
+                with open(self._path(key), "rb") as f:
+                    hit = pickle.load(f)
+                self.mem[key] = hit
+                self.stats["hits"] += 1
+                self.stats["disk_hits"] += 1
+                return hit
+            except Exception:
+                pass
+        self.stats["misses"] += 1
+        return None
+
+    def put(self, key: Optional[str], sched) -> None:
+        if key is None:
+            return
+        self.mem[key] = sched
+        if not self.disk:
+            return
+        try:
+            d = os.path.dirname(self._path(key))
+            os.makedirs(d, exist_ok=True)
+            # atomic publish: temp file + rename, so concurrent workers
+            # never observe a torn pickle
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    pickle.dump(sched, f, protocol=pickle.HIGHEST_PROTOCOL)
+                os.replace(tmp, self._path(key))
+            except Exception:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        except Exception:
+            pass
+
+    def clear(self) -> None:
+        self.mem.clear()
+
+
+_GLOBAL: Optional[ScheduleCache] = None
+
+
+def global_cache() -> ScheduleCache:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = ScheduleCache()
+    return _GLOBAL
+
+
+def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
+                         engine: str = "highs",
+                         cache: Optional[ScheduleCache] = None, **kwargs):
+    """Drop-in cached variant of :func:`repro.core.scheduler.schedule_scop`.
+
+    Uncacheable configs (strategy callbacks) schedule normally.  The
+    returned Schedule is shared between callers of the same key — treat
+    it as immutable.
+    """
+    from .scheduler import schedule_scop
+
+    config = config or SchedulerConfig()
+    cache = cache or global_cache()
+    key = schedule_key(scop, config, engine, extra=kwargs)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    sched = schedule_scop(scop, config, engine=engine, **kwargs)
+    cache.put(key, sched)
+    return sched

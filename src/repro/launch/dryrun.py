@@ -236,6 +236,10 @@ def _compile_stats(arch_id, shape_name, multi_pod, cfg, variant):
                                variant=variant, cfg=cfg)
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    # jax < 0.4.30 returned [per-computation dict]; newer returns the
+    # dict directly — normalize to a dict either way
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     coll = collective_bytes_from_hlo(compiled.as_text())
     return mesh, compiled, cost, coll
 

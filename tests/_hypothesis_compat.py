@@ -1,0 +1,47 @@
+"""Optional-hypothesis shim for the test suite.
+
+The tier-1 environment does not ship ``hypothesis``; hard imports made
+three whole test modules fail at *collection*, taking all their plain
+(non-property) tests down with them.  Importing ``given``/``settings``/
+``st`` from here instead keeps plain tests running everywhere:
+
+* hypothesis installed  -> re-export the real API, property tests run;
+* hypothesis missing    -> property tests are individually skipped via
+  an inert ``given`` that wraps the test in ``pytest.mark.skip`` (the
+  per-test equivalent of ``pytest.importorskip("hypothesis")``), and
+  ``st`` becomes a chainable no-op strategy stub so module-level
+  strategy definitions still evaluate.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _StrategyStub:
+        """Inert stand-in for ``hypothesis.strategies``.
+
+        Any attribute access yields a factory returning another stub, so
+        arbitrary module-level strategy expressions evaluate fine;
+        ``st.composite`` returns the wrapped function's name as a no-op
+        callable so ``@st.composite``-decorated builders stay callable.
+        """
+
+        def __getattr__(self, name):
+            if name == "composite":
+                return lambda f: (lambda *a, **k: None)
+
+            def factory(*_a, **_k):
+                return _StrategyStub()
+
+            return factory
+
+    st = _StrategyStub()

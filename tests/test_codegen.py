@@ -6,7 +6,7 @@ interpreter oracle.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import config as CFG
 from repro.core.cbackend import array_extents

@@ -1,0 +1,233 @@
+"""Incremental ILP core + per-SCC decomposition + schedule cache.
+
+Covers the PR-1 performance work: the compiled/incremental lexmin path
+must agree with the exact-rational oracle on random LPs, per-component
+decomposition must reproduce the monolithic solve, and repeat
+scheduling must be a structural-cache lookup.
+"""
+import random
+from fractions import Fraction
+
+import pytest
+
+from repro.core import config as CFG
+from repro.core.deps import compute_dependences
+from repro.core.ilp import ILPProblem
+from repro.core.schedcache import ScheduleCache, cached_schedule_scop, schedule_key
+from repro.core.scheduler import PolyTOPSScheduler
+from repro.core.scop import Scop
+from repro.core.scops_polybench import REGISTRY
+
+
+def _sig(s):
+    """Full structural signature of a Schedule."""
+    return (
+        {i: [(r.kind, tuple(sorted(r.coeffs.items()))) for r in rr]
+         for i, rr in s.rows.items()},
+        tuple(s.bands), tuple(s.parallel), s.fallback,
+    )
+
+
+def _schedule(scop, cfg, **kw):
+    return PolyTOPSScheduler(scop, cfg, deps=compute_dependences(scop),
+                             **kw).schedule()
+
+
+# ---------------------------------------------------------------------------
+# incremental lexmin vs the exact-rational oracle
+# ---------------------------------------------------------------------------
+
+def _random_problem(rng, engine):
+    p = ILPProblem(engine)
+    p.var("x", ub=7)
+    p.var("y", ub=7)
+    p.var("z", ub=5)
+    for _ in range(rng.randint(1, 5)):
+        expr = {v: Fraction(rng.randint(-3, 3)) for v in ("x", "y", "z")}
+        expr[1] = Fraction(rng.randint(-6, 6))
+        p.add(expr, ">=0" if rng.random() < 0.8 else "==0")
+    return p
+
+
+def test_lexmin_engines_agree_randomized():
+    """highs (incremental: append-only fixing rows, warm-skip, combined
+    tail) and the exact simplex+B&B must give the same lexicographic
+    optima on random small ILPs."""
+    rng = random.Random(20260730)
+    checked = 0
+    for case in range(60):
+        state = rng.getstate()
+        stages = [
+            {v: Fraction(rng.randint(-2, 2)) for v in ("x", "y", "z")}
+            for _ in range(rng.randint(1, 3))
+        ]
+        rng.setstate(state)
+        ph = _random_problem(rng, "highs")
+        rng.setstate(state)
+        pe = _random_problem(rng, "exact")
+        rng.setstate(state)
+        _ = _random_problem(rng, "highs")  # advance rng deterministically
+        for _ in range(len(stages)):
+            rng.randint(-2, 2), rng.randint(-2, 2), rng.randint(-2, 2)
+        sh = ph.lexmin(stages)
+        se = pe.lexmin(stages)
+        if sh is None or se is None:
+            assert sh is None and se is None, f"case {case}: feasibility differs"
+            continue
+        checked += 1
+        # lexicographic optimality: every stage value must agree
+        for i, obj in enumerate(stages):
+            vh = sum((c * sh[k] for k, c in obj.items() if k != 1),
+                     obj.get(1, Fraction(0)))
+            ve = sum((c * se[k] for k, c in obj.items() if k != 1),
+                     obj.get(1, Fraction(0)))
+            assert vh == ve, f"case {case} stage {i}: {vh} != {ve}"
+    assert checked >= 10   # a healthy share of feasible cases
+
+
+def test_lexmin_incremental_matches_cloned():
+    """The append-only lexmin must match the seed clone-per-lexmin path
+    stage for stage."""
+    rng = random.Random(7)
+    for case in range(40):
+        state = rng.getstate()
+        p1 = _random_problem(rng, "highs")
+        rng.setstate(state)
+        p2 = _random_problem(rng, "highs")
+        p2.incremental = False
+        stages = [{"x": Fraction(1), "y": Fraction(2)},
+                  {"z": Fraction(1), "x": Fraction(-1)},
+                  {"y": Fraction(1)}]
+        s1 = p1.lexmin(stages)
+        s2 = p2.lexmin(stages)
+        if s1 is None or s2 is None:
+            assert s1 is None and s2 is None
+            continue
+        for obj in stages:
+            v1 = sum((c * s1[k] for k, c in obj.items() if k != 1),
+                     obj.get(1, Fraction(0)))
+            v2 = sum((c * s2[k] for k, c in obj.items() if k != 1),
+                     obj.get(1, Fraction(0)))
+            assert v1 == v2
+
+
+def test_lexmin_rewinds_problem():
+    """lexmin must leave the live model exactly as it found it."""
+    p = ILPProblem()
+    p.var("x", ub=9)
+    p.var("y", ub=9)
+    p.add({"x": 1, "y": 1, 1: -4})
+    ncons, nvars = len(p.cons), len(p.vars)
+    p.lexmin([{"x": 1}, {"y": 1}])
+    assert len(p.cons) == ncons and len(p.vars) == nvars
+    # and the model still solves the same afterwards
+    v, _ = p.solve_min({"x": 1, "y": 1})
+    assert v == 4
+
+
+def test_push_pop_restores_compiled_state():
+    p = ILPProblem()
+    p.var("a", ub=3)
+    p.add({"a": 1, 1: -1})
+    assert p.solve_min({"a": 1})[0] == 1
+    mark = p.push()
+    p.var("b", ub=3)
+    p.add({"b": 1, "a": 1, 1: -4})
+    assert p.solve_min({"a": 1})[0] == 1
+    p.pop(mark)
+    assert "b" not in p.vars
+    assert p.solve_min({"a": 1})[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# per-SCC decomposition vs monolithic
+# ---------------------------------------------------------------------------
+
+DECOMP_KERNELS = ["gemm", "mm2", "atax", "trisolv", "covariance", "fdtd2d"]
+DECOMP_STYLES = ["pluto", "tensor", "isl", "feautrier"]
+
+
+@pytest.mark.parametrize("name", DECOMP_KERNELS)
+@pytest.mark.parametrize("style", DECOMP_STYLES)
+def test_decomposition_matches_monolithic(name, style):
+    """Solving one ILP per dependence-graph component (with the
+    proximity u/w coupling guard) must reproduce the monolithic
+    schedule exactly."""
+    scop = REGISTRY[name]()
+    cfg = CFG.STRATEGIES[style]
+    mono = _schedule(scop, cfg(), decompose=False)
+    deco = _schedule(REGISTRY[name](), cfg(), decompose=True)
+    assert _sig(mono) == _sig(deco)
+
+
+def test_decomposition_no_deps_components():
+    """Statements with no dependences at all decompose into singleton
+    ILPs and still get the paper's Listing-1 interchange."""
+    k = Scop("listing1", params={})
+    with k.loop("i", 0, 100):
+        with k.loop("j", 0, 10):
+            k.stmt("c[j,i] = a[j,i] * b")
+            k.stmt("d[i,j] = e[i,j] * x")
+    sched = _schedule(k, CFG.tensor_style(), decompose=True)
+    s0 = sched.it_matrix(sched.scop.statements[0])
+    s1 = sched.it_matrix(sched.scop.statements[1])
+    assert s0[0] == [0, 1] and s0[1] == [1, 0]
+    assert s1[0] == [1, 0] and s1[1] == [0, 1]
+
+
+@pytest.mark.parametrize("name", ["gemm", "mm2", "jacobi1d"])
+def test_incremental_legality_vs_seed(name):
+    """The incremental path must stay legality-equivalent to the seed
+    pipeline: every dependence strongly satisfied, and it may only
+    *improve* on seed fallbacks (the seed's equality-fixing rows can
+    push HiGHS into numerical failure; the incremental path's one-sided
+    rows avoid that)."""
+    for style in ("pluto", "tensor"):
+        seed = _schedule(REGISTRY[name](), CFG.STRATEGIES[style](),
+                         incremental=False)
+        fast = _schedule(REGISTRY[name](), CFG.STRATEGIES[style]())
+        assert all(d.satisfied_at is not None for d in fast.deps)
+        if not seed.fallback:
+            assert not fast.fallback
+            assert _sig(seed) == _sig(fast)
+
+
+# ---------------------------------------------------------------------------
+# schedule cache
+# ---------------------------------------------------------------------------
+
+def test_schedule_key_stability_and_sensitivity():
+    k1 = schedule_key(REGISTRY["gemm"](), CFG.pluto_style(), "highs")
+    k2 = schedule_key(REGISTRY["gemm"](), CFG.pluto_style(), "highs")
+    assert k1 == k2
+    assert k1 != schedule_key(REGISTRY["gemm"](), CFG.tensor_style(), "highs")
+    assert k1 != schedule_key(REGISTRY["mm2"](), CFG.pluto_style(), "highs")
+    assert k1 != schedule_key(REGISTRY["gemm"](), CFG.pluto_style(), "exact")
+    cfg = CFG.pluto_style()
+    cfg.coeff_bound = 7
+    assert k1 != schedule_key(REGISTRY["gemm"](), cfg, "highs")
+    # dynamic strategies are uncacheable
+    assert schedule_key(REGISTRY["gemm"](), CFG.isl_style(), "highs") is None
+
+
+def test_schedule_cache_memory_and_disk(tmp_path):
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    s1 = cached_schedule_scop(REGISTRY["atax"](), CFG.pluto_style(), cache=cache)
+    s2 = cached_schedule_scop(REGISTRY["atax"](), CFG.pluto_style(), cache=cache)
+    assert s1 is s2                       # in-memory hit
+    assert cache.stats["hits"] == 1 and cache.stats["misses"] == 1
+    # a fresh cache over the same directory hits via disk pickle
+    cache2 = ScheduleCache(cache_dir=str(tmp_path))
+    s3 = cached_schedule_scop(REGISTRY["atax"](), CFG.pluto_style(), cache=cache2)
+    assert cache2.stats["disk_hits"] == 1
+    assert _sig(s3) == _sig(s1)
+    assert all(d._compiled is None for d in s3.deps)  # lean pickles
+
+
+def test_schedule_cache_uncacheable_strategy(tmp_path):
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    s1 = cached_schedule_scop(REGISTRY["atax"](), CFG.isl_style(), cache=cache)
+    s2 = cached_schedule_scop(REGISTRY["atax"](), CFG.isl_style(), cache=cache)
+    assert s1 is not s2                   # bypasses the cache entirely
+    assert cache.stats["hits"] == 0
+    assert _sig(s1) == _sig(s2)
