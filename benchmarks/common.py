@@ -23,7 +23,7 @@ from repro.core.postproc import tile_schedule
 from repro.core.scheduler import PolyTOPSScheduler, Schedule, SchedulingError
 from repro.core.scop import Scop
 
-SALT = "v7"  # bump to invalidate the source cache after codegen changes
+SALT = "v8"  # bump to invalidate the source cache after codegen changes
 SRC_CACHE = Path(os.environ.get("POLYTOPS_SRC_CACHE", "/tmp/polytops_src_cache"))
 NO_CACHE = os.environ.get("POLYTOPS_NO_CACHE") == "1"
 FAST = os.environ.get("POLYTOPS_BENCH_FAST") == "1"
@@ -36,10 +36,20 @@ SCALARS = {"alpha": 1.5, "beta": 0.7, "zero": 0.0, "one": 1.0,
 class Variant:
     name: str
     config: Callable[[], CFG.SchedulerConfig]
-    tile: Optional[int] = None
+    tile: Optional[object] = None    # int | 'l1' | 'l2' (cache-model sizes)
     wavefront: bool = False
     autovec: bool = False
     original: bool = False     # untransformed program order
+
+
+def tuned_variant(tc) -> "Variant":
+    """Variant for an autotuned kernel-specific config
+    (:class:`repro.core.autotune.TunedConfig`)."""
+    if tc.strategy == "original":    # all-candidates-rejected fallback
+        return Variant("original", CFG.SchedulerConfig, original=True)
+    cfg_fn = CFG.STRATEGIES[tc.strategy]
+    return Variant(tc.label, cfg_fn, tile=tc.tile, wavefront=tc.wavefront,
+                   autovec=tc.autovec)
 
 
 def original_schedule(scop: Scop) -> Schedule:
@@ -61,10 +71,18 @@ class Measurement:
 
 
 def _source_for(scop: Scop, variant: Variant, deps=None) -> Tuple[str, float, bool]:
+    # cache-model tiles ('l1'/'l2') depend on the active CacheSpec: key it,
+    # or spec overrides (POLYTOPS_L1_BYTES/POLYTOPS_L2_BYTES) would serve
+    # stale sources built with the old sizes
+    spec_key = None
+    if isinstance(variant.tile, str):
+        from repro.core.cachemodel import default_spec
+        s = default_spec()
+        spec_key = [s.l1_bytes, s.l2_bytes, s.elem_bytes]
     key = hashlib.sha256(
         json.dumps([SALT, scop.name, sorted(scop.params.items()), variant.name,
                     variant.tile, variant.wavefront, variant.autovec,
-                    variant.original]).encode()
+                    variant.original, spec_key]).encode()
     ).hexdigest()[:24]
     SRC_CACHE.mkdir(parents=True, exist_ok=True)
     cfile = SRC_CACHE / f"{key}.json"
@@ -92,27 +110,21 @@ def _source_for(scop: Scop, variant: Variant, deps=None) -> Tuple[str, float, bo
 
 def measure(scop: Scop, variant: Variant, deps=None, target_s: float = 0.15,
             timeout: int = 900) -> Measurement:
+    from repro.core.crunner import measure_source
+
     src, sched_s, fb = _source_for(scop, variant, deps)
-    r = compile_and_run(src, tag=f"{scop.name}_{variant.name}", timeout=timeout,
-                        use_cache=not NO_CACHE)
-    if r.seconds < 0.02:
-        # too fast to trust: rebuild with an internal repeat loop
-        reps = max(3, min(200000, int(target_s / max(r.seconds, 1e-7))))
-        src2 = src.replace("#define REPEATS 1\n", f"#define REPEATS {reps}\n")
-        r = compile_and_run(src2, tag=f"{scop.name}_{variant.name}_r", timeout=timeout,
-                            use_cache=not NO_CACHE)
+    r = measure_source(src, tag=f"{scop.name}_{variant.name}",
+                       target_s=target_s, timeout=timeout,
+                       use_cache=not NO_CACHE)
     return Measurement(variant.name, r.seconds, r.checksum, sched_s, fb)
 
 
 def check_checksums(kernel: str, ms: Sequence[Measurement], rel: float = 1e-6) -> bool:
-    import math
+    from repro.core.crunner import checksums_match
+
     vals = [m.checksum for m in ms]
     base = vals[0]
-    ok = all(
-        (math.isnan(v) and math.isnan(base))
-        or abs(v - base) <= rel * max(1.0, abs(base))
-        for v in vals
-    )
+    ok = all(checksums_match(v, base, rel) for v in vals)
     if not ok:
         print(f"WARNING: checksum mismatch for {kernel}: "
               + ", ".join(f"{m.variant}={m.checksum:.9e}" for m in ms), file=sys.stderr)

@@ -2,7 +2,10 @@
 Prints ``name,us_per_call,derived`` CSV rows per section.
 
   table1     — NPU custom operators, isl vs PolyTOPS directives (Table I)
-  fig2       — PolyBench, 4 strategies + kernel-specific vs Pluto (Fig 2)
+  fig2       — PolyBench, 4 strategies + autotuned kernel-specific vs
+               Pluto (Fig 2); writes BENCH_polybench.json (perf
+               trajectory, gated by scripts/tier1.sh like
+               BENCH_scheduler.json)
   fig3       — jacobi-1d dataset-size sweep (Fig 3)
   fig4       — scheduling-tool comparison (Fig 4 / Table II, reproduced
                strategies — external tools unavailable offline)

@@ -44,11 +44,22 @@ def main():
     r = compile_and_run(src, tag="trsml_example")
     print(f"measured: {r.seconds*1e6:.1f} us/call checksum={r.checksum:.6e}")
 
-    # tiled variant of the same schedule
+    # tiled variants of the same schedule: fixed sizes vs cache model
     scan = tile_schedule(sched, 32)
     src_t = CCodeGenerator(sched, scan=scan, scalars={}).generate()
     rt = compile_and_run(src_t, tag="trsml_example_tiled")
     print(f"tiled 32: {rt.seconds*1e6:.1f} us/call checksum={rt.checksum:.6e}")
+    scan_m = tile_schedule(sched, "l2")   # cache-model sizes (see EXPERIMENTS.md)
+    src_m = CCodeGenerator(sched, scan=scan_m, scalars={}).generate()
+    rm = compile_and_run(src_m, tag="trsml_example_l2")
+    print(f"tiled l2: {rm.seconds*1e6:.1f} us/call checksum={rm.checksum:.6e}")
+
+    # or let the autotuner pick the whole configuration (strategy × tile
+    # × wavefront), persisted in the schedule cache by SCoP structure
+    from repro.core.autotune import autotune
+    tuned = autotune(scop)
+    print(f"autotuned: {tuned.config.label} "
+          f"({(tuned.seconds or 0)*1e6:.1f} us/call, source={tuned.source})")
 
 
 if __name__ == "__main__":

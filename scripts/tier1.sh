@@ -1,15 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the full test suite plus a scheduler smoke benchmark
-# under a wall-clock budget, so scheduler perf regressions fail loudly
-# alongside correctness regressions.
+# Tier-1 gate: the full test suite plus two smoke benchmarks under
+# wall-clock budgets, so perf regressions fail loudly alongside
+# correctness regressions:
+#   * scheduler smoke — compile-time cost (floor: 2.0x geomean vs seed)
+#   * polybench smoke — generated-code runtime on the fast set
+#     (checksum-gated; ERROR rows fail; floor: 1.3x kernel-specific
+#     geomean vs pluto-style)
 #
 # Usage:  scripts/tier1.sh
-# Env:    POLYTOPS_TIER1_BUDGET  smoke-bench budget in seconds (default 180)
+# Env:    POLYTOPS_TIER1_BUDGET     scheduler smoke budget in s (default 180)
+#         POLYTOPS_TIER1_PB_BUDGET  polybench smoke budget in s (default 900)
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BUDGET="${POLYTOPS_TIER1_BUDGET:-180}"
+PB_BUDGET="${POLYTOPS_TIER1_PB_BUDGET:-900}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q || exit 1
@@ -34,5 +40,41 @@ g = d["geomean_speedup_decomposed_vs_seed"]
 if g < 2.0:
     sys.exit(f"scheduler speedup regressed: geomean {g}x < 2.0x floor")
 print(f"scheduler speedup OK: geomean {g}x (floor 2.0x)")
+PY
+
+echo "== polybench smoke bench (fast set, ${PB_BUDGET}s budget) =="
+PB_OUT="$(mktemp)"
+if ! POLYTOPS_BENCH_FAST=1 \
+     timeout "$PB_BUDGET" python -m benchmarks.bench_polybench > "$PB_OUT"; then
+  echo "POLYBENCH SMOKE FAILED or exceeded ${PB_BUDGET}s budget" >&2
+  tail -5 "$PB_OUT" >&2
+  rm -f "$PB_OUT"
+  exit 1
+fi
+tail -1 "$PB_OUT"
+rm -f "$PB_OUT"
+
+# generated-code quality gate: no errors, no checksum mismatches, and a
+# healthy kernel-specific geomean over the pluto-style baseline
+python - <<'PY' || exit 1
+import json, pathlib, sys
+d = json.loads(pathlib.Path("benchmarks/BENCH_polybench.json").read_text())
+errs = d["total_errors"]
+mism = d["checksum_mismatches"]
+g = d["geomean_kernel_specific_vs_pluto"]
+if errs:
+    bad = {k: v["errors"] for k, v in d["kernels"].items() if v["errors"]}
+    sys.exit(f"polybench smoke has {errs} ERROR rows: {bad}")
+if mism:
+    sys.exit(f"polybench smoke has {mism} checksum mismatches")
+at_fail = d.get("autotune_failures", 0)
+if at_fail:
+    bad = {k: v.get("autotune_error") for k, v in d["kernels"].items()
+           if v.get("autotune_error")}
+    sys.exit(f"autotuner failed on {at_fail} kernel(s): {bad}")
+if g is None or g < 1.3:
+    sys.exit(f"kernel-specific speedup regressed: geomean {g}x < 1.3x floor")
+print(f"polybench OK: kernel-specific geomean {g}x over "
+      f"{d['n_kernels']} kernels (floor 1.3x), 0 errors, 0 mismatches")
 PY
 echo "== tier-1 gate passed =="

@@ -65,8 +65,17 @@ def _order_from_schedule(sched: Schedule, stmt_idx: int = 0) -> List[str]:
 
 
 def _fit_tiles(order: List[str], dims: Dict[str, int], vector_iter: str,
-               bytes_per_elem: int = 2, n_buffers: int = 3) -> Dict[str, int]:
-    """Snap tiles to TPU-friendly sizes under a VMEM budget."""
+               bytes_per_elem: int = 2, n_buffers: int = 3,
+               stmt=None) -> Dict[str, int]:
+    """Snap tiles to TPU-friendly sizes under a VMEM budget.
+
+    The working set comes from the shared cache model
+    (:func:`repro.core.cachemodel.stmt_access_groups`) when the SCoP
+    statement is available: per-access tile footprints from the actual
+    subscript strides, times ``n_buffers`` for double/triple buffering —
+    the same estimator that sizes CPU cache tiles sizes VMEM tiles."""
+    from .cachemodel import stmt_access_groups, working_set_bytes
+
     tile = {}
     for it in order:
         d = dims[it]
@@ -75,9 +84,14 @@ def _fit_tiles(order: List[str], dims: Dict[str, int], vector_iter: str,
             tile[it] = max(min(tile[it], d), min(d, LANE))
         else:
             tile[it] = min(d, 128 if d >= 128 else d)
-    # shrink until the (rough) working set fits VMEM
+    groups = stmt_access_groups(stmt, order) if stmt is not None else None
+
+    # shrink until the working set fits VMEM
     def wset():
-        t = [tile[i] for i in order]
+        if groups is not None:
+            sizes = [tile[i] for i in order]
+            return n_buffers * working_set_bytes(groups, sizes, bytes_per_elem)
+        t = [tile[i] for i in order]        # no access info: legacy guess
         prod2 = 1
         for a in t[-2:]:
             prod2 *= a
@@ -111,7 +125,7 @@ def plan_matmul(m: int, n: int, k: int,
         vec = stmt.iters[vi]
     else:
         vec = order[-1]
-    tile = _fit_tiles(order, {"i": m, "kk": k, "j": n}, vec)
+    tile = _fit_tiles(order, {"i": m, "kk": k, "j": n}, vec, stmt=stmt)
     bands = tuple(sched.bands)
     return KernelPlan(tuple(order), vec, tile, bands, sched.pretty())
 
@@ -129,7 +143,8 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
     cfg = tensor_style()
     sched = cached_schedule_scop(s, cfg)
     order = _order_from_schedule(sched)
-    tile = _fit_tiles(order, {"q": seq_q, "kk": seq_k, "d": head_dim}, "d")
+    tile = _fit_tiles(order, {"q": seq_q, "kk": seq_k, "d": head_dim}, "d",
+                      stmt=s.statements[0])
     # flash blocking: q and k tiles bounded for the online-softmax state
     tile["q"] = min(tile.get("q", 128), 128)
     tile["kk"] = min(tile.get("kk", 128), 128)

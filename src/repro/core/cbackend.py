@@ -15,15 +15,35 @@ exactly like PolyBench reference harnesses.
 from __future__ import annotations
 
 import math
-from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .affine import Affine
 from .codegen import (CodeGenerator, ScanStmt, _affine_src, _substitute_body,
-                      _yvar)
+                      _yvar, level_parallel, wave_parallel)
 from .polyhedron import maximum, minimum
 from .scheduler import Schedule
 from .scop import Scop, _ACCESS, _split_subscripts
+
+# Identifiers the generated program may not (re)declare: C keywords, the
+# libc/libm names pulled in by the emitted #includes (math.h's Bessel
+# functions y0/y1/yn/j0/j1/jn are the classic PolyBench trap — `mvt`'s
+# vector y1 collides), and the harness's own symbols.  SCoP arrays or
+# scalars with these names are transparently renamed in the C output.
+_C_RESERVED = frozenset("""
+auto break case char const continue default do double else enum extern
+float for goto if inline int long register restrict return short signed
+sizeof static struct switch typedef union unsigned void volatile while
+y0 y1 yn j0 j1 jn gamma lgamma tgamma exp exp2 expm1 log log2 log10
+log1p sqrt cbrt pow sin cos tan asin acos atan atan2 sinh cosh tanh
+fabs fmod floor ceil round trunc erf erfc hypot fma fmin fmax nan
+remainder copysign nearbyint rint ilogb logb frexp ldexp modf signbit
+abs div rand srand exit free malloc calloc realloc abort atexit system
+getenv atof atoi atol qsort bsearch labs ldiv printf scanf puts getchar
+putchar fopen fclose remove rename tmpfile fflush stdin stdout stderr
+time clock difftime mktime asctime ctime gmtime localtime strftime
+main init_arrays checksum cksum_ secs warm REPEATS MINI MAXI floord
+ceild
+""".split())
 
 
 def _ceild_c(num: str, den: int) -> str:
@@ -44,7 +64,7 @@ def _fold(fn: str, terms: List[str]) -> str:
 def array_extents(scop: Scop) -> Dict[str, List[int]]:
     """Numeric extent of each array dim = 1 + max subscript value over all
     accesses (with the SCoP's concrete parameter values)."""
-    ctx = [({p: Fraction(1), 1: Fraction(-v)}, "==0") for p, v in scop.params.items()]
+    ctx = scop.param_rows()
     ext: Dict[str, List[int]] = {a: [0] * r for a, r in scop.arrays.items()}
     for s in scop.statements:
         cons = list(s.domain) + ctx
@@ -70,6 +90,36 @@ class CCodeGenerator(CodeGenerator):
         self.omp = omp
         self.repeats = repeats
         self._parallel_emitted = False
+        self._cname = self._rename_map()
+
+    def _rename_map(self) -> Dict[str, str]:
+        """C-safe name for every array/scalar (identity unless reserved).
+        Parameters are emitted as ``#define`` and appear verbatim in
+        bound expressions everywhere — renaming them is not supported,
+        so a reserved parameter name fails loudly instead of producing a
+        cryptic macro-expansion gcc error."""
+        for p in self.params:
+            if p in _C_RESERVED:
+                raise ValueError(
+                    f"SCoP parameter {p!r} collides with a C/libm "
+                    f"identifier; rename the parameter")
+        taken = set(self.scop.arrays) | set(self.scop.scalars) | set(self.params)
+        out: Dict[str, str] = {}
+        for name in list(self.scop.arrays) + list(self.scop.scalars):
+            if name in _C_RESERVED:
+                new = name + "_pt"
+                while new in taken or new in _C_RESERVED:
+                    new += "_"
+                taken.add(new)
+                out[name] = new
+        return out
+
+    def _scan_context(self):
+        """The C backend bakes concrete parameter values as #defines, so
+        FM redundancy pruning may assume them outright — this is what
+        collapses the parametric MINI/MAXI bound chains of tiled and
+        wavefronted nests to a handful of terms."""
+        return super()._scan_context() + self.scop.param_rows()
 
     # -- program ----------------------------------------------------------
     def generate(self) -> str:
@@ -89,11 +139,12 @@ class CCodeGenerator(CodeGenerator):
         e("#define MAXI(a,b)   (((a)>(b)) ? (a) : (b))")
         for p, v in scop.params.items():
             e(f"#define {p} {v}")
+        cn = lambda name: self._cname.get(name, name)
         for sc, v in self.scalars.items():
-            e(f"static const double {sc} = {v!r};")
+            e(f"static const double {cn(sc)} = {v!r};")
         for a, dims in ext.items():
             dd = "".join(f"[{max(d,1)}]" for d in dims)
-            e(f"static double {a}{dd};")
+            e(f"static double {cn(a)}{dd};")
         e("")
         e("static void init_arrays(void) {")
         self.indent += 1
@@ -106,7 +157,7 @@ class CCodeGenerator(CodeGenerator):
             init = scop.c_init.get(
                 a, f"((double)(({expr} + 3) % 251)) / 251.0 + 0.1"
             )
-            e("    " * len(dims) + f"{a}{sub} = {init};")
+            e("    " * len(dims) + f"{cn(a)}{sub} = {init};")
         self.indent -= 1
         e("}")
         e("")
@@ -118,7 +169,7 @@ class CCodeGenerator(CodeGenerator):
             for k, d in enumerate(dims):
                 e("    " * k + f"for (int {idx[k]} = 0; {idx[k]} < {max(d,1)}; {idx[k]}++)")
             sub = "".join(f"[{ix}]" for ix in idx)
-            e("    " * len(dims) + f"cksum_ += {a}{sub} * (1.0 + 0.0001*(({' + '.join(idx) if idx else '0'}) % 17));")
+            e("    " * len(dims) + f"cksum_ += {cn(a)}{sub} * (1.0 + 0.0001*(({' + '.join(idx) if idx else '0'}) % 17));")
         e("return cksum_;")
         self.indent -= 1
         e("}")
@@ -165,15 +216,15 @@ class CCodeGenerator(CodeGenerator):
                 g = list(new_guards.get(ss.stmt.index, []))
                 g += [f"{y} >= {l}", f"{y} <= {h}"]
                 new_guards[ss.stmt.index] = g
-        sd = min(ss.dims[d].sched_dim for ss in group)
-        stmt_set = {ss.stmt.index for ss in group}
-        par = self.sched.stmt_parallel_at_set(stmt_set, sd)
+        par = level_parallel(self.sched, group, d)
         innermost = all(self._innermost_linear(ss, d) for ss in group)
         # omp-parallel only on OUTERMOST loops: a parallel region inside a
         # hot nest pays fork/join per outer iteration (measured ~60 µs of
-        # constant overhead on trsmL when emitted at depth 2)
+        # constant overhead on trsmL when emitted at depth 2).  Wavefront
+        # tile counters are the exception — their parallelism only exists
+        # under the sequential wave loop.
         if (self.omp and par and not self._parallel_emitted and not innermost
-                and self.indent == 1):
+                and (self.indent == 1 or wave_parallel(group, d))):
             self._emit("#pragma omp parallel for")
             self._parallel_emitted = True
         if self.omp and par and innermost:
@@ -209,7 +260,9 @@ class CCodeGenerator(CodeGenerator):
                 guard_exprs.append(f"(({body}) % {den}) == 0")
             else:
                 sub_src[it] = body
-        body = _c_body(s.body, sub_src)
+        for old, new in self._cname.items():
+            sub_src.setdefault(old, new)     # reserved-name scalars
+        body = _c_body(s.body, sub_src, self._cname)
         if guard_exprs:
             self._emit("if (" + " && ".join(guard_exprs) + ") {")
             self.indent += 1
@@ -220,16 +273,19 @@ class CCodeGenerator(CodeGenerator):
             self._emit(body + ";")
 
 
-def _c_body(body: str, sub_src: Dict[str, str]) -> str:
-    """Rewrite ``A[i,j]`` → ``A[(i)][(j)]`` and substitute iterators."""
+def _c_body(body: str, sub_src: Dict[str, str],
+            rename: Optional[Dict[str, str]] = None) -> str:
+    """Rewrite ``A[i,j]`` → ``A[(i)][(j)]`` and substitute iterators;
+    ``rename`` maps reserved array names to their C-safe spelling."""
     out = []
     pos = 0
+    rename = rename or {}
     for m in _ACCESS.finditer(body):
         out.append(_substitute_body(body[pos:m.start()], sub_src))
         arr = m.group(1)
         subs = _split_subscripts(m.group(2))
         csubs = "".join(f"[{_substitute_body(t.strip(), sub_src)}]" for t in subs)
-        out.append(f"{arr}{csubs}")
+        out.append(f"{rename.get(arr, arr)}{csubs}")
         pos = m.end()
     out.append(_substitute_body(body[pos:], sub_src))
     return "".join(out)

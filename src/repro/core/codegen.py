@@ -51,6 +51,10 @@ class DimSpec:
     tile: int = 0          # tile size for kind == 'tile'
     sched_dim: int = 0     # schedule dim governing dependence satisfaction:
                            # own dim for eq rows, band start for tile/wave dims
+    role: str = ""         # '' (point/eq) | 'tile' (tile counter) |
+                           # 'wave' (sequential wavefront sum) |
+                           # 'wave_par' (tile counter inside a wave: parallel
+                           # by band permutability, see level_parallel)
 
 
 @dataclass
@@ -107,11 +111,87 @@ def _full_system(ss: ScanStmt, params: Sequence[str]) -> List[Constraint]:
     return cons
 
 
+def iterator_substitution(ss: ScanStmt) -> Dict[str, Affine]:
+    """Express each statement iterator as affine over (y*, params) by
+    inverting a full-rank subset of the scan's 'eq' rows.  Shared by the
+    scanners, the cache model (tile-footprint strides) and the autotuner
+    (locality scoring)."""
+    from .linalg_q import inverse, mat, rank
+
+    s = ss.stmt
+    eqs = []
+    for d, spec in enumerate(ss.dims):
+        if spec.kind == "eq" and any(k in s.iters for k in spec.phi):
+            eqs.append((d, spec.phi))
+    # build T (rows over iterators) picking a full-rank subset
+    rows, chosen = [], []
+    for d, phi in eqs:
+        row = [phi.get(it, Fraction(0)) for it in s.iters]
+        if rank(mat(rows + [row])) > len(rows):
+            rows.append(row)
+            chosen.append((d, phi))
+        if len(rows) == s.dim:
+            break
+    if len(rows) < s.dim:
+        raise ValueError(f"schedule not invertible for {s}")
+    tinv = inverse(mat(rows))
+    subst: Dict[str, Affine] = {}
+    for i, it in enumerate(s.iters):
+        expr: Affine = {}
+        for j, (d, phi) in enumerate(chosen):
+            c = tinv[i][j]
+            if c == 0:
+                continue
+            expr[_yvar(d)] = expr.get(_yvar(d), Fraction(0)) + c
+            for k, v in phi.items():
+                if k not in s.iters:   # params / const move to RHS
+                    expr[k] = expr.get(k, Fraction(0)) - c * v
+        subst[it] = {k: v for k, v in expr.items() if v != 0}
+    return subst
+
+
+def wave_parallel(group: Sequence[ScanStmt], d: int) -> bool:
+    """True when scan level ``d`` is a wavefront-inner tile counter for
+    every statement in the group — the one loop whose parallelism lives
+    under a sequential wave dim (see level_parallel)."""
+    specs = [ss.dims[d] for ss in group if d < ss.n_dims()]
+    return bool(specs) and all(spec.role == "wave_par" for spec in specs)
+
+
+def level_parallel(sched: Schedule, group: Sequence[ScanStmt], d: int) -> bool:
+    """Single source of truth for loop-level parallel legality, shared by
+    the Python oracle (vectorized emission) and the C backend (omp
+    parallel/simd pragmas) so both mark the same dims.
+
+    * wavefront sum dims are sequential by construction;
+    * the tile counter inside a wavefront ('wave_par') is parallel: the
+      band is fully permutable, so every active dependence has
+      componentwise non-negative distance, tile counters inherit that,
+      and equal wave value forces both tile deltas to zero (same tile);
+    * everything else is judged against SCHEDULE dims via
+      stmt_parallel_at_set (distance zero for all deps not satisfied
+      outside)."""
+    specs = [ss.dims[d] for ss in group if d < ss.n_dims()]
+    if not specs:
+        return False
+    if any(spec.role == "wave" for spec in specs):
+        return False
+    if wave_parallel(group, d):
+        return True
+    stmt_set = {ss.stmt.index for ss in group if d < ss.n_dims()}
+    sd = min(spec.sched_dim for spec in specs)
+    return sched.stmt_parallel_at_set(stmt_set, sd)
+
+
 class _StmtScanner:
     """Precomputes, per statement, loop bounds of each y dim (in terms of
-    outer y dims and params) and the iterator substitution it = g(y)."""
+    outer y dims and params) and the iterator substitution it = g(y).
 
-    def __init__(self, ss: ScanStmt, params: Sequence[str]):
+    ``context`` rows (parameter bounds or concrete values — see
+    ``bounds_of``) drive LP redundancy pruning of the FM chains."""
+
+    def __init__(self, ss: ScanStmt, params: Sequence[str],
+                 context: Sequence[Constraint] = ()):
         self.ss = ss
         self.params = list(params)
         self.n = ss.n_dims()
@@ -119,44 +199,9 @@ class _StmtScanner:
         self.bounds: List[Tuple[List[Affine], List[Affine]]] = []
         for d in range(self.n):
             inner = [it for it in ss.stmt.iters] + [_yvar(k) for k in range(self.n - 1, d, -1)]
-            lo, hi = bounds_of(sys_full, _yvar(d), inner)
+            lo, hi = bounds_of(sys_full, _yvar(d), inner, context=context)
             self.bounds.append((lo, hi))
-        self.subst = self._solve_iterators(sys_full)
-
-    def _solve_iterators(self, sys_full) -> Dict[str, Affine]:
-        """Express each statement iterator as affine over (y*, params)."""
-        from .linalg_q import inverse, mat, matmul, rank
-
-        s = self.ss.stmt
-        eqs = []
-        for d, spec in enumerate(self.ss.dims):
-            if spec.kind == "eq" and any(k in s.iters for k in spec.phi):
-                eqs.append((d, spec.phi))
-        # build T (rows over iterators) picking a full-rank subset
-        rows, rhs_meta, chosen = [], [], []
-        for d, phi in eqs:
-            row = [phi.get(it, Fraction(0)) for it in s.iters]
-            if rank(mat(rows + [row])) > len(rows):
-                rows.append(row)
-                chosen.append((d, phi))
-            if len(rows) == s.dim:
-                break
-        if len(rows) < s.dim:
-            raise ValueError(f"schedule not invertible for {s}")
-        tinv = inverse(mat(rows))
-        subst: Dict[str, Affine] = {}
-        for i, it in enumerate(s.iters):
-            expr: Affine = {}
-            for j, (d, phi) in enumerate(chosen):
-                c = tinv[i][j]
-                if c == 0:
-                    continue
-                expr[_yvar(d)] = expr.get(_yvar(d), Fraction(0)) + c
-                for k, v in phi.items():
-                    if k not in s.iters:   # params / const move to RHS
-                        expr[k] = expr.get(k, Fraction(0)) - c * v
-            subst[it] = {k: v for k, v in expr.items() if v != 0}
-        return subst
+        self.subst = iterator_substitution(ss)
 
 
 # ---------------------------------------------------------------------------
@@ -244,8 +289,17 @@ class CodeGenerator:
         self.func_name = func_name or f"kernel_{self.scop.name}".replace("-", "_")
         self.lines: List[str] = []
         self.indent = 0
-        self._scanners = {ss.stmt.index: _StmtScanner(ss, self.params) for ss in self.scan}
+        ctx = self._scan_context()
+        self._scanners = {ss.stmt.index: _StmtScanner(ss, self.params, ctx)
+                          for ss in self.scan}
         self.vectorized_stmts: Set[int] = set()
+
+    def _scan_context(self) -> List[Constraint]:
+        """Known-true rows for FM redundancy pruning.  The Python oracle
+        stays parametric: only the SCoP's assumed parameter lower bound.
+        (The C backend bakes concrete parameter values — see
+        CCodeGenerator.)"""
+        return self.scop.param_min_rows()
 
     # -- public ---------------------------------------------------------
     def generate(self) -> str:
@@ -373,8 +427,8 @@ class CodeGenerator:
         if spec.kind != "eq":
             return False
         s = ss.stmt
-        # schedule-legality: all deps within this loop must be zero-distance
-        if not self.sched.stmt_parallel_at_set({s.index}, spec.sched_dim):
+        # schedule-legality via the marking shared with the C backend
+        if not level_parallel(self.sched, [ss], d):
             return False
         # the loop variable must enter subscripts with coeff in {0, ±1}
         sub = self._scanners[s.index].subst

@@ -73,7 +73,7 @@ def _domain_cons(stmt: Statement, prefix: str) -> List[Constraint]:
 
 
 def _param_context(scop: Scop) -> List[Constraint]:
-    return [({p: Fraction(1), 1: Fraction(-scop.param_min)}, ">=0") for p in scop.params]
+    return scop.param_min_rows()
 
 
 def compute_dependences(scop: Scop) -> List[Dependence]:

@@ -489,9 +489,22 @@ class ILPProblem:
                                                 on_trouble="raise")
                 else:
                     res = self.solve_min(obj, want)
-                if res is None:
+                if res is None and sol is not None:
+                    # a later lexmin stage can never be infeasible: the
+                    # previous stage's optimum satisfies its own fixing
+                    # row.  This is HiGHS mis-reporting infeasibility —
+                    # keep the incumbent and pin the stage at the value
+                    # it attains: legal and deterministic (at worst
+                    # suboptimal in lower-priority stages; an exact
+                    # re-solve here costs minutes on large kernels).
+                    val = obj.get(1, Fraction(0))
+                    for k, c in obj.items():
+                        if k != 1:
+                            val += c * sol[k]
+                elif res is None:
                     return None, False
-                val, sol = res
+                else:
+                    val, sol = res
             # fix this objective at its optimum before the next stage.
             # obj ≤ val (with obj ≥ val implied by optimality) — the
             # one-sided form is equivalent to the seed's equality row but
@@ -504,19 +517,35 @@ class ILPProblem:
         return sol, True
 
     def _lexmin_cloned(self, objectives: Sequence[Affine]) -> Optional[Dict[str, Fraction]]:
-        """The seed clone-per-lexmin path (kept for benchmarking)."""
+        """The seed clone-per-lexmin path (kept for benchmarking).
+
+        Fixing rows use the same one-sided ``obj <= val`` form as the
+        incremental path (``obj >= val`` is implied by optimality): the
+        seed's equality chains could push HiGHS MIP into mis-reported
+        optimality/infeasibility on later stages — the source of the
+        5/140 kernel×strategy divergences noted in ROADMAP.md."""
         prob = self.clone()
         sol: Optional[Dict[str, Fraction]] = None
         if not objectives:
             objectives = [{}]
         for i, obj in enumerate(objectives):
             res = prob.solve_min(obj)
-            if res is None:
+            if res is None and sol is not None:
+                # later stages cannot be infeasible (the previous optimum
+                # satisfies its fixing row): HiGHS mis-report — keep the
+                # incumbent, pin the stage at the value it attains (same
+                # recovery as the incremental path's _run_stages)
+                val = obj.get(1, Fraction(0))
+                for k, c in obj.items():
+                    if k != 1:
+                        val += c * sol[k]
+            elif res is None:
                 return None
-            val, sol = res
-            fixed = dict(obj)
-            fixed[1] = fixed.get(1, Fraction(0)) - val
-            prob.add(fixed, "==0")
+            else:
+                val, sol = res
+            fixed = {k: -c for k, c in obj.items()}
+            fixed[1] = fixed.get(1, Fraction(0)) + val
+            prob.add(fixed, ">=0")
         return sol
 
     def feasible(self) -> bool:
@@ -577,8 +606,10 @@ def _highs_solve(prob: ILPProblem, objective: Affine):
         return None
     if res.status == 3:
         raise Unbounded(str(objective))
-    if not res.success:
-        # numerical trouble: retry with exact engine
+    if not res.success or not _seed_point_valid(prob, names, res.x):
+        # numerical trouble (or HiGHS MIP reporting an infeasible point
+        # as optimal — same failure mode the incremental path validates
+        # against in CompiledProblem.check_solution): exact engine
         return _exact_solve(prob, objective)
     sol: Dict[str, Fraction] = {}
     for i, name in enumerate(names):
@@ -591,6 +622,32 @@ def _highs_solve(prob: ILPProblem, objective: Affine):
     for k, v in objective.items():
         val += v if k == 1 else v * sol[k]
     return val, sol
+
+
+def _seed_point_valid(prob: ILPProblem, names, x, tol: float = 1e-6) -> bool:
+    """Float-level validation of a solver point for the seed
+    (non-compiled) path — the twin of CompiledProblem.check_solution:
+    constraint residuals, variable bounds, and integrality."""
+    idx = {n: i for i, n in enumerate(names)}
+    for expr, kind in prob.cons:
+        v = float(expr.get(1, 0))
+        scale = 1.0 + abs(v)
+        for k, c in expr.items():
+            if k != 1:
+                v += float(c) * x[idx[k]]
+        if kind == ">=0" and v < -tol * scale:
+            return False
+        if kind == "==0" and abs(v) > tol * scale:
+            return False
+    for i, name in enumerate(names):
+        var = prob.vars[name]
+        if var.lb is not None and x[i] < float(var.lb) - tol:
+            return False
+        if var.ub is not None and x[i] > float(var.ub) + tol:
+            return False
+        if var.integer and abs(x[i] - round(x[i])) > 1e-5:
+            return False
+    return True
 
 
 class NumericalTrouble(Exception):

@@ -9,7 +9,7 @@ DESIGN.md §4).
 from __future__ import annotations
 
 from fractions import Fraction
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .affine import Affine, affine_scale, affine_sub
 from .ilp import ILPProblem, Unbounded
@@ -228,9 +228,36 @@ def fm_eliminate(cons: Sequence[Constraint], var: str) -> List[Constraint]:
     return _prune(out)
 
 
+def _normalize(expr: Affine, kind: str) -> Affine:
+    """Scale a constraint row to a canonical form: integer coefficients
+    with gcd 1 (and, for equalities, first nonzero coefficient positive).
+    FM combinations produce scalar multiples of the same hyperplane
+    constantly; normalization makes them hash-equal."""
+    from math import gcd
+
+    nonconst = sorted((k for k in expr if k != 1), key=str)
+    if not nonconst:
+        return dict(expr)
+    den = 1
+    for v in expr.values():
+        den = den * v.denominator // gcd(den, v.denominator)
+    num = 0
+    for v in expr.values():
+        num = gcd(num, abs(v.numerator * (den // v.denominator)))
+    scale = Fraction(den, num or 1)
+    if kind == "==0" and expr[nonconst[0]] < 0:
+        scale = -scale
+    return {k: v * scale for k, v in expr.items()}
+
+
 def _prune(cons: List[Constraint]) -> List[Constraint]:
+    """Cheap syntactic pruning: drop trivially-true rows, exact and
+    scaled duplicates, and '>=0' rows dominated by a parallel row with a
+    tighter constant (same normalized non-constant part: expr+c1 >= 0
+    implies expr+c2 >= 0 whenever c2 >= c1)."""
     out: List[Constraint] = []
     seen = set()
+    best_const: Dict[tuple, int] = {}   # parallel-row key -> index in out
     for expr, kind in cons:
         expr = {k: v for k, v in expr.items() if v != 0}
         nonconst = {k: v for k, v in expr.items() if k != 1}
@@ -241,24 +268,82 @@ def _prune(cons: List[Constraint]) -> List[Constraint]:
             # trivially false → keep to signal emptiness
             out.append((expr, kind))
             continue
+        expr = _normalize(expr, kind)
         key = (kind, tuple(sorted(((str(k), v) for k, v in expr.items()))))
         if key in seen:
             continue
+        if kind == ">=0":
+            pkey = tuple(sorted((str(k), v) for k, v in expr.items() if k != 1))
+            prev = best_const.get(pkey)
+            if prev is not None:
+                if out[prev][0].get(1, Fraction(0)) <= expr.get(1, Fraction(0)):
+                    continue          # an existing row is at least as tight
+                out[prev] = (expr, kind)   # this row is tighter: replace
+                seen.add(key)
+                continue
+            best_const[pkey] = len(out)
         seen.add(key)
         out.append((expr, kind))
     return out
 
 
-def bounds_of(cons: Sequence[Constraint], var: str, inner: Sequence[str]):
+def prune_redundant(cons: Sequence[Constraint], context: Sequence[Constraint] = (),
+                    max_lp_rows: int = 200) -> List[Constraint]:
+    """LP-based redundancy elimination for '>=0' rows.
+
+    A row r is removed when the remaining rows (plus ``context``, extra
+    constraints known to hold — e.g. parameter bounds or concrete
+    parameter values baked into the generated code) rationally imply it:
+    min of r's expression over the rest is >= 0.  Removal is exact for
+    integer scanning: any (integer) point satisfying the rest satisfies
+    r.  This is what keeps Fourier–Motzkin projections — and the
+    MINI/MAXI bound chains codegen emits from them — from blowing up on
+    tiled/wavefronted nests.
+
+    ``max_lp_rows`` bounds the work; beyond it the system is returned
+    after syntactic pruning only.
+    """
+    rows = _prune(list(cons))
+    ineq_idx = [i for i, (_, k) in enumerate(rows) if k == ">=0"]
+    if len(ineq_idx) > max_lp_rows:
+        return rows
+    ctx = list(context)
+    removed: Set[int] = set()
+    # widest rows first: combination rows produced by FM have many terms
+    # and are the likeliest to be redundant, and removing them first
+    # shrinks later LP systems
+    order = sorted(ineq_idx, key=lambda i: (-len(rows[i][0]),
+                                            tuple(sorted(map(str, rows[i][0])))))
+    for i in order:
+        expr, _ = rows[i]
+        rest = [rows[j] for j in range(len(rows)) if j != i and j not in removed]
+        m = minimum(rest + ctx, expr)   # unbounded sentinel is negative
+        if m is not None and m >= 0:
+            removed.add(i)
+    return [r for j, r in enumerate(rows) if j not in removed]
+
+
+def bounds_of(cons: Sequence[Constraint], var: str, inner: Sequence[str],
+              context: Sequence[Constraint] = (), lp_prune: int = 12):
     """Return (lower_exprs, upper_exprs) for var after eliminating the
     ``inner`` variables. Bounds are affine in the remaining variables:
     lower:  var >= ceil(expr) ;  upper:  var <= floor(expr)
     Each returned as (affine_over_outer, denominator) with
     var >= expr/denom (lower) etc.
+
+    ``context`` rows (known-true at runtime: parameter bounds, concrete
+    parameter values) feed LP redundancy pruning whenever an elimination
+    leaves more than ``lp_prune`` rows — this is what keeps chained FM
+    from exploding on tiled/wavefronted systems (``lp_prune=0``
+    disables).
     """
     sys = list(cons)
     for v in inner:
         sys = fm_eliminate(sys, v)
+        if lp_prune and len(sys) > lp_prune:
+            sys = prune_redundant(sys, context)
+    if lp_prune and len(sys) > lp_prune:
+        sys = prune_redundant(sys, context)
     lowers, uppers = [], []
     for expr, kind in sys:
         c = expr.get(var, Fraction(0))

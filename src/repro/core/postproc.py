@@ -60,18 +60,26 @@ def find_tilable_bands(sched: Schedule, min_len: int = 2) -> List[Band]:
 
 def tile_schedule(
     sched: Schedule,
-    tile_sizes: Dict[int, Sequence[int]] | Sequence[int] | int = 32,
+    tile_sizes: Dict[int, Sequence[int]] | Sequence[int] | int | str = 32,
     wavefront: bool = False,
     min_band: int = 2,
 ) -> List[ScanStmt]:
     """Build codegen scan specs with tile dimensions inserted.
 
-    tile_sizes: int (uniform), list (per band-dim), or {band_start: [..]}.
+    tile_sizes: int (uniform), list (per band-dim), {band_start: [..]},
+    or a cache-model level: ``"l1"`` / ``"l2"`` / ``"auto"`` (= l2) pick
+    per-band per-dim sizes from the SCoP's access functions so the tile
+    working set fits that cache (see :mod:`repro.core.cachemodel`).
     """
     scan = scan_from_schedule(sched)
     bands = find_tilable_bands(sched, min_band)
     if not bands:
         return scan
+    if isinstance(tile_sizes, str):
+        from .cachemodel import auto_tile_sizes
+        tile_sizes = auto_tile_sizes(
+            sched, level="l2" if tile_sizes == "auto" else tile_sizes,
+            bands=bands)
 
     def sizes_for(band: Band) -> List[int]:
         if isinstance(tile_sizes, int):
@@ -101,7 +109,8 @@ def tile_schedule(
             for k in range(band.length):
                 spec = ss.dims[band.start + k]
                 new_dims.append(
-                    DimSpec("tile", dict(spec.phi), tile=sizes[k], sched_dim=band.start)
+                    DimSpec("tile", dict(spec.phi), tile=sizes[k],
+                            sched_dim=band.start, role="tile")
                 )
             for k in range(band.length):
                 new_dims.append(ss.dims[band.start + k])
@@ -130,4 +139,9 @@ def _insert_wavefront(dims: List[DimSpec], pos: int) -> None:
                 shifted[k] = v
         spec.phi = shifted
     wave_phi = {_yvar(pos + 1): Fraction(1), _yvar(pos + 2): Fraction(1)}
-    dims.insert(pos, DimSpec("eq", wave_phi, sched_dim=dims[pos].sched_dim))
+    dims.insert(pos, DimSpec("eq", wave_phi, sched_dim=dims[pos].sched_dim,
+                             role="wave"))
+    # the first tile counter inside the wave spans the wavefront (the
+    # second is pinned by the equality): mark it parallel for the shared
+    # level_parallel marking (legal by band permutability)
+    dims[pos + 1].role = "wave_par"

@@ -196,7 +196,10 @@ def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
 
     Uncacheable configs (strategy callbacks) schedule normally.  The
     returned Schedule is shared between callers of the same key — treat
-    it as immutable.
+    it as immutable.  Deliberately no ``deps`` pass-through: a cached
+    Schedule embeds its Dependence objects (codegen reads their
+    ``satisfied_at``), so sharing a caller's dependence list across
+    entries would let a later scheduling run mutate earlier cache hits.
     """
     from .scheduler import schedule_scop
 
@@ -209,3 +212,23 @@ def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
     sched = schedule_scop(scop, config, engine=engine, **kwargs)
     cache.put(key, sched)
     return sched
+
+
+# ---------------------------------------------------------------------------
+# autotuner persistence: (SCoP structure, search-space version) → winning
+# kernel-specific configuration.  Reuses the same two-tier cache pool —
+# entries are plain dicts, distinguished from Schedule pickles by key
+# namespace.
+# ---------------------------------------------------------------------------
+
+def autotune_key(scop: Scop, space: Dict[str, Any]) -> str:
+    """Digest for a tuned-config cache entry: the SCoP structure plus the
+    autotuner's search-space descriptor (its version, cache-model spec
+    and measurement settings — anything that can change the winner)."""
+    payload = json.dumps(
+        {"v": CACHE_VERSION, "kind": "autotune",
+         "scop": scop_fingerprint(scop),
+         "space": dict(sorted(space.items()))},
+        sort_keys=True, separators=(",", ":"),
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()

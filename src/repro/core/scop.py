@@ -154,6 +154,20 @@ class Scop:
     def param_names(self) -> List[str]:
         return list(self.params)
 
+    def param_rows(self) -> List[Tuple[Affine, str]]:
+        """Concrete-parameter equality rows (``p == value``) — the LP
+        context shared by array-extent computation, cache-model extent
+        estimation, and C-backend bound pruning."""
+        return [({p: Fraction(1), 1: Fraction(-v)}, "==0")
+                for p, v in self.params.items()]
+
+    def param_min_rows(self) -> List[Tuple[Affine, str]]:
+        """Parametric lower-bound rows (``p >= param_min``) — the
+        context for dependence analysis and the Python oracle's bound
+        pruning, where parameters stay symbolic."""
+        return [({p: Fraction(1), 1: Fraction(-self.param_min)}, ">=0")
+                for p in self.params]
+
     def __repr__(self):
         return f"Scop({self.name}, {len(self.statements)} stmts, params={self.params})"
 

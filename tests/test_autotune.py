@@ -1,0 +1,218 @@
+"""Cache-model tile sizing + kernel-specific autotuner.
+
+Covers the PR-2 performance work: tiling legality (tiled/wavefronted
+variants must reproduce the untransformed oracle's checksum bit-for-bit
+on small instances of the PolyBench fast set), cache-model behaviour
+(budget monotonicity, determinism), autotuner determinism, and the
+schedule-cache persistence of tuned configs (second compile = lookup).
+"""
+import shutil
+
+import pytest
+
+from repro.core import config as CFG
+from repro.core.autotune import (TunedConfig, autotune, build_source,
+                                 candidate_space, static_cost)
+from repro.core.cachemodel import (CacheSpec, auto_tile_sizes,
+                                   band_access_groups, select_tile_sizes,
+                                   stmt_access_groups, working_set_bytes)
+from repro.core.codegen import scan_from_schedule
+from repro.core.postproc import find_tilable_bands, tile_schedule
+from repro.core.schedcache import ScheduleCache
+from repro.core.scheduler import PolyTOPSScheduler, schedule_scop
+from repro.core.scops_polybench import (make_gemm, make_gesummv,
+                                        make_jacobi1d, make_jacobi2d,
+                                        make_mvt, make_trmm)
+
+HAVE_GCC = shutil.which("gcc") is not None
+
+# the PolyBench fast set at test-friendly sizes
+SMALL_FAST_SET = {
+    "gemm": lambda: make_gemm(40),
+    "mvt": lambda: make_mvt(48),
+    "jacobi1d": lambda: make_jacobi1d((6, 44)),
+    "jacobi2d": lambda: make_jacobi2d((5, 22)),
+    "trmm": lambda: make_trmm(36),
+    "gesummv": lambda: make_gesummv(40),
+}
+SCALARS = {"alpha": 1.5, "beta": 0.7, "zero": 0.0, "one": 1.0}
+
+
+def _c_checksum(scop, tc=None):
+    from repro.core.cbackend import CCodeGenerator
+    from repro.core.crunner import compile_and_run
+
+    scalars = {k: v for k, v in SCALARS.items() if k in scop.scalars}
+    if tc is None:     # untransformed program order: the oracle
+        sched = PolyTOPSScheduler(scop, CFG.SchedulerConfig())._fallback_original()
+        src = CCodeGenerator(sched, scalars=scalars).generate()
+    else:
+        sched = schedule_scop(scop, tc.scheduler_config())
+        src = build_source(scop, tc, sched, scalars)
+    return compile_and_run(src, tag=f"at_{scop.name}_{tc.label if tc else 'orig'}",
+                           use_cache=False).checksum
+
+
+# ---------------------------------------------------------------------------
+# tiling legality: every tiled/wavefronted config == untiled oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")
+@pytest.mark.parametrize("name", sorted(SMALL_FAST_SET))
+def test_tiled_variants_match_oracle(name):
+    scop = SMALL_FAST_SET[name]()
+    ref = _c_checksum(scop)
+    configs = [
+        TunedConfig("pluto", tile=8),
+        TunedConfig("pluto", tile="l1"),
+        TunedConfig("tensor", tile="l2"),
+        TunedConfig("pluto", tile=8, wavefront=True),
+    ]
+    for tc in configs:
+        got = _c_checksum(SMALL_FAST_SET[name](), tc)
+        assert abs(got - ref) <= 1e-6 * max(1.0, abs(ref)), \
+            f"{name} {tc.label}: {got!r} != oracle {ref!r}"
+
+
+# ---------------------------------------------------------------------------
+# cache model
+# ---------------------------------------------------------------------------
+
+
+def test_working_set_and_budget_monotonicity():
+    scop = make_gemm(256)
+    sched = schedule_scop(scop, CFG.pluto_style())
+    bands = find_tilable_bands(sched)
+    assert bands, "gemm must have a tilable band"
+    b = bands[0]
+    scan = scan_from_schedule(sched)
+    groups = band_access_groups(scan, b.start, b.length)
+    # gemm: C[i,j], A[i,k], B[k,j] → three access groups
+    assert len(groups) == 3
+    small = working_set_bytes(groups, [8] * b.length)
+    big = working_set_bytes(groups, [64] * b.length)
+    assert small < big
+    # larger budget → componentwise >= tile sizes, and both fit budget
+    spec = CacheSpec()
+    t1 = select_tile_sizes(sched, b.start, b.length, spec.l1_bytes, spec)
+    t2 = select_tile_sizes(sched, b.start, b.length, spec.l2_bytes, spec)
+    assert all(a <= c for a, c in zip(t1, t2))
+    assert working_set_bytes(groups, t1) <= spec.l1_bytes
+    assert working_set_bytes(groups, t2) <= spec.l2_bytes
+
+
+def test_auto_tile_sizes_deterministic():
+    scop = make_gemm(420)
+    s1 = auto_tile_sizes(schedule_scop(scop, CFG.pluto_style()))
+    s2 = auto_tile_sizes(schedule_scop(make_gemm(420), CFG.pluto_style()))
+    assert s1 == s2 and s1      # non-empty, repeatable
+
+
+def test_stmt_access_groups_shared_primitive():
+    scop = make_gemm(64)
+    stmt = scop.statements[1]          # C[i,j] += A[i,k]*B[k,j]
+    groups = stmt_access_groups(stmt, stmt.iters)
+    assert {g.array for g in groups} == {"A", "B", "C"}
+    # C read+write collapse into one group
+    assert len(groups) == 3
+
+
+def test_stencil_spread_counted_once():
+    """jacobi1d's A[t,i-1], A[t,i], A[t,i+1] are one access group with a
+    constant spread, not three groups."""
+    scop = make_jacobi1d((6, 40))
+    sched = schedule_scop(scop, CFG.pluto_style())
+    bands = find_tilable_bands(sched)
+    assert bands
+    scan = scan_from_schedule(sched)
+    groups = band_access_groups(scan, bands[0].start, bands[0].length)
+    arrays = sorted(g.array for g in groups)
+    assert len(arrays) <= 4    # 2 arrays × (read group + write group) max
+    assert any(any(s > 0 for s in g.spread) for g in groups)
+
+
+# ---------------------------------------------------------------------------
+# autotuner: determinism + cache-hit persistence
+# ---------------------------------------------------------------------------
+
+
+def test_static_ranking_deterministic():
+    scop = make_gemm(64)
+    cache = ScheduleCache(disk=False)
+    r1 = autotune(scop, measure=False, cache=cache, use_cache=False)
+    r2 = autotune(make_gemm(64), measure=False,
+                  cache=ScheduleCache(disk=False), use_cache=False)
+    assert r1.config == r2.config
+    assert r1.ranked == r2.ranked
+    assert r1.source == "static"
+
+
+def test_candidate_space_structure():
+    scop = make_gemm(64)
+    cache = ScheduleCache(disk=False)
+    from repro.core.autotune import _schedules_for_space
+    scheds = _schedules_for_space(scop, cache)
+    cands = candidate_space(scop, scheds)
+    labels = [c.label for c in cands]
+    assert len(labels) == len(set(labels))            # no duplicates
+    assert "pluto" in labels and "tensor" in labels   # untiled bases present
+    assert any("tilel1" in l for l in labels)
+    assert any("tilel2" in l for l in labels)
+    # static costs are finite and positive
+    for tc in cands:
+        c = static_cost(scop, scheds[(tc.strategy, tc.autovec)], tc)
+        assert c > 0
+
+
+@pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")
+def test_autotune_measured_served_from_cache(tmp_path):
+    """Second compile of the same kernel shape must get the tuned config
+    from the schedule cache — in-memory, then across processes via disk."""
+    scop = make_gemm(40)
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    r1 = autotune(scop, scalars=SCALARS, measure=True, top_k=3, cache=cache)
+    assert r1.source == "measured"
+    assert r1.seconds is not None and r1.checksum is not None
+    r2 = autotune(make_gemm(40), scalars=SCALARS, measure=True, top_k=3,
+                  cache=cache)
+    assert r2.source == "cache"
+    assert r2.config == r1.config
+    # a fresh cache over the same directory: disk hit, same config
+    cache2 = ScheduleCache(cache_dir=str(tmp_path))
+    r3 = autotune(make_gemm(40), scalars=SCALARS, measure=True, top_k=3,
+                  cache=cache2)
+    assert r3.source == "cache"
+    assert r3.config == r1.config
+    assert cache2.stats["disk_hits"] >= 1
+
+
+@pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")
+def test_autotune_winner_is_legal(tmp_path):
+    """The tuned config's measured checksum equals the oracle's."""
+    scop = make_trmm(36)
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    r = autotune(scop, scalars=SCALARS, measure=True, top_k=3, cache=cache)
+    if r.source == "measured":
+        ref = _c_checksum(make_trmm(36))
+        assert abs(r.checksum - ref) <= 1e-6 * max(1.0, abs(ref))
+
+
+# ---------------------------------------------------------------------------
+# crunner cache keying
+# ---------------------------------------------------------------------------
+
+
+def test_crunner_key_includes_cflags_and_gcc():
+    from repro.core import crunner
+
+    k1 = crunner._result_key("int main(){}")
+    old = list(crunner.CFLAGS)
+    try:
+        crunner.CFLAGS.append("-O0")
+        k2 = crunner._result_key("int main(){}")
+    finally:
+        crunner.CFLAGS[:] = old
+    assert k1 != k2                       # flag change → new key
+    assert crunner._result_key("int main(){}") == k1   # restored → stable
+    assert crunner.compiler_version()     # fingerprint available

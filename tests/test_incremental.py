@@ -192,6 +192,48 @@ def test_incremental_legality_vs_seed(name):
             assert _sig(seed) == _sig(fast)
 
 
+def test_seed_path_survives_highs_misreports():
+    """gramschmidt/pluto was the known seed-path victim of HiGHS MIP
+    mis-reporting infeasibility on fixing-row chains (ROADMAP residual:
+    it fell back to original order while the incremental path scheduled
+    it properly).  With one-sided fixing rows + point validation +
+    incumbent pinning the seed path must produce a real (non-fallback)
+    schedule with every dependence satisfied."""
+    seed = _schedule(REGISTRY["gramschmidt"](), CFG.pluto_style(),
+                     incremental=False)
+    assert not seed.fallback
+    assert all(d.satisfied_at is not None for d in seed.deps)
+    fast = _schedule(REGISTRY["gramschmidt"](), CFG.pluto_style())
+    assert not fast.fallback
+
+
+def test_lexmin_cloned_uses_one_sided_fixing_rows(monkeypatch):
+    """The seed lexmin must no longer build equality fixing-row chains
+    (the HiGHS mis-report trigger): spy on the internal clone and check
+    every appended fixing row is a one-sided '>=0' row."""
+    p = ILPProblem(incremental=False)
+    p.var("x", ub=5)
+    p.var("y", ub=5)
+    p.add({"x": 1, "y": 1, 1: -4})       # x + y >= 4
+    n_orig = len(p.cons)
+    captured = {}
+    orig_clone = ILPProblem.clone
+
+    def spy(self):
+        c = orig_clone(self)
+        captured["prob"] = c
+        return c
+
+    monkeypatch.setattr(ILPProblem, "clone", spy)
+    sol = p.lexmin([{"x": Fraction(1), "y": Fraction(1)}, {"y": Fraction(1)}])
+    assert sol["x"] + sol["y"] == 4
+    assert sol["y"] == 0                  # stage 2 minimized y exactly
+    added = captured["prob"].cons[n_orig:]
+    assert len(added) == 2                # one fixing row per stage
+    assert all(kind == ">=0" for _, kind in added), \
+        "seed lexmin regressed to equality fixing rows"
+
+
 # ---------------------------------------------------------------------------
 # schedule cache
 # ---------------------------------------------------------------------------
