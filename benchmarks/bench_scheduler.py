@@ -12,14 +12,20 @@ Compares, per PolyBench/NPU kernel and strategy:
 
 Each timing is best-of-``POLYTOPS_BENCH_REPS`` (default 3) of
 ``PolyTOPSScheduler.schedule()`` only; dependence analysis is timed
-separately once per kernel.  Emits CSV rows to stdout and writes
-``BENCH_scheduler.json`` next to this file with per-kernel milliseconds,
-totals, and the geomean speedup of the default configuration over the
-seed path — the number future PRs regress against.
+separately once per kernel.  All modes run the default exact
+lexicographic simplex backend (``engine='lex'``); per-mode exact-pivot
+counts are reported alongside the times.  Emits CSV rows to stdout and
+writes ``BENCH_scheduler.json`` next to this file with per-kernel
+milliseconds, totals, the geomean speedup of the default configuration
+over the seed path, and — when ``BENCH_scheduler_pr2_baseline.json``
+(the frozen HiGHS-era numbers) is present — the geomean ratio of the
+exact backend's decomposed times to that baseline, which tier1.sh gates
+at 1.25x.
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_scheduler
 Env:   POLYTOPS_BENCH_FAST=1 for a 4-kernel subset,
-       POLYTOPS_BENCH_REPS=N for the repeat count.
+       POLYTOPS_BENCH_REPS=N for the repeat count,
+       POLYTOPS_BENCH_ENGINE to override the solver backend.
 """
 from __future__ import annotations
 
@@ -52,13 +58,13 @@ MODES = {
 }
 
 
-def _time_schedule(scop, cfg, deps, reps: int, **kw):
+def _time_schedule(scop, cfg, deps, reps: int, engine: str, **kw):
     best = float("inf")
     stats = {}
     for _ in range(reps):
         for d in deps:
             d.satisfied_at = None
-        sch = PolyTOPSScheduler(scop, cfg, deps=deps, **kw)
+        sch = PolyTOPSScheduler(scop, cfg, deps=deps, engine=engine, **kw)
         t0 = time.perf_counter()
         sched = sch.schedule()
         best = min(best, time.perf_counter() - t0)
@@ -69,6 +75,7 @@ def _time_schedule(scop, cfg, deps, reps: int, **kw):
 def run(out=sys.stdout):
     fast = os.environ.get("POLYTOPS_BENCH_FAST") == "1"
     reps = max(1, int(os.environ.get("POLYTOPS_BENCH_REPS", "3")))
+    engine = os.environ.get("POLYTOPS_BENCH_ENGINE", "lex")
     makers = {k: REGISTRY[k] for k in (KERNELS[:4] if fast else KERNELS)}
     if not fast:
         makers.update(NPU_KERNELS)
@@ -76,7 +83,7 @@ def run(out=sys.stdout):
     # warm scipy/HiGHS once so the first kernel isn't charged for imports
     from scipy.optimize import linprog  # noqa: F401
 
-    print("kernel,strategy,mode,sched_ms,ilp_solves,deps", file=out)
+    print("kernel,strategy,mode,sched_ms,ilp_solves,pivots,deps", file=out)
     results = {}
     for name, maker in makers.items():
         scop = maker()
@@ -88,10 +95,13 @@ def run(out=sys.stdout):
         for sname, mk in STRATEGIES:
             per = {}
             for mode, kw in MODES.items():
-                secs, stats = _time_schedule(scop, mk(), deps, reps, **kw)
+                secs, stats = _time_schedule(scop, mk(), deps, reps, engine,
+                                             **kw)
                 per[mode] = round(secs * 1e3, 2)
+                per[f"{mode}_pivots"] = stats.get("lex_pivots", 0)
                 print(f"{name},{sname},{mode},{secs*1e3:.1f},"
-                      f"{stats.get('ilp_solves', 0)},{len(deps)}", file=out)
+                      f"{stats.get('ilp_solves', 0)},"
+                      f"{stats.get('lex_pivots', 0)},{len(deps)}", file=out)
             # warm path: repeat scheduling is a structural-cache lookup
             cache = ScheduleCache(disk=False)
             cached_schedule_scop(scop, mk(), cache=cache)
@@ -99,7 +109,7 @@ def run(out=sys.stdout):
             cached_schedule_scop(scop, mk(), cache=cache)
             warm = time.perf_counter() - t0
             per["warm"] = round(warm * 1e3, 4)
-            print(f"{name},{sname},warm,{warm*1e3:.3f},0,{len(deps)}",
+            print(f"{name},{sname},warm,{warm*1e3:.3f},0,0,{len(deps)}",
                   file=out)
             per["speedup"] = round(per["seed"] / per["decomposed"], 2)
             entry["strategies"][sname] = per
@@ -118,13 +128,30 @@ def run(out=sys.stdout):
         "kernels": results,
         "total_ms": totals,
         "geomean_speedup_decomposed_vs_seed": geomean,
+        "engine": engine,
         "reps": reps,
         "fast": fast,
     }
+    # regression ratio vs the frozen PR-2 (HiGHS-era) decomposed times:
+    # geomean over every kernel×strategy present in both runs
+    base_path = Path(__file__).parent / "BENCH_scheduler_pr2_baseline.json"
+    if base_path.exists():
+        base = json.loads(base_path.read_text())
+        ratios = []
+        for name, e in results.items():
+            bk = base.get("kernels", {}).get(name, {}).get("strategies", {})
+            for s, per in e["strategies"].items():
+                old = bk.get(s, {}).get("decomposed")
+                if old:
+                    ratios.append(per["decomposed"] / old)
+        if ratios:
+            summary["geomean_vs_pr2_baseline"] = round(
+                math.exp(sum(math.log(r) for r in ratios) / len(ratios)), 3)
     out_path = Path(__file__).parent / (
         "BENCH_scheduler_fast.json" if fast else "BENCH_scheduler.json")
     out_path.write_text(json.dumps(summary, indent=2, sort_keys=True))
     print(f"# geomean speedup (decomposed vs seed): {geomean}x; "
+          f"vs PR2 baseline: {summary.get('geomean_vs_pr2_baseline')}; "
           f"totals {totals} -> {out_path}", file=out)
     return summary
 

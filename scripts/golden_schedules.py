@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Golden-schedule corpus: dump / diff canonical schedules.
+
+The exact lexicographic simplex backend makes every schedule a pure
+function of (kernel, strategy): bit-identical across the seed pipeline,
+the incremental pipeline and repeat runs.  This script freezes that
+function — one JSON per kernel×strategy combo under
+``artifacts/golden_schedules/`` — and lets CI diff fresh schedules
+against the frozen corpus, so *any* change that silently alters a
+schedule (a pivot-rule tweak, a projection bug, a cost-stage reorder)
+fails loudly instead of shipping a perf mystery.
+
+Usage:
+    python scripts/golden_schedules.py check            # diff, exit 1 on drift
+    python scripts/golden_schedules.py update           # regenerate corpus
+    python scripts/golden_schedules.py check --update-golden   # same as update
+
+A schedule dump records the full signature: per-statement rows (kind +
+exact rational coefficients), band structure, per-dimension parallelism,
+the fallback flag, and the solver tag the corpus was generated with.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import config as CFG                       # noqa: E402
+from repro.core.ilp import SOLVER_TAG                      # noqa: E402
+from repro.core.scheduler import PolyTOPSScheduler         # noqa: E402
+from repro.core.scops_npu import (make_lu16, make_trsml,   # noqa: E402
+                                  make_trsmu)
+from repro.core.scops_polybench import REGISTRY            # noqa: E402
+
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "golden_schedules"
+STRATEGIES = ("pluto", "tensor")
+
+
+def all_kernels():
+    makers = dict(REGISTRY)
+    makers.update({"npu_trsml": make_trsml, "npu_trsmu": make_trsmu,
+                   "npu_lu16": make_lu16})
+    return makers
+
+
+def schedule_dump(sched) -> dict:
+    rows = {}
+    for idx, rr in sorted(sched.rows.items()):
+        rows[str(idx)] = [
+            [r.kind, {"|".join(map(str, k)): str(v)
+                      for k, v in sorted(r.coeffs.items())}]
+            for r in rr
+        ]
+    return {
+        "solver": SOLVER_TAG,
+        "rows": rows,
+        "bands": list(sched.bands),
+        "parallel": list(sched.parallel),
+        "fallback": bool(sched.fallback),
+    }
+
+
+def compute_all():
+    out = {}
+    for name, mk in sorted(all_kernels().items()):
+        for style in STRATEGIES:
+            sched = PolyTOPSScheduler(mk(), CFG.STRATEGIES[style]()).schedule()
+            out[f"{name}__{style}"] = schedule_dump(sched)
+    return out
+
+
+def update() -> int:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    fresh = compute_all()
+    for stale in GOLDEN_DIR.glob("*.json"):
+        if stale.stem not in fresh:
+            stale.unlink()
+    for combo, dump in fresh.items():
+        (GOLDEN_DIR / f"{combo}.json").write_text(
+            json.dumps(dump, indent=1, sort_keys=True) + "\n")
+    print(f"golden corpus updated: {len(fresh)} combos -> {GOLDEN_DIR}")
+    return 0
+
+
+def check() -> int:
+    fresh = compute_all()
+    missing, drifted, stale = [], [], []
+    for combo, dump in fresh.items():
+        path = GOLDEN_DIR / f"{combo}.json"
+        if not path.exists():
+            missing.append(combo)
+            continue
+        golden = json.loads(path.read_text())
+        if golden != dump:
+            drifted.append(combo)
+    known = {p.stem for p in GOLDEN_DIR.glob("*.json")}
+    stale = sorted(known - set(fresh))
+    if missing or drifted or stale:
+        for combo in missing:
+            print(f"GOLDEN MISSING: {combo} (run --update-golden)")
+        for combo in drifted:
+            print(f"GOLDEN DRIFT:   {combo} — schedule changed; inspect, then "
+                  f"--update-golden if intentional")
+        for combo in stale:
+            print(f"GOLDEN STALE:   {combo} no longer produced")
+        return 1
+    print(f"golden schedules OK: {len(fresh)} combos bit-identical")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("mode", choices=["check", "update"], nargs="?",
+                    default="check")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="regenerate the corpus instead of checking")
+    args = ap.parse_args()
+    if args.update_golden or args.mode == "update":
+        return update()
+    return check()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

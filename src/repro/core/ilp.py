@@ -2,11 +2,18 @@
 
 Two engines:
 
-* ``HiGHSEngine`` — scipy.optimize.linprog(method='highs') with the
-  ``integrality`` vector: a real branch-and-cut MILP solver. Primary.
-* ``ExactEngine`` — two-phase exact-rational simplex (Bland's rule) +
-  branch & bound on integer variables. Dependency-free, exact; used as
-  fallback and as a cross-check oracle in tests.
+* ``lex`` (default; ``exact`` is an alias) — the exact rational
+  lexicographic simplex in :mod:`repro.core.lexsimplex`: fraction-free
+  integer tableau, branch & bound on the integer variables, and a
+  canonicalizing lexmin whose optimum is *mathematically unique* on the
+  schedule coefficients.  Every schedule is bit-reproducible: the seed
+  pipeline, the incremental pipeline and repeat runs return identical
+  coefficients, which is what the golden-schedule CI gate asserts.
+* ``highs`` — scipy.optimize.linprog(method='highs'), a floating-point
+  branch-and-cut MILP.  Kept as an opt-in cross-check oracle (the
+  hypothesis tests solve random ILPs with both engines) and as the
+  pruning/query backend for :mod:`repro.core.polyhedron`, where rational
+  relaxations are cheap and a wrong vertex cannot change a schedule.
 
 Both are wrapped by :class:`ILPProblem`, which exposes the lexicographic
 multi-objective minimization the paper relies on (Section III-A1: cost
@@ -20,35 +27,34 @@ Incremental core (the compile-time hot path)
 
 The scheduler solves *one* constraint system under many objectives:
 each lexicographic stage only appends a single objective-fixing row.
-The seed implementation cloned the whole model per ``lexmin`` and
-re-materialized dense numpy matrices from Fraction dicts on every
-``solve_min``.  Now:
 
 * :class:`CompiledProblem` keeps the constraint system as growing
   CSR-style ``(indptr, indices, data)`` triplets with a stable variable
-  index; Fraction→float conversion happens exactly once per row.
-* ``lexmin`` runs append-only on the live problem — ``push()`` marks the
-  model, fixing rows are appended per stage, ``pop()`` rewinds both the
-  exact constraint list and the compiled arrays.  The exact-rational
-  engine reads the same appended constraint list, so the cross-check
-  oracle (highs vs exact) exercises the identical incremental path.
-* Warm-start stage skipping: every objective the scheduler emits is
-  over integer variables, so when the previous stage's solution already
+  index; Fraction→float conversion happens exactly once per row (highs
+  engine).  :class:`repro.core.lexsimplex.LexCompiled` is its exact
+  twin: integer-scaled rows reused across lexmins (lex engine).
+* ``lexmin`` runs append-only: fixing rows are appended per stage on
+  one live model/tableau; ``push()``/``pop()`` rewind both the exact
+  constraint list and the compiled images.
+* Warm-start stage skipping: when the previous stage's solution already
   attains the objective's lower bound implied by variable bounds, the
-  stage is provably optimal at that point and the LP call is skipped
-  (only the fixing row is appended).
+  stage is provably optimal there and the solve is skipped.
 
 ``ILPProblem(..., incremental=False)`` preserves the seed clone+dense
-pipeline verbatim for benchmarking and differential tests.
+pipeline for benchmarking and differential tests; under the ``lex``
+engine both modes share the per-lexmin tableau (the incremental flag
+then only controls the *scheduler-level* reuse: Farkas memoization,
+per-band base problems, compiled dependence polyhedra).
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .affine import Affine
+from . import lexsimplex
+from .lexsimplex import SOLVER_TAG, Unbounded  # re-exported  # noqa: F401
 
 INF = float("inf")
 
@@ -62,7 +68,8 @@ class _Var:
 
 
 class CompiledProblem:
-    """Append-only numeric (float/CSR) image of an :class:`ILPProblem`.
+    """Append-only numeric (float/CSR) image of an :class:`ILPProblem`
+    for the highs engine.
 
     ``>=0`` rows are stored negated as ``A_ub · x <= b_ub`` and ``==0``
     rows as ``A_eq · x = b_eq`` — exactly the layout scipy's linprog
@@ -86,7 +93,6 @@ class CompiledProblem:
         self.eq_indices: List[int] = []
         self.eq_data: List[float] = []
         self.eq_rhs: List[float] = []
-        self._mats = None   # matrices of the last linprog() call
 
     @property
     def n_vars(self) -> int:
@@ -105,8 +111,7 @@ class CompiledProblem:
 
     def add_cons_batch(self, rows) -> None:
         """Append many constraint rows with one batched Fraction→float
-        conversion (see ``linalg_q.fractions_to_float_array``) — the sync
-        point where whole Farkas expansions cross into float-land."""
+        conversion (see ``linalg_q.fractions_to_float_array``)."""
         from .linalg_q import fractions_to_float_array
 
         flat = []
@@ -137,25 +142,6 @@ class CompiledProblem:
                 self.eq_indptr.append(len(self.eq_indices))
                 self.eq_rhs.append(-const)
             self.kinds.append(kind)
-
-    def add_con(self, expr: Affine, kind: str) -> None:
-        idx = self.idx
-        const = float(expr.get(1, 0))
-        if kind == ">=0":   # row·x + const >= 0  →  -row·x <= const
-            for k, v in expr.items():
-                if k != 1 and v:
-                    self.ub_indices.append(idx[k])
-                    self.ub_data.append(-float(v))
-            self.ub_indptr.append(len(self.ub_indices))
-            self.ub_rhs.append(const)
-        else:
-            for k, v in expr.items():
-                if k != 1 and v:
-                    self.eq_indices.append(idx[k])
-                    self.eq_data.append(float(v))
-            self.eq_indptr.append(len(self.eq_indices))
-            self.eq_rhs.append(-const)
-        self.kinds.append(kind)
 
     def truncate(self, n_vars: int, n_rows: int) -> None:
         while len(self.kinds) > n_rows:
@@ -211,7 +197,6 @@ class CompiledProblem:
         integrality = np.asarray(self.integrality)
         if not integrality.any():
             integrality = None
-        self._mats = (a_ub, b_ub, a_eq, b_eq)
         try:
             from scipy.optimize._linprog_highs import _linprog_highs
             from scipy.optimize._linprog_util import _LPProblem
@@ -233,31 +218,6 @@ class CompiledProblem:
                 method="highs",
             )
 
-    def check_solution(self, x, tol: float = 1e-6) -> bool:
-        """Float-level sanity check of a solver solution against the
-        compiled system (the seed's public-``linprog`` path ran scipy's
-        ``_check_result``; going straight to the backend skips it, and
-        HiGHS MIP occasionally reports an infeasible point as optimal).
-        """
-        import numpy as np
-
-        a_ub, b_ub, a_eq, b_eq = self._mats
-        if len(b_ub) and np.max(a_ub @ x - b_ub, initial=0.0) > tol * (
-                1.0 + float(np.max(np.abs(b_ub), initial=0.0))):
-            return False
-        if len(b_eq) and np.max(np.abs(a_eq @ x - b_eq), initial=0.0) > tol * (
-                1.0 + float(np.max(np.abs(b_eq), initial=0.0))):
-            return False
-        lb = np.asarray(self.lb)
-        ub = np.asarray(self.ub)
-        if np.any(x < lb - tol) or np.any(x > ub + tol):
-            return False
-        integ = np.asarray(self.integrality, dtype=bool)
-        if integ.any() and np.max(np.abs(x[integ] - np.round(x[integ])),
-                                  initial=0.0) > 1e-5:
-            return False
-        return True
-
 
 class ILPProblem:
     """An ILP over named variables with affine constraints.
@@ -266,13 +226,17 @@ class ILPProblem:
     '>=0' or '==0'.
     """
 
-    def __init__(self, engine: str = "highs", incremental: bool = True):
+    def __init__(self, engine: str = "lex", incremental: bool = True):
+        if engine == "exact":
+            engine = "lex"
         self.vars: Dict[str, _Var] = {}
         self.cons: List[tuple[Affine, str]] = []
         self.engine = engine
         self.incremental = incremental
         self.stages_skipped = 0     # warm-skipped stages of the last lexmin
+        self.last_pivots = 0        # exact-simplex pivots accumulated
         self._compiled: Optional[CompiledProblem] = None
+        self._lex: Optional[lexsimplex.LexCompiled] = None
 
     # -- model building ---------------------------------------------------
     def var(self, name: str, lb=0, ub=None, integer: bool = True) -> str:
@@ -306,7 +270,8 @@ class ILPProblem:
 
     # -- incremental state -------------------------------------------------
     def _compile(self) -> CompiledProblem:
-        """Sync the compiled image with vars/cons added since last call."""
+        """Sync the compiled float image with vars/cons added since the
+        last call (highs engine)."""
         c = self._compiled
         if c is None:
             c = self._compiled = CompiledProblem()
@@ -332,6 +297,8 @@ class ILPProblem:
                 del self.vars[name]
         if self._compiled is not None:
             self._compiled.truncate(n_vars, n_cons)
+        if self._lex is not None:
+            self._lex.truncate(n_vars, n_cons)
 
     # -- solving -----------------------------------------------------------
     def _order(self) -> List[str]:
@@ -341,14 +308,11 @@ class ILPProblem:
         """Minimize one objective. Returns (value, solution) or None if
         infeasible. Raises Unbounded if unbounded.
 
-        ``want`` (incremental highs path only): iterable of variable
-        names to convert to exact Fractions in the returned solution, in
-        addition to the objective's own variables — the float→Fraction
-        snap of hundreds of Farkas multipliers per solve is pure waste
-        for callers that only read schedule coefficients.  ``None``
-        converts everything (the seed behaviour)."""
-        if self.engine == "exact":
-            return _exact_solve(self, objective)
+        ``want``: iterable of variable names to materialize in the
+        returned solution, in addition to the objective's own variables.
+        ``None`` converts everything."""
+        if self.engine == "lex":
+            return lexsimplex.solve_min(self, objective, want)
         if self.incremental:
             return _highs_solve_compiled(self, objective, want)
         return _highs_solve(self, objective)
@@ -367,83 +331,25 @@ class ILPProblem:
             lb += c * b
         return lb
 
-    # big-M weights above this are unsafe under HiGHS float tolerances
-    _MAX_COMBINE_WEIGHT = 10 ** 6
-
-    def _stage_box(self, obj: Affine) -> Tuple[Fraction, Fraction]:
-        """(min, max) of obj over the variable boxes (vars box-bounded)."""
-        lo = hi = obj.get(1, Fraction(0))
-        for k, c in obj.items():
-            if k == 1 or c == 0:
-                continue
-            v = self.vars[k]
-            lo += c * (v.lb if c > 0 else v.ub)
-            hi += c * (v.ub if c > 0 else v.lb)
-        return lo, hi
-
-    def _combine_tail(self, objectives: Sequence[Affine]):
-        """Split the stage list into ``(head, combined, suffix)``: the
-        maximal safe suffix collapsed into one exact weighted objective
-        (``combined`` is None and ``suffix`` empty when nothing combines;
-        ``suffix`` keeps the original stages as the fallback plan).
-
-        Valid whenever every combined stage is integer-valued (integer
-        coefficients over integer variables) with finite variable boxes:
-        with W > (box range of the lower-priority remainder), minimizing
-        W·f + g forces f to its lexicographic optimum exactly, because f
-        moves in integer steps.  The scheduler's canonical tail
-        (Σ T_par, Σ T_it, weighted order, Σ T_cst) — typically 4 MILP
-        solves per lexmin — becomes a single solve.  Weights are capped
-        so float objectives stay well inside HiGHS tolerances."""
-        def combinable(obj: Affine) -> bool:
-            for k, c in obj.items():
-                if k == 1 or c == 0:
-                    continue
-                if c.denominator != 1:
-                    return False
-                v = self.vars[k]
-                if (not v.integer or v.lb is None or v.ub is None
-                        or v.lb.denominator != 1 or v.ub.denominator != 1):
-                    return False
-            return True
-
-        n = len(objectives)
-        if n < 2 or not combinable(objectives[-1]):
-            return list(objectives), None, []
-        combined = dict(objectives[-1])
-        clo, chi = self._stage_box(combined)
-        first = n - 1                      # index of first absorbed stage
-        while first > 0 and combinable(objectives[first - 1]):
-            w = chi - clo + 1
-            if w > self._MAX_COMBINE_WEIGHT:
-                break
-            stage = objectives[first - 1]
-            slo, shi = self._stage_box(stage)
-            for k, c in stage.items():
-                combined[k] = combined.get(k, Fraction(0)) + w * c
-            clo, chi = w * slo + clo, w * shi + chi
-            first -= 1
-        if first == n - 1:
-            return list(objectives), None, []
-        return (list(objectives[:first]), combined,
-                [dict(o) for o in objectives[first:]])
-
-    def lexmin(self, objectives: Sequence[Affine], want=None) -> Optional[Dict[str, Fraction]]:
+    def lexmin(self, objectives: Sequence[Affine], want=None,
+               canon=None) -> Optional[Dict[str, Fraction]]:
         """Lexicographic minimization: minimize objectives[0], fix its
         value, then objectives[1], ... Returns the final solution.
 
-        Incremental mode appends one fixing row per stage to the live
-        model (rewound on exit) instead of cloning; box-bounded integer
-        suffix stages are collapsed into one weighted solve; a stage
-        whose previous-stage solution already attains the bound-implied
-        optimum is skipped outright (see module docstring).  ``want``
-        limits exact solution conversion as in :meth:`solve_min` (every
-        stage objective's variables are converted regardless)."""
+        Under the ``lex`` engine this is exact and *canonical*: after
+        the given objectives, the ``canon`` variables (default: every
+        box-bounded integer variable, in declaration order) are
+        minimized lexicographically, so the returned values of those
+        variables are a pure function of the mathematical problem —
+        identical across the seed path, the incremental path and repeat
+        runs.  ``want`` limits solution materialization as in
+        :meth:`solve_min`."""
+        if self.engine == "lex":
+            return lexsimplex.lexmin(self, objectives, want=want, canon=canon)
         if not self.incremental:
             return self._lexmin_cloned(objectives)
         if not objectives:
             objectives = [{}]
-        head, combined, suffix = self._combine_tail(objectives)
         if want is not None:
             want = set(want)
             for obj in objectives:
@@ -451,98 +357,44 @@ class ILPProblem:
         mark = self.push()
         try:
             self.stages_skipped = 0
-            sol, ok = self._run_stages(head, None, want)
-            if not ok:
-                return None
-            if combined is not None:
-                try:
-                    sol, ok = self._run_stages([combined], sol, want,
-                                               raise_trouble=True)
-                except NumericalTrouble:
-                    # HiGHS choked on the big-M objective: solve the
-                    # original suffix stage by stage instead
-                    sol, ok = self._run_stages(suffix, sol, want)
-                if not ok:
-                    return None
+            sol: Optional[Dict[str, Fraction]] = None
+            for obj in objectives:
+                val: Optional[Fraction] = None
+                if sol is not None:
+                    bound = self._objective_lower_bound(obj)
+                    if bound is not None:
+                        cur = obj.get(1, Fraction(0))
+                        for k, c in obj.items():
+                            if k != 1:
+                                cur += c * sol[k]
+                        if cur == bound:
+                            val = cur   # provably optimal: skip the solve
+                            self.stages_skipped += 1
+                if val is None:
+                    res = self.solve_min(obj, want)
+                    if res is None:
+                        return None
+                    val, sol = res
+                # fix this objective at its optimum before the next stage
+                fixed = {k: -c for k, c in obj.items()}
+                fixed[1] = fixed.get(1, Fraction(0)) + val
+                self.add(fixed, ">=0")
             return sol
         finally:
             self.pop(mark)
 
-    def _run_stages(self, objs, sol, want, raise_trouble: bool = False):
-        """Run lexicographic stages on the live model, appending one
-        fixing row per stage.  Returns (solution, feasible)."""
-        for obj in objs:
-            val: Optional[Fraction] = None
-            if sol is not None:
-                bound = self._objective_lower_bound(obj)
-                if bound is not None:
-                    cur = obj.get(1, Fraction(0))
-                    for k, c in obj.items():
-                        if k != 1:
-                            cur += c * sol[k]
-                    if cur == bound:
-                        val = cur   # provably optimal: skip the solve
-                        self.stages_skipped += 1
-            if val is None:
-                if raise_trouble and self.engine != "exact":
-                    res = _highs_solve_compiled(self, obj, want,
-                                                on_trouble="raise")
-                else:
-                    res = self.solve_min(obj, want)
-                if res is None and sol is not None:
-                    # a later lexmin stage can never be infeasible: the
-                    # previous stage's optimum satisfies its own fixing
-                    # row.  This is HiGHS mis-reporting infeasibility —
-                    # keep the incumbent and pin the stage at the value
-                    # it attains: legal and deterministic (at worst
-                    # suboptimal in lower-priority stages; an exact
-                    # re-solve here costs minutes on large kernels).
-                    val = obj.get(1, Fraction(0))
-                    for k, c in obj.items():
-                        if k != 1:
-                            val += c * sol[k]
-                elif res is None:
-                    return None, False
-                else:
-                    val, sol = res
-            # fix this objective at its optimum before the next stage.
-            # obj ≤ val (with obj ≥ val implied by optimality) — the
-            # one-sided form is equivalent to the seed's equality row but
-            # measurably gentler on HiGHS: the equality chains it builds
-            # can make HiGHS mis-report optimality/infeasibility (see
-            # check_solution), the inequality form does not.
-            fixed = {k: -c for k, c in obj.items()}
-            fixed[1] = fixed.get(1, Fraction(0)) + val
-            self.add(fixed, ">=0")
-        return sol, True
-
     def _lexmin_cloned(self, objectives: Sequence[Affine]) -> Optional[Dict[str, Fraction]]:
-        """The seed clone-per-lexmin path (kept for benchmarking).
-
-        Fixing rows use the same one-sided ``obj <= val`` form as the
-        incremental path (``obj >= val`` is implied by optimality): the
-        seed's equality chains could push HiGHS MIP into mis-reported
-        optimality/infeasibility on later stages — the source of the
-        5/140 kernel×strategy divergences noted in ROADMAP.md."""
+        """The seed clone-per-lexmin path (kept for benchmarking the
+        highs engine; the lex engine handles both modes above)."""
         prob = self.clone()
         sol: Optional[Dict[str, Fraction]] = None
         if not objectives:
             objectives = [{}]
-        for i, obj in enumerate(objectives):
+        for obj in objectives:
             res = prob.solve_min(obj)
-            if res is None and sol is not None:
-                # later stages cannot be infeasible (the previous optimum
-                # satisfies its fixing row): HiGHS mis-report — keep the
-                # incumbent, pin the stage at the value it attains (same
-                # recovery as the incremental path's _run_stages)
-                val = obj.get(1, Fraction(0))
-                for k, c in obj.items():
-                    if k != 1:
-                        val += c * sol[k]
-            elif res is None:
+            if res is None:
                 return None
-            else:
-                val, sol = res
+            val, sol = res
             fixed = {k: -c for k, c in obj.items()}
             fixed[1] = fixed.get(1, Fraction(0)) + val
             prob.add(fixed, ">=0")
@@ -552,12 +404,8 @@ class ILPProblem:
         return self.solve_min({}, want=()) is not None
 
 
-class Unbounded(Exception):
-    pass
-
-
 # ---------------------------------------------------------------------------
-# HiGHS engine (scipy)
+# HiGHS engine (scipy) — opt-in cross-check / polyhedron-query backend
 # ---------------------------------------------------------------------------
 
 def _highs_solve(prob: ILPProblem, objective: Affine):
@@ -602,32 +450,28 @@ def _highs_solve(prob: ILPProblem, objective: Affine):
         integrality=integrality if integrality.any() else None,
         method="highs",
     )
-    if res.status == 2:  # infeasible
-        return None
-    if res.status == 3:
-        raise Unbounded(str(objective))
-    if not res.success or not _seed_point_valid(prob, names, res.x):
-        # numerical trouble (or HiGHS MIP reporting an infeasible point
-        # as optimal — same failure mode the incremental path validates
-        # against in CompiledProblem.check_solution): exact engine
-        return _exact_solve(prob, objective)
-    sol: Dict[str, Fraction] = {}
-    for i, name in enumerate(names):
-        x = res.x[i]
-        if prob.vars[name].integer:
-            sol[name] = Fraction(round(x))
-        else:
-            sol[name] = Fraction(x).limit_denominator(10**9)
-    val = Fraction(0)
-    for k, v in objective.items():
-        val += v if k == 1 else v * sol[k]
-    return val, sol
+    return _interpret_highs(prob, res, objective, None, names, idx)
 
 
-def _seed_point_valid(prob: ILPProblem, names, x, tol: float = 1e-6) -> bool:
-    """Float-level validation of a solver point for the seed
-    (non-compiled) path — the twin of CompiledProblem.check_solution:
-    constraint residuals, variable bounds, and integrality."""
+def _highs_solve_compiled(prob: ILPProblem, objective: Affine, want=None):
+    """Incremental-path twin of :func:`_highs_solve`: the constraint
+    matrices come from the cached :class:`CompiledProblem` arrays and
+    only the requested variables (``want`` + objective vars; None = all)
+    are converted to Fractions."""
+    comp = prob._compile()
+    res = comp.linprog(objective)
+    return _interpret_highs(prob, res, objective, want, comp.names, comp.idx)
+
+
+def _point_valid(prob, names, x, tol: float = 1e-6) -> bool:
+    """Float-level residual/bounds/integrality check of a HiGHS point.
+    HiGHS can report an invalid point as optimal (MIP fixing-row chains,
+    ill-scaled rational relaxations); an invalid point is re-solved with
+    the exact engine rather than silently accepted — the polyhedron
+    query layer is pinned to ``highs`` and must never abort a
+    compilation over a tolerance hiccup.  (The float-era *scheduling*
+    recovery — incumbent pinning on mis-reported lexmin infeasibility —
+    stays deleted: the schedule path defaults to the exact engine.)"""
     idx = {n: i for i, n in enumerate(names)}
     for expr, kind in prob.cons:
         v = float(expr.get(1, 0))
@@ -650,40 +494,21 @@ def _seed_point_valid(prob: ILPProblem, names, x, tol: float = 1e-6) -> bool:
     return True
 
 
-class NumericalTrouble(Exception):
-    """HiGHS reported success but the point fails validation (or reported
-    a non-status error). Raised only when the caller asked to handle the
-    retry itself (``on_trouble='raise'``)."""
-
-
-def _highs_solve_compiled(prob: ILPProblem, objective: Affine, want=None,
-                          on_trouble: str = "exact"):
-    """Incremental-path twin of :func:`_highs_solve`: same status
-    handling and exact solution snapping, but the constraint matrices
-    come from the cached :class:`CompiledProblem` arrays and only the
-    requested variables (``want`` + objective vars; None = all) are
-    converted to Fractions.  Every accepted point is validated against
-    the compiled system; invalid points go to the exact engine (seed
-    semantics) or raise :class:`NumericalTrouble` (``on_trouble='raise'``)."""
-    comp = prob._compile()
-    res = comp.linprog(objective)
+def _interpret_highs(prob, res, objective, want, names, idx):
     if res.status == 2:  # infeasible
         return None
     if res.status == 3:
         raise Unbounded(str(objective))
-    if not res.success or not comp.check_solution(res.x):
-        # numerical trouble: retry with exact engine
-        if on_trouble == "raise":
-            raise NumericalTrouble(str(objective))
-        return _exact_solve(prob, objective)
+    if not res.success or not _point_valid(prob, names, res.x):
+        # numerical trouble: the exact engine answers instead
+        return lexsimplex.solve_min(prob, objective, want)
     if want is None:
-        names = comp.names
+        sel = names
     else:
-        names = {k for k in objective if k != 1}
-        names.update(k for k in want if k in comp.idx)
+        sel = {k for k in objective if k != 1}
+        sel.update(k for k in want if k in idx)
     sol: Dict[str, Fraction] = {}
-    idx = comp.idx
-    for name in names:
+    for name in sel:
         x = res.x[idx[name]]
         if prob.vars[name].integer:
             sol[name] = Fraction(round(x))
@@ -693,234 +518,3 @@ def _highs_solve_compiled(prob: ILPProblem, objective: Affine, want=None,
     for k, v in objective.items():
         val += v if k == 1 else v * sol[k]
     return val, sol
-
-
-# ---------------------------------------------------------------------------
-# Exact engine: two-phase rational simplex + branch & bound
-# ---------------------------------------------------------------------------
-
-def _exact_solve(prob: ILPProblem, objective: Affine):
-    names = prob._order()
-    return _branch_and_bound(prob, names, objective, [])
-
-
-def _branch_and_bound(prob, names, objective, extra):
-    lp = _ExactLP.from_problem(prob, names, objective, extra)
-    r = lp.solve()
-    if r is None:
-        return None
-    val, sol = r
-    # find fractional integer var
-    frac_var = None
-    for name in names:
-        if prob.vars[name].integer and sol[name].denominator != 1:
-            frac_var = name
-            break
-    if frac_var is None:
-        return val, sol
-    x = sol[frac_var]
-    floor_v = x.numerator // x.denominator
-    best = None
-    for lo_hi in ("le", "ge"):
-        if lo_hi == "le":
-            con = ({frac_var: Fraction(-1), 1: Fraction(floor_v)}, ">=0")
-        else:
-            con = ({frac_var: Fraction(1), 1: Fraction(-(floor_v + 1))}, ">=0")
-        sub = _branch_and_bound(prob, names, objective, extra + [con])
-        if sub is not None and (best is None or sub[0] < best[0]):
-            best = sub
-    return best
-
-
-class _ExactLP:
-    """min c·x s.t. Ax = b, x >= 0 — two-phase simplex, Bland's rule.
-
-    General bounds/frees are handled by shifting and splitting at
-    construction time.
-    """
-
-    def __init__(self, a: List[List[Fraction]], b: List[Fraction], c: List[Fraction]):
-        self.a, self.b, self.c = a, b, c
-
-    @classmethod
-    def from_problem(cls, prob: ILPProblem, names, objective, extra=()):  # noqa: C901
-        # variable mapping: each model var -> expression over nonneg simplex vars
-        cols: List[str] = []          # simplex column names
-        expr_of: Dict[str, Dict[str, Fraction]] = {}  # model var -> {col: coeff} + const
-        const_of: Dict[str, Fraction] = {}
-        for name in names:
-            v = prob.vars[name]
-            if v.lb is not None:
-                col = f"x:{name}"
-                cols.append(col)
-                expr_of[name] = {col: Fraction(1)}
-                const_of[name] = v.lb
-            else:
-                cp, cn = f"xp:{name}", f"xn:{name}"
-                cols.extend([cp, cn])
-                expr_of[name] = {cp: Fraction(1), cn: Fraction(-1)}
-                const_of[name] = Fraction(0)
-        rows: List[tuple[Dict[str, Fraction], str, Fraction]] = []
-
-        def add_row(expr: Affine, kind: str):
-            row: Dict[str, Fraction] = {}
-            const = expr.get(1, Fraction(0))
-            for k, coef in expr.items():
-                if k == 1:
-                    continue
-                const += coef * const_of[k]
-                for col, cc in expr_of[k].items():
-                    row[col] = row.get(col, Fraction(0)) + coef * cc
-            rows.append((row, kind, const))
-
-        for expr, kind in list(prob.cons) + list(extra):
-            add_row(expr, kind)
-        for name in names:
-            v = prob.vars[name]
-            if v.ub is not None:
-                add_row({name: Fraction(-1), 1: v.ub}, ">=0")
-
-        # to standard form Ax = b, x >= 0 with slacks
-        ncols = {c: i for i, c in enumerate(cols)}
-        nslack = sum(1 for _, kind, _ in rows if kind == ">=0")
-        width = len(cols) + nslack
-        a: List[List[Fraction]] = []
-        b: List[Fraction] = []
-        slack_i = 0
-        for row, kind, const in rows:
-            r = [Fraction(0)] * width
-            for col, cc in row.items():
-                r[ncols[col]] = cc
-            if kind == ">=0":  # r·x + const >= 0 → r·x - s = -const
-                r[len(cols) + slack_i] = Fraction(-1)
-                slack_i += 1
-            a.append(r)
-            b.append(-const)
-        # objective over simplex columns
-        c_vec = [Fraction(0)] * width
-        obj_const = objective.get(1, Fraction(0))
-        for k, coef in objective.items():
-            if k == 1:
-                continue
-            obj_const += coef * const_of[k]
-            for col, cc in expr_of[k].items():
-                c_vec[ncols[col]] += coef * cc
-        lp = cls(a, b, c_vec)
-        lp._cols = cols
-        lp._width = width
-        lp._expr_of = expr_of
-        lp._const_of = const_of
-        lp._names = names
-        lp._obj_const = obj_const
-        lp._prob = prob
-        return lp
-
-    def solve(self):
-        a = [row[:] for row in self.a]
-        b = self.b[:]
-        m = len(a)
-        if m == 0:
-            names = self._names
-            sol = {n: self._const_of[n] for n in names}
-            return self._obj_const, sol
-        width = len(a[0])
-        # make b >= 0
-        for i in range(m):
-            if b[i] < 0:
-                a[i] = [-x for x in a[i]]
-                b[i] = -b[i]
-        # phase 1: artificials
-        for i in range(m):
-            for j in range(m):
-                a[i].append(Fraction(1) if i == j else Fraction(0))
-        basis = list(range(width, width + m))
-        cost1 = [Fraction(0)] * width + [Fraction(1)] * m
-        val = self._simplex(a, b, cost1, basis)
-        if val is None or val > 0:
-            return None
-        # drive artificials out of basis if possible
-        for i in range(m):
-            if basis[i] >= width:
-                piv = None
-                for j in range(width):
-                    if a[i][j] != 0:
-                        piv = j
-                        break
-                if piv is not None:
-                    self._pivot(a, b, basis, i, piv)
-        # drop artificial columns & redundant rows
-        keep = [i for i in range(m) if basis[i] < width]
-        a = [a[i][:width] for i in keep]
-        b = [b[i] for i in keep]
-        basis = [basis[i] for i in keep]
-        cost2 = self.c[:width]
-        val = self._simplex(a, b, cost2, basis)
-        if val is None:
-            raise Unbounded("exact LP unbounded")
-        x = [Fraction(0)] * width
-        for i, bi in enumerate(basis):
-            x[bi] = b[i]
-        sol: Dict[str, Fraction] = {}
-        ncols = {c: i for i, c in enumerate(self._cols)}
-        for name in self._names:
-            v = self._const_of[name]
-            for col, cc in self._expr_of[name].items():
-                v += cc * x[ncols[col]]
-            sol[name] = v
-        obj = Fraction(0)
-        for i in range(min(width, len(self.c))):
-            obj += self.c[i] * x[i]
-        return obj + self._obj_const, sol
-
-    @staticmethod
-    def _pivot(a, b, basis, r, c):
-        m, n = len(a), len(a[0])
-        pv = a[r][c]
-        a[r] = [x / pv for x in a[r]]
-        b[r] = b[r] / pv
-        for i in range(m):
-            if i != r and a[i][c] != 0:
-                f = a[i][c]
-                a[i] = [x - f * y for x, y in zip(a[i], a[r])]
-                b[i] = b[i] - f * b[r]
-        basis[r] = c
-
-    @classmethod
-    def _simplex(cls, a, b, cost, basis):
-        """Min cost·x. Returns objective value, or None if unbounded is
-        signalled via exception by caller convention (phase2)."""
-        m = len(a)
-        n = len(a[0]) if m else 0
-        while True:
-            # reduced costs: z_j - c_j
-            y = {}
-            red = [Fraction(0)] * n
-            cb = [cost[basis[i]] if basis[i] < len(cost) else Fraction(0) for i in range(m)]
-            for j in range(n):
-                zj = Fraction(0)
-                for i in range(m):
-                    if a[i][j] != 0 and cb[i] != 0:
-                        zj += cb[i] * a[i][j]
-                red[j] = (cost[j] if j < len(cost) else Fraction(0)) - zj
-            enter = None
-            for j in range(n):  # Bland: first negative reduced cost
-                if red[j] < 0 and j not in basis:
-                    enter = j
-                    break
-            if enter is None:
-                val = Fraction(0)
-                for i in range(m):
-                    val += cb[i] * b[i]
-                return val
-            # ratio test (Bland: smallest index on ties)
-            leave = None
-            best = None
-            for i in range(m):
-                if a[i][enter] > 0:
-                    ratio = b[i] / a[i][enter]
-                    if best is None or ratio < best or (ratio == best and basis[i] < basis[leave]):
-                        best = ratio
-                        leave = i
-            if leave is None:
-                return None  # unbounded
-            cls._pivot(a, b, basis, leave, enter)

@@ -201,6 +201,24 @@ def batch_scale_to_int(rows: Mat) -> Mat:
     return [scale_to_int(r) for r in rows]
 
 
+def rationals_to_int_row(vals: Sequence[Fraction]) -> tuple[List[int], int]:
+    """Scale a rational row to ``(integer_row, den)`` with
+    ``integer_row[i] / den == vals[i]`` and ``den`` the lcm of the
+    denominators (1 for already-integer rows — the common case for
+    normalized constraint systems, returned without any multiplication).
+    This is the Fraction→integer boundary of the exact simplex tableau
+    (``repro.core.lexsimplex``): every constraint row and objective
+    crosses through here exactly once."""
+    den = 1
+    for v in vals:
+        d = v.denominator
+        if d != 1:
+            den = den * d // gcd(den, d)
+    if den == 1:
+        return [v.numerator for v in vals], 1
+    return [int(v * den) for v in vals], den
+
+
 def fractions_to_float_array(vals: Sequence[Fraction]):
     """Batched exact→float conversion (numpy float64 array).
 

@@ -27,7 +27,14 @@ def _vars_of(cons: Sequence[Constraint]) -> List[str]:
 
 
 def _build_lp(cons: Sequence[Constraint], extra_vars: Iterable[str] = ()) -> ILPProblem:
-    p = ILPProblem()
+    # deliberately pinned to the float HiGHS engine: polyhedron queries
+    # (dependence distances, satisfaction probes, redundancy pruning in
+    # prune_redundant) only consume optimal *values* on rational
+    # relaxations, where HiGHS is cheap and a tie between alternate
+    # optimal vertices cannot change a schedule.  The exact ``lex``
+    # engine is reserved for the scheduler's lexmin, where the vertex
+    # itself is the answer.
+    p = ILPProblem(engine="highs")
     for v in list(_vars_of(cons)) + list(extra_vars):
         p.ensure_var(v, lb=None, integer=False)
     for expr, kind in cons:
@@ -250,15 +257,20 @@ def _normalize(expr: Affine, kind: str) -> Affine:
     return {k: v * scale for k, v in expr.items()}
 
 
-def _prune(cons: List[Constraint]) -> List[Constraint]:
+def _prune(cons):
     """Cheap syntactic pruning: drop trivially-true rows, exact and
     scaled duplicates, and '>=0' rows dominated by a parallel row with a
     tighter constant (same normalized non-constant part: expr+c1 >= 0
-    implies expr+c2 >= 0 whenever c2 >= c1)."""
-    out: List[Constraint] = []
+    implies expr+c2 >= 0 whenever c2 >= c1).
+
+    Rows may be ``(expr, kind)`` or ``(expr, kind, *extra)`` — extra
+    fields (e.g. the ancestor sets of ``farkas``' accelerated FM) ride
+    along unchanged, so every pruner in the repo shares this one
+    implementation."""
+    out: List[tuple] = []
     seen = set()
     best_const: Dict[tuple, int] = {}   # parallel-row key -> index in out
-    for expr, kind in cons:
+    for expr, kind, *extra in cons:
         expr = {k: v for k, v in expr.items() if v != 0}
         nonconst = {k: v for k, v in expr.items() if k != 1}
         if not nonconst:
@@ -266,7 +278,7 @@ def _prune(cons: List[Constraint]) -> List[Constraint]:
             if (kind == ">=0" and c >= 0) or (kind == "==0" and c == 0):
                 continue  # trivially true
             # trivially false → keep to signal emptiness
-            out.append((expr, kind))
+            out.append((expr, kind, *extra))
             continue
         expr = _normalize(expr, kind)
         key = (kind, tuple(sorted(((str(k), v) for k, v in expr.items()))))
@@ -278,12 +290,12 @@ def _prune(cons: List[Constraint]) -> List[Constraint]:
             if prev is not None:
                 if out[prev][0].get(1, Fraction(0)) <= expr.get(1, Fraction(0)):
                     continue          # an existing row is at least as tight
-                out[prev] = (expr, kind)   # this row is tighter: replace
+                out[prev] = (expr, kind, *extra)   # tighter: replace
                 seen.add(key)
                 continue
             best_const[pkey] = len(out)
         seen.add(key)
-        out.append((expr, kind))
+        out.append((expr, kind, *extra))
     return out
 
 

@@ -33,10 +33,13 @@ import tempfile
 from typing import Any, Dict, Optional
 
 from .config import SchedulerConfig
+from .ilp import SOLVER_TAG
 from .scop import Scop
 
 # bump when Schedule layout or scheduler semantics change incompatibly
-CACHE_VERSION = 1
+# (v2: exact lexsimplex backend became the default — canonical optima
+# differ from the HiGHS-era vertices, so v1 entries must not be reused)
+CACHE_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -89,15 +92,18 @@ def config_fingerprint(cfg: SchedulerConfig) -> Optional[Dict[str, Any]]:
 def schedule_key(scop: Scop, cfg: SchedulerConfig, engine: str,
                  extra: Optional[Dict[str, Any]] = None) -> Optional[str]:
     """Stable digest for a (Scop, config, engine) triple, or None when
-    the combination cannot be cached.  ``extra`` carries any scheduler
-    kwargs that can change the result (``incremental``, ``decompose``) —
-    the seed and incremental pipelines may pick different optimal
-    vertices, so they must not share cache entries."""
+    the combination cannot be cached.  The key carries the solver tag of
+    the exact backend: a pivoting/canonicalization change that could
+    alter the chosen optimum invalidates every entry.  ``extra`` carries
+    any scheduler kwargs that can change the result (``incremental``,
+    ``decompose``); under the exact engine both pipelines provably agree,
+    but the keys stay distinct so a disagreement could never be masked
+    by cache sharing."""
     cfp = config_fingerprint(cfg)
     if cfp is None:
         return None
     payload = json.dumps(
-        {"v": CACHE_VERSION, "engine": engine,
+        {"v": CACHE_VERSION, "engine": engine, "solver": SOLVER_TAG,
          "scop": scop_fingerprint(scop), "config": cfp,
          "extra": dict(sorted((extra or {}).items()))},
         sort_keys=True, separators=(",", ":"),
@@ -190,7 +196,7 @@ def global_cache() -> ScheduleCache:
 
 
 def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
-                         engine: str = "highs",
+                         engine: str = "lex",
                          cache: Optional[ScheduleCache] = None, **kwargs):
     """Drop-in cached variant of :func:`repro.core.scheduler.schedule_scop`.
 

@@ -44,9 +44,14 @@ solver pipeline is built to amortize everything that repeats:
   satisfaction queries reuse per-dependence LP matrices, with an
   affine-hull reduction that answers constant-distance queries with no
   LP at all.
-* **Incremental lexmin** (``ilp.ILPProblem.lexmin``): append-only fixing
-  rows, warm-start stage skipping, and big-M combination of the
-  box-bounded integer tail stages.
+* **Incremental lexmin** (``ilp.ILPProblem.lexmin`` → the exact
+  rational simplex in ``lexsimplex``): append-only fixing rows on one
+  live tableau, warm-start stage skipping, exact (uncapped) weighted
+  combination of the box-bounded integer tail stages, and a canonical
+  tie-break over the schedule coefficients that makes the chosen
+  optimum unique — seed path ≡ incremental path ≡ repeat runs,
+  bit-for-bit, on every kernel×strategy combination (the
+  golden-schedule CI gate).
 
 ``incremental=False`` reproduces the seed pipeline end to end and is the
 baseline of ``benchmarks/bench_scheduler.py`` (≈3–4x geomean win).
@@ -188,7 +193,7 @@ class StrategyState:
 
 class PolyTOPSScheduler:
     def __init__(self, scop: Scop, config: Optional[SchedulerConfig] = None,
-                 deps: Optional[List[Dependence]] = None, engine: str = "highs",
+                 deps: Optional[List[Dependence]] = None, engine: str = "lex",
                  incremental: bool = True, decompose: bool = True):
         self.scop = scop
         self.config = config or SchedulerConfig()
@@ -205,8 +210,21 @@ class PolyTOPSScheduler:
         self.params = scop.param_names()
         self.stats: Dict[str, Any] = {
             "ilp_solves": 0, "ilp_time": 0.0,
-            "components": 0, "lex_stages_skipped": 0,
+            "components": 0, "lex_stages_skipped": 0, "lex_pivots": 0,
         }
+
+    def _want_order(self, stmts) -> List[str]:
+        """The canonical variable order for lexmin tie-breaking AND the
+        set of variables materialized from solutions.  Identical in the
+        seed and incremental paths — together with the exact engine's
+        canonicalization this makes the chosen optimum a pure function
+        of the mathematical problem, not of the pipeline."""
+        want: List[str] = []
+        for s in stmts:
+            want += [C.t_it(s, k) for k in range(s.dim)]
+            want += [C.t_par(s, p) for p in self.params]
+            want.append(C.t_cst(s))
+        return want
 
     # -- public -------------------------------------------------------------
     def schedule(self) -> Schedule:
@@ -689,19 +707,18 @@ class PolyTOPSScheduler:
                                             dep, self.params, negate=True),
                                         f"lc{dep.id}")
 
-            want = [C.t_cst(s) for s in stmts]
-            for s in stmts:
-                want += [C.t_it(s, k) for k in range(s.dim)]
-                want += [C.t_par(s, p) for p in self.params]
+            want = self._want_order(stmts)
 
             t0 = time.time()
             self.stats["ilp_solves"] += 1
             try:
-                sol = prob.lexmin(stages + tail, want=want)
+                sol = prob.lexmin(stages + tail, want=want, canon=want)
             except Unbounded:
                 sol = None
             self.stats["ilp_time"] += time.time() - t0
             self.stats["lex_stages_skipped"] += prob.stages_skipped
+            self.stats["lex_pivots"] += prob.last_pivots
+            prob.last_pivots = 0
         finally:
             prob.pop(mark)
         if sol is None:
@@ -725,9 +742,12 @@ class PolyTOPSScheduler:
 
     def _solve_dim_seed(self, dc: DimConfig, active, comp, H, dim, directives,
                         vector_iter, with_directives, band_start):
-        """The seed per-dimension ILP, verbatim: one monolithic problem,
-        clone-per-lexmin dense solves, fresh Farkas expansion per call.
-        Kept as the benchmarking baseline (``incremental=False``)."""
+        """The seed per-dimension ILP: one monolithic problem rebuilt
+        from scratch every dimension, no Farkas memoization, no
+        decomposition.  Kept as the benchmarking baseline
+        (``incremental=False``).  It shares the exact engine and the
+        canonical lexmin tie-break with the incremental path, so both
+        must produce bit-identical schedules — a tier-1 invariant."""
         scop, cfg = self.scop, self.config
         stmts = scop.statements
         prob = ILPProblem(self.engine, incremental=False)
@@ -841,14 +861,17 @@ class PolyTOPSScheduler:
                 to[C.t_it(s, k)] = Fraction(k + 1)
             tc[C.t_cst(s)] = Fraction(1)
         tail = [tp, ti, to, tc]
+        want = self._want_order(stmts)
 
         t0 = time.time()
         self.stats["ilp_solves"] += 1
         try:
-            sol = prob.lexmin(stages + tail)
+            sol = prob.lexmin(stages + tail, want=want, canon=want)
         except Unbounded:
             sol = None
         self.stats["ilp_time"] += time.time() - t0
+        self.stats["lex_pivots"] += prob.last_pivots
+        prob.last_pivots = 0
         if sol is None:
             return None
         out: Dict[int, Dict[Tuple, Fraction]] = {}
@@ -1141,7 +1164,7 @@ def _auto_vector_iter(stmt: Statement) -> Optional[int]:
 
 
 def schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
-                  engine: str = "highs", **kwargs) -> Schedule:
+                  engine: str = "lex", **kwargs) -> Schedule:
     """Schedule a SCoP. Extra kwargs (``incremental``, ``decompose``)
     are forwarded to :class:`PolyTOPSScheduler`."""
     return PolyTOPSScheduler(scop, config, engine=engine, **kwargs).schedule()

@@ -1,9 +1,10 @@
 """Incremental ILP core + per-SCC decomposition + schedule cache.
 
-Covers the PR-1 performance work: the compiled/incremental lexmin path
-must agree with the exact-rational oracle on random LPs, per-component
-decomposition must reproduce the monolithic solve, and repeat
-scheduling must be a structural-cache lookup.
+Covers the PR-1 performance work under the exact default backend: the
+float HiGHS cross-check must agree with the exact engine on random
+ILPs, per-component decomposition must reproduce the monolithic solve,
+seed and incremental pipelines must produce identical schedules, and
+repeat scheduling must be a structural-cache lookup.
 """
 import random
 from fractions import Fraction
@@ -177,61 +178,53 @@ def test_decomposition_no_deps_components():
 
 @pytest.mark.parametrize("name", ["gemm", "mm2", "jacobi1d"])
 def test_incremental_legality_vs_seed(name):
-    """The incremental path must stay legality-equivalent to the seed
-    pipeline: every dependence strongly satisfied, and it may only
-    *improve* on seed fallbacks (the seed's equality-fixing rows can
-    push HiGHS into numerical failure; the incremental path's one-sided
-    rows avoid that)."""
+    """The incremental path must be *identical* to the seed pipeline
+    under the exact engine: every dependence strongly satisfied and the
+    full schedule signature equal (no fallback asymmetry — the float-era
+    mis-report recovery paths are gone)."""
     for style in ("pluto", "tensor"):
         seed = _schedule(REGISTRY[name](), CFG.STRATEGIES[style](),
                          incremental=False)
         fast = _schedule(REGISTRY[name](), CFG.STRATEGIES[style]())
         assert all(d.satisfied_at is not None for d in fast.deps)
-        if not seed.fallback:
-            assert not fast.fallback
-            assert _sig(seed) == _sig(fast)
+        assert seed.fallback == fast.fallback
+        assert _sig(seed) == _sig(fast)
 
 
-def test_seed_path_survives_highs_misreports():
-    """gramschmidt/pluto was the known seed-path victim of HiGHS MIP
-    mis-reporting infeasibility on fixing-row chains (ROADMAP residual:
-    it fell back to original order while the incremental path scheduled
-    it properly).  With one-sided fixing rows + point validation +
-    incumbent pinning the seed path must produce a real (non-fallback)
-    schedule with every dependence satisfied."""
+def test_gramschmidt_seed_equals_incremental():
+    """gramschmidt/pluto was the poster child of the HiGHS-era
+    divergence (the seed path fell back to original order while the
+    incremental path scheduled it).  Under the exact backend both paths
+    must produce the same real (non-fallback) schedule with every
+    dependence satisfied — no special-casing left anywhere."""
     seed = _schedule(REGISTRY["gramschmidt"](), CFG.pluto_style(),
                      incremental=False)
     assert not seed.fallback
     assert all(d.satisfied_at is not None for d in seed.deps)
     fast = _schedule(REGISTRY["gramschmidt"](), CFG.pluto_style())
     assert not fast.fallback
+    assert _sig(seed) == _sig(fast)
 
 
-def test_lexmin_cloned_uses_one_sided_fixing_rows(monkeypatch):
-    """The seed lexmin must no longer build equality fixing-row chains
-    (the HiGHS mis-report trigger): spy on the internal clone and check
-    every appended fixing row is a one-sided '>=0' row."""
-    p = ILPProblem(incremental=False)
-    p.var("x", ub=5)
-    p.var("y", ub=5)
-    p.add({"x": 1, "y": 1, 1: -4})       # x + y >= 4
-    n_orig = len(p.cons)
-    captured = {}
-    orig_clone = ILPProblem.clone
-
-    def spy(self):
-        c = orig_clone(self)
-        captured["prob"] = c
-        return c
-
-    monkeypatch.setattr(ILPProblem, "clone", spy)
-    sol = p.lexmin([{"x": Fraction(1), "y": Fraction(1)}, {"y": Fraction(1)}])
-    assert sol["x"] + sol["y"] == 4
-    assert sol["y"] == 0                  # stage 2 minimized y exactly
-    added = captured["prob"].cons[n_orig:]
-    assert len(added) == 2                # one fixing row per stage
-    assert all(kind == ">=0" for _, kind in added), \
-        "seed lexmin regressed to equality fixing rows"
+def test_lexmin_canonical_under_row_reordering():
+    """The exact lexmin's canonical tie-break must make the returned
+    point independent of constraint order — the property that makes
+    seed ≡ incremental equality structural rather than accidental."""
+    rows = [
+        ({"x": 1, "y": 1, 1: -4}, ">=0"),     # x + y >= 4
+        ({"x": 1, "y": -1, 1: 6}, ">=0"),     # x - y >= -6 (slack)
+        ({"x": 2, "y": 1, 1: -5}, ">=0"),     # redundant-ish extra row
+    ]
+    sols = []
+    for order in (rows, rows[::-1], [rows[1], rows[2], rows[0]]):
+        p = ILPProblem()
+        p.var("x", ub=5)
+        p.var("y", ub=5)
+        for e, k in order:
+            p.add(dict(e), k)
+        sols.append(p.lexmin([{"x": Fraction(1), "y": Fraction(1)}]))
+    assert sols[0] == sols[1] == sols[2]
+    assert sols[0]["x"] + sols[0]["y"] == 4
 
 
 # ---------------------------------------------------------------------------

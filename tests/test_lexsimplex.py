@@ -1,0 +1,324 @@
+"""The exact lexicographic simplex core and its determinism guarantees.
+
+Four layers:
+
+* tableau/unit — pivots, feasibility, unboundedness, integrality,
+  free variables, and exactness past the int64 range (object-dtype
+  promotion must be transparent);
+* property — random feasible/infeasible ILPs solved by both the exact
+  core and the HiGHS cross-check oracle must agree on feasibility and
+  on every optimal value (hypothesis when installed, plus a seeded
+  random sweep that always runs);
+* projection — the multiplier-free Farkas rows must define exactly the
+  same schedule-coefficient optima as the replayed multiplier form;
+* end-to-end — *every* kernel×strategy combination schedules to
+  bit-identical signatures via the seed pipeline, the incremental
+  pipeline, and a repeat run: the HiGHS-era alternate-optima residual
+  (~4/56 combos) is now structurally zero.
+"""
+import random
+from fractions import Fraction
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import config as CFG
+from repro.core import costs as C
+from repro.core import lexsimplex as LS
+from repro.core.deps import compute_dependences
+from repro.core.farkas import farkas_expansion, project_farkas, replay_farkas
+from repro.core.ilp import ILPProblem, Unbounded
+from repro.core.scheduler import PolyTOPSScheduler
+from repro.core.scops_npu import make_lu16, make_trsml, make_trsmu
+from repro.core.scops_polybench import REGISTRY
+
+ALL_KERNELS = dict(REGISTRY)
+ALL_KERNELS.update({"npu_trsml": make_trsml, "npu_trsmu": make_trsmu,
+                    "npu_lu16": make_lu16})
+ALL_COMBOS = [(k, s) for k in sorted(ALL_KERNELS) for s in ("pluto", "tensor")]
+assert len(ALL_COMBOS) == 56
+
+
+def _sig(s):
+    return (
+        {i: [(r.kind, tuple(sorted(r.coeffs.items()))) for r in rr]
+         for i, rr in s.rows.items()},
+        tuple(s.bands), tuple(s.parallel), s.fallback,
+    )
+
+
+# ---------------------------------------------------------------------------
+# tableau / unit
+# ---------------------------------------------------------------------------
+
+def test_lex_is_default_engine():
+    assert ILPProblem().engine == "lex"
+    assert ILPProblem("exact").engine == "lex"     # legacy alias
+
+
+def test_solve_min_exact_vertex():
+    p = ILPProblem()
+    p.var("x", ub=10)
+    p.var("y", ub=10)
+    p.add({"x": 2, "y": 1, 1: -5})
+    p.add({"x": 1, "y": 3, 1: -6})
+    v, sol = p.solve_min({"x": 1, "y": 1})
+    assert v == 4 and sol["x"] + sol["y"] == 4
+
+
+def test_integrality_branch_and_bound():
+    p = ILPProblem()
+    p.var("y")
+    p.add({"y": 2, 1: -3})               # y >= 1.5 → integer y >= 2
+    v, sol = p.solve_min({"y": 1})
+    assert v == 2 and sol["y"] == Fraction(2)
+    assert sol["y"].denominator == 1
+
+
+def test_continuous_vertex_is_fractional():
+    p = ILPProblem()
+    p.var("x", lb=0, ub=None, integer=False)
+    p.var("y", lb=0, ub=None, integer=False)
+    p.add({"x": 2, "y": 1, 1: -5})
+    p.add({"x": 1, "y": 3, 1: -6})
+    v, sol = p.solve_min({"x": 1, "y": 1})
+    assert v == Fraction(16, 5)          # exact rational vertex (9/5, 7/5)
+    assert sol["x"] == Fraction(9, 5) and sol["y"] == Fraction(7, 5)
+
+
+def test_free_variable_and_unbounded():
+    p = ILPProblem()
+    p.var("f", lb=None, integer=False)
+    p.add({"f": 1, 1: 5})                # f >= -5
+    v, sol = p.solve_min({"f": 1})
+    assert v == -5 and sol["f"] == -5
+    with pytest.raises(Unbounded):
+        p.solve_min({"f": -1})
+
+
+def test_free_variable_upper_bound_enforced():
+    """A free (lb=None) variable's ub must become a tableau row on the
+    split representation — maximizing must stop at the declared ub, not
+    at a looser constraint row."""
+    p = ILPProblem()
+    p.var("x", lb=None, ub=5, integer=False)
+    p.add({"x": -1, 1: 10})              # x <= 10 (looser than the ub)
+    v, sol = p.solve_min({"x": -1})
+    assert sol["x"] == 5 and v == -5
+
+
+def test_infeasible_and_empty():
+    p = ILPProblem()
+    p.var("x", ub=1)
+    p.add({"x": 1, 1: -2})
+    assert p.solve_min({"x": 1}) is None
+    assert not p.feasible()
+    assert p.lexmin([{"x": 1}]) is None
+
+
+def test_equality_rows():
+    p = ILPProblem()
+    p.var("a", ub=10)
+    p.var("b", ub=10)
+    p.add({"a": 1, "b": 1, 1: -7}, "==0")
+    v, sol = p.solve_min({"a": 1})
+    assert v == 0 and sol["b"] == 7
+
+
+def test_exactness_beyond_int64():
+    """Coefficients near 2^62 force the object-dtype promotion; results
+    must stay exact (floats would be off by thousands here)."""
+    big = (1 << 62) + 3
+    p = ILPProblem()
+    p.var("x", ub=None)
+    p.var("y", ub=None)
+    p.add({"x": big, "y": -1, 1: -1})            # big·x - y >= 1
+    p.add({"y": 1, "x": -1, 1: 0}, ">=0")        # y >= x
+    v, sol = p.solve_min({"x": big, "y": 1})
+    assert sol["x"] == 1 and sol["y"] == 1       # x=1 forces y∈[1, big-1]
+    assert v == big + 1
+
+
+def test_lexmin_stage_order_matters():
+    for order in (["u", "w"], ["w", "u"]):
+        p = ILPProblem()
+        p.var("u", ub=5)
+        p.var("w", ub=5)
+        p.add({"u": 1, "w": 1, 1: -3})
+        sol = p.lexmin([{order[0]: 1}, {order[1]: 1}])
+        # the first-minimized variable hits 0, the second absorbs the 3
+        assert (sol[order[0]], sol[order[1]]) == (0, 3)
+
+
+def test_lexmin_canonicalization_unique_point():
+    """Alternate optima on the objective must collapse to the canonical
+    (lexicographically smallest) point in declaration order."""
+    p = ILPProblem()
+    p.var("a", ub=4)
+    p.var("b", ub=4)
+    p.add({"a": 1, "b": 1, 1: -4})               # a + b >= 4
+    sol = p.lexmin([{"a": 1, "b": 1}])           # any a+b=4 is optimal
+    assert (sol["a"], sol["b"]) == (0, 4)        # canon: minimize a first
+    sol2 = p.lexmin([{"a": 1, "b": 1}], canon=["b", "a"])
+    assert (sol2["a"], sol2["b"]) == (4, 0)
+
+
+def test_lexmin_does_not_mutate_problem():
+    p = ILPProblem()
+    p.var("x", ub=9)
+    p.var("y", ub=9)
+    p.add({"x": 1, "y": 1, 1: -4})
+    ncons, nvars = len(p.cons), len(p.vars)
+    p.lexmin([{"x": 1}, {"y": 1}])
+    assert len(p.cons) == ncons and len(p.vars) == nvars
+    v, _ = p.solve_min({"x": 1, "y": 1})
+    assert v == 4
+
+
+# ---------------------------------------------------------------------------
+# property tests vs the HiGHS oracle
+# ---------------------------------------------------------------------------
+
+def _pair(rows, ubs):
+    """Build the same ILP for both engines."""
+    out = []
+    for eng in ("lex", "highs"):
+        p = ILPProblem(eng)
+        p.var("x", ub=ubs[0])
+        p.var("y", ub=ubs[1])
+        p.var("z", ub=ubs[2])
+        for (a, b, c, d, kind) in rows:
+            p.add({"x": a, "y": b, "z": c, 1: d},
+                  "==0" if kind else ">=0")
+        out.append(p)
+    return out
+
+
+def _check_agree(rows, ubs, objs):
+    pl, ph = _pair(rows, ubs)
+    try:
+        sl = pl.lexmin(objs)
+    except Unbounded:
+        sl = "unbounded"
+    try:
+        sh = ph.lexmin(objs)
+    except (Unbounded, RuntimeError):
+        sh = "unbounded"
+    if sl == "unbounded" or sh == "unbounded":
+        assert sl == sh
+        return
+    if sl is None or sh is None:
+        assert sl is None and sh is None
+        return
+    for i, obj in enumerate(objs):
+        vl = sum((Fraction(c) * sl[k] for k, c in obj.items() if k != 1),
+                 Fraction(obj.get(1, 0)))
+        vh = sum((Fraction(c) * sh[k] for k, c in obj.items() if k != 1),
+                 Fraction(obj.get(1, 0)))
+        assert vl == vh, f"stage {i}: lex {vl} != highs {vh}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.lists(
+        st.tuples(st.integers(-3, 3), st.integers(-3, 3), st.integers(-3, 3),
+                  st.integers(-8, 8), st.booleans()),
+        min_size=1, max_size=6),
+    objs=st.lists(
+        st.fixed_dictionaries(
+            {"x": st.integers(-2, 2), "y": st.integers(-2, 2),
+             "z": st.integers(-2, 2)}),
+        min_size=1, max_size=3),
+)
+def test_property_lexmin_agrees_with_highs(rows, objs):
+    """Random feasible/infeasible bounded ILPs: the exact core and the
+    HiGHS oracle agree on feasibility and on every lexicographic stage
+    value."""
+    _check_agree(rows, (7, 7, 5), objs)
+
+
+def test_random_sweep_agrees_with_highs():
+    """Seeded random sweep of the same property — runs even without
+    hypothesis installed."""
+    rng = random.Random(20260730)
+    for _ in range(80):
+        rows = [
+            (rng.randint(-3, 3), rng.randint(-3, 3), rng.randint(-3, 3),
+             rng.randint(-8, 8), rng.random() < 0.2)
+            for _ in range(rng.randint(1, 6))
+        ]
+        objs = [
+            {"x": rng.randint(-2, 2), "y": rng.randint(-2, 2),
+             "z": rng.randint(-2, 2)}
+            for _ in range(rng.randint(1, 3))
+        ]
+        _check_agree(rows, (7, 7, 5), objs)
+
+
+# ---------------------------------------------------------------------------
+# Farkas projection equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["gemm", "jacobi1d", "trisolv", "fdtd2d"])
+def test_projection_matches_multiplier_form(kernel):
+    """For every dependence: the lexmin of the schedule-coefficient
+    variables over the *projected* legality rows must equal the lexmin
+    over the replayed multiplier expansion — i.e. the exact elimination
+    (substitution + Imbert-accelerated FM) changed nothing about the
+    feasible T-space."""
+    scop = ALL_KERNELS[kernel]()
+    params = scop.param_names()
+    deps = compute_dependences(scop)
+    for dep in deps[:6]:
+        coef, const = C.phi_coef_map(dep, params)
+        tvars = sorted({v for e in coef.values() for v in e}
+                       | {v for v in const if v != 1})
+
+        def build(with_multipliers):
+            p = ILPProblem("lex")
+            for v in tvars:
+                p.var(v, lb=0, ub=3, integer=True)
+            if with_multipliers:
+                replay_farkas(p, farkas_expansion(dep.cons, coef, const, "t"))
+            else:
+                for e, k in project_farkas(dep.cons, coef, const):
+                    p.add(dict(e), k)
+            return p
+
+        objs = [{v: Fraction(1) for v in tvars},
+                {v: Fraction(k + 1) for k, v in enumerate(tvars)}]
+        a = build(False).lexmin(objs, canon=tvars)
+        b = build(True).lexmin(objs, canon=tvars)
+        if a is None or b is None:
+            assert a is None and b is None
+            continue
+        assert {v: a[v] for v in tvars} == {v: b[v] for v in tvars}
+
+
+def test_projection_has_no_multipliers():
+    scop = ALL_KERNELS["gemm"]()
+    params = scop.param_names()
+    dep = compute_dependences(scop)[0]
+    coef, const = C.phi_coef_map(dep, params)
+    rows = project_farkas(dep.cons, coef, const)
+    allowed = {v for e in coef.values() for v in e}
+    allowed |= {v for v in const if v != 1}
+    for e, _ in rows:
+        assert set(e) - {1} <= allowed
+
+
+# ---------------------------------------------------------------------------
+# the 56-combo exact-equality invariant (the former residual list → zero)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel,style", ALL_COMBOS,
+                         ids=[f"{k}-{s}" for k, s in ALL_COMBOS])
+def test_seed_equals_incremental_all_combos(kernel, style):
+    """Every kernel×strategy combo: the seed pipeline, the incremental
+    pipeline and a repeat run produce bit-identical schedules."""
+    mk = ALL_KERNELS[kernel]
+    cfg = CFG.STRATEGIES[style]
+    seed = PolyTOPSScheduler(mk(), cfg(), incremental=False).schedule()
+    inc = PolyTOPSScheduler(mk(), cfg()).schedule()
+    rep = PolyTOPSScheduler(mk(), cfg()).schedule()
+    assert _sig(seed) == _sig(inc) == _sig(rep)
