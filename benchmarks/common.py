@@ -44,12 +44,15 @@ class Variant:
 
 def tuned_variant(tc) -> "Variant":
     """Variant for an autotuned kernel-specific config
-    (:class:`repro.core.autotune.TunedConfig`)."""
+    (:class:`repro.core.autotune.TunedConfig`).  The config factory is
+    the TunedConfig's own ``scheduler_config`` so the fusion mode,
+    explicit statement groups and per-dim cost mixes of the winning
+    configuration are honored when the benchmark rebuilds the schedule —
+    the label (which encodes every axis) keys the source cache."""
     if tc.strategy == "original":    # all-candidates-rejected fallback
         return Variant("original", CFG.SchedulerConfig, original=True)
-    cfg_fn = CFG.STRATEGIES[tc.strategy]
-    return Variant(tc.label, cfg_fn, tile=tc.tile, wavefront=tc.wavefront,
-                   autovec=tc.autovec)
+    return Variant(tc.label, tc.scheduler_config, tile=tc.tile,
+                   wavefront=tc.wavefront, autovec=tc.autovec)
 
 
 def original_schedule(scop: Scop) -> Schedule:

@@ -10,6 +10,15 @@ against the frozen corpus, so *any* change that silently alters a
 schedule (a pivot-rule tweak, a projection bug, a cost-stage reorder)
 fails loudly instead of shipping a perf mystery.
 
+Beyond the 56 kernel×strategy combos the corpus also freezes the
+§III-E configuration axes: pluto-style schedules under the ``max``/
+``no`` fusion extremes for the multi-SCC kernels
+(``<kernel>__pluto_fmax/fno``), and the *statically-ranked* autotune
+winner for the polybench fast set (``<kernel>__autotune`` — the
+measurement-free part of the search, so the dump is deterministic and
+any drift in the candidate enumeration, ranking, or TunedConfig
+serialization format is caught by CI).
+
 Usage:
     python scripts/golden_schedules.py check            # diff, exit 1 on drift
     python scripts/golden_schedules.py update           # regenerate corpus
@@ -39,6 +48,18 @@ from repro.core.scops_polybench import REGISTRY            # noqa: E402
 GOLDEN_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "golden_schedules"
 STRATEGIES = ("pluto", "tensor")
 
+#: fusion-variant combos (paper §III-E fusion axis): deterministic
+#: pluto-style schedules under the max/no fusion extremes, frozen for
+#: the multi-SCC kernels where they differ structurally from 'smart'
+FUSION_VARIANTS = {"pluto_fmax": ("pluto", "max"), "pluto_fno": ("pluto", "no")}
+FUSION_KERNELS = ("fdtd2d", "gemm", "gesummv", "mm2", "mm3", "mvt")
+
+#: kernels whose *statically-ranked* autotune winner is frozen too —
+#: measure=False makes the result a pure function of the SCoP and the
+#: search space, so any drift in the candidate enumeration, the analytic
+#: ranking or the TunedConfig serialization format fails CI loudly
+AUTOTUNE_KERNELS = ("gemm", "gesummv", "jacobi1d", "jacobi2d", "mvt", "trmm")
+
 
 def all_kernels():
     makers = dict(REGISTRY)
@@ -64,12 +85,44 @@ def schedule_dump(sched) -> dict:
     }
 
 
+def autotune_dump(scop) -> dict:
+    """Deterministic static-autotune record: the winning configuration,
+    the ranked candidate labels and the search-space version, computed
+    against a fixed CacheSpec (no env overrides) and a throwaway cache
+    (no measurement pool → analytic ranking)."""
+    from repro.core.autotune import SPACE_VERSION, autotune
+    from repro.core.cachemodel import CacheSpec
+    from repro.core.schedcache import ScheduleCache
+
+    r = autotune(scop, measure=False, use_cache=False,
+                 cache=ScheduleCache(disk=False), spec=CacheSpec())
+    dump = {
+        "solver": SOLVER_TAG,
+        "space_version": SPACE_VERSION,
+        "winner": r.to_dict()["config"],
+        "label": r.config.label,
+        "ranker": r.ranker,
+        "ranked": r.ranked[:8],
+    }
+    # tuples → lists, exactly as a reloaded golden file sees them
+    return json.loads(json.dumps(dump))
+
+
 def compute_all():
     out = {}
-    for name, mk in sorted(all_kernels().items()):
+    makers = all_kernels()
+    for name, mk in sorted(makers.items()):
         for style in STRATEGIES:
             sched = PolyTOPSScheduler(mk(), CFG.STRATEGIES[style]()).schedule()
             out[f"{name}__{style}"] = schedule_dump(sched)
+    for name in FUSION_KERNELS:
+        for combo, (style, fm) in sorted(FUSION_VARIANTS.items()):
+            cfg = CFG.STRATEGIES[style]()
+            cfg.fusion_mode = fm
+            sched = PolyTOPSScheduler(makers[name](), cfg).schedule()
+            out[f"{name}__{combo}"] = schedule_dump(sched)
+    for name in AUTOTUNE_KERNELS:
+        out[f"{name}__autotune"] = autotune_dump(makers[name]())
     return out
 
 

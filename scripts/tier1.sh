@@ -2,8 +2,13 @@
 # Tier-1 gate: test suite + determinism + perf smoke, machine-readable.
 #
 # Gates (all must pass; any failure exits nonzero):
-#   * tests      — the full pytest suite
-#   * golden     — fresh schedules for all 56 kernel×strategy combos
+#   * tests      — the full pytest suite (with line coverage when
+#                  pytest-cov is installed)
+#   * coverage   — line-coverage floor for src/repro/core (gated from
+#                  coverage.xml; skipped-but-ok when pytest-cov is not
+#                  installed — CI always installs it)
+#   * golden     — fresh schedules for all 74 combos (56 kernel×strategy
+#                  + fusion-variant extremes + static-autotune winners)
 #                  diff bit-exact against artifacts/golden_schedules/
 #                  (regenerate intentionally via
 #                   `python scripts/golden_schedules.py --update-golden`)
@@ -23,13 +28,13 @@
 #
 # Usage:  scripts/tier1.sh
 # Env:    POLYTOPS_TIER1_BUDGET     scheduler smoke budget in s (default 240)
-#         POLYTOPS_TIER1_PB_BUDGET  polybench smoke budget in s (default 900)
+#         POLYTOPS_TIER1_PB_BUDGET  polybench smoke budget in s (default 1200)
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BUDGET="${POLYTOPS_TIER1_BUDGET:-240}"
-PB_BUDGET="${POLYTOPS_TIER1_PB_BUDGET:-900}"
+PB_BUDGET="${POLYTOPS_TIER1_PB_BUDGET:-1200}"
 RESULTS="$(mktemp)"
 
 record() {  # record <gate> <ok 0|1> <detail-json>
@@ -47,7 +52,7 @@ for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
         gates[name].update(json.loads(detail))
     except json.JSONDecodeError:
         pass
-expected = ["tests", "golden", "sched_bench", "polybench"]
+expected = ["tests", "coverage", "golden", "sched_bench", "polybench"]
 ok = all(gates.get(g, {}).get("ok") for g in expected)
 print(json.dumps({"ok": ok, "gates": gates}, indent=2, sort_keys=True))
 PY
@@ -58,17 +63,51 @@ trap finish EXIT
 
 echo "== tier-1 tests =="
 T0=$SECONDS
-if python -m pytest -x -q; then
+HAVE_COV=0
+COV_ARGS=()
+if python -c "import pytest_cov" 2>/dev/null; then
+  HAVE_COV=1
+  COV_ARGS=(--cov=repro.core --cov-report=xml:coverage.xml --cov-report=)
+fi
+if python -m pytest -x -q ${COV_ARGS[@]+"${COV_ARGS[@]}"}; then
   record tests 1 "{\"seconds\": $((SECONDS - T0))}"
 else
   record tests 0 "{\"seconds\": $((SECONDS - T0))}"
   exit 1
 fi
 
-echo "== golden-schedule determinism gate (56 combos) =="
+echo "== coverage floor for src/repro/core =="
+if [ "$HAVE_COV" = 1 ]; then
+  if python - <<'PY'
+import json, pathlib, sys
+import xml.etree.ElementTree as ET
+FLOOR = 60.0   # ratchet floor, percent of src/repro/core lines executed
+root = ET.parse("coverage.xml").getroot()
+pct = round(float(root.attrib["line-rate"]) * 100.0, 2)
+detail = {"line_coverage_pct": pct, "floor_pct": FLOOR,
+          "scope": "repro.core"}
+pathlib.Path(".tier1_cov_detail.json").write_text(json.dumps(detail))
+if pct < FLOOR:
+    sys.exit(f"core coverage {pct}% < {FLOOR}% floor")
+print(f"coverage OK: repro.core {pct}% line coverage (floor {FLOOR}%)")
+PY
+  then
+    record coverage 1 "$(cat .tier1_cov_detail.json)"
+    rm -f .tier1_cov_detail.json
+  else
+    record coverage 0 "$(cat .tier1_cov_detail.json 2>/dev/null || echo '{}')"
+    rm -f .tier1_cov_detail.json
+    exit 1
+  fi
+else
+  echo "pytest-cov not installed: coverage gate skipped (CI installs it)"
+  record coverage 1 '{"skipped": true, "reason": "pytest-cov not installed"}'
+fi
+
+echo "== golden-schedule determinism gate (74 combos) =="
 T0=$SECONDS
 if python scripts/golden_schedules.py check; then
-  record golden 1 "{\"seconds\": $((SECONDS - T0)), \"combos\": 56}"
+  record golden 1 "{\"seconds\": $((SECONDS - T0)), \"combos\": 74}"
 else
   record golden 0 "{\"seconds\": $((SECONDS - T0))}"
   exit 1

@@ -2,58 +2,83 @@
 
 The paper's headline PolyBench numbers come from *kernel-specific
 configurations* — per-kernel choices of cost functions, fusion,
-vectorization and tiling.  This module turns the repo's former
-"measure every standard strategy, keep the best" stand-in into a real
-bounded autotuner:
+vectorization and tiling.  This module searches that full §III-E space:
 
-1. **Candidate space** — scheduling strategy × tile source (none /
-   cache-model L1 / cache-model L2 / fixed 32) × wavefront ×
-   auto-vectorization, pruned by schedule structure (tile and wavefront
-   candidates only exist when the schedule has a tilable band /
-   a dependence-carrying first band dim).  Candidate *schedules* are
-   near-free: they come through the structural schedule cache
-   (:mod:`repro.core.schedcache`) backed by PR 1's incremental ILP core.
-2. **Static ranking** — a cost model over the schedule's access strides
-   (contiguity of the innermost dim, SIMD legality, temporal reuse
-   captured by the tile working set vs the cache budget) ranks all
-   candidates without compiling anything.
-3. **Measurement** — only the ``top_k`` statically-ranked candidates are
-   compiled and timed through :mod:`repro.core.crunner`; each must
-   checksum-match the original-program-order reference or it is
-   discarded (measurement is also how model mistakes get corrected).
+1. **Configuration enumeration** — candidate ``SchedulerConfig``s are
+   composed from four axes:
+
+   * scheduling strategy (``pluto``/``tensor``/``bigloops``/``feautrier``
+     — isl-style is excluded: its dynamic Python callback makes
+     schedules uncacheable, see schedcache);
+   * **fusion**: ``smart``/``max``/``no`` modes plus explicit
+     SCC-derived :class:`~repro.core.config.FusionSpec` statement groups
+     (adjacent SCCs of the dependence graph merged pairwise — points
+     *between* the extremes);
+   * **per-dimension cost-function mixes**
+     (:data:`repro.core.costs.COST_MIXES`): contiguity/proximity stride
+     orderings, big-loops-first outer dims, and a static isl-style
+     require-parallel variant — threaded into the per-dim ILP objective
+     construction by the scheduler;
+   * tile source (none / cache-model L1 / cache-model L2 / fixed 32) ×
+     wavefront × auto-vectorization, pruned by schedule structure.
+
+   Base schedules come through the structural schedule cache and are
+   **deduplicated** by :func:`repro.core.schedcache.schedule_fingerprint`
+   — on a single-SCC kernel the fusion modes all collapse to one
+   candidate instead of three.
+2. **Static ranking** — the analytic access-stride cost model below,
+   replaced by a *learned* ridge ranker (:mod:`repro.core.ranker`) once
+   enough measured (kernel, config, time) triples have accumulated in
+   the cache pool.  Ranking prunes the enumeration to a measurable
+   ``top_k``.
+3. **Measurement** — the ``top_k`` ranked candidates are compiled and
+   timed through :mod:`repro.core.crunner`; each must checksum-match the
+   original-program-order reference or it is discarded.  Every valid
+   measurement is persisted as a training triple
+   (:func:`repro.core.schedcache.record_measurements`).
 4. **Persistence** — the winner is stored in the schedule-cache pool
    keyed by SCoP structure + search-space version
    (:func:`repro.core.schedcache.autotune_key`), so the second compile
-   of the same kernel shape is a dictionary/disk lookup.
+   of the same kernel shape is a dictionary/disk lookup — winner
+   replay, no re-enumeration.
 
 Everything is deterministic: candidate order is fixed, ranking
 tie-breaks on candidate index, and measurements go through crunner's
-on-disk result cache, so re-tuning the same kernel returns the same
-configuration.
+on-disk result cache, so re-tuning the same kernel against the same
+measurement pool returns the same configuration.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, replace
 from fractions import Fraction
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from . import config as CFG
-from .cachemodel import (CacheSpec, auto_tile_sizes, band_access_groups,
-                         default_spec, working_set_bytes)
-from .codegen import (_yvar, iterator_substitution, level_parallel,
-                      scan_from_schedule)
+from . import costs as C
+from .cachemodel import (CacheSpec, default_spec, shared_bands,
+                         shared_groups, shared_scan, shared_tile_sizes,
+                         working_set_bytes)
+from .codegen import _yvar, iterator_substitution, level_parallel
 from .postproc import find_tilable_bands, tile_schedule
-from .schedcache import ScheduleCache, autotune_key, cached_schedule_scop, \
-    global_cache
-from .scheduler import PolyTOPSScheduler, Schedule
+from .schedcache import (ScheduleCache, autotune_key, cached_schedule_scop,
+                         global_cache, load_measurements,
+                         record_measurements, schedule_fingerprint)
+from .scheduler import PolyTOPSScheduler, Schedule, _scc_groups
 from .scop import Scop
 
-SPACE_VERSION = 1          # bump when the candidate space / model changes
+SPACE_VERSION = 2          # bump when the candidate space / model changes
 
 #: strategies the autotuner explores (isl-style is excluded: its dynamic
 #: Python callback makes schedules uncacheable — see schedcache)
 TUNE_STRATEGIES = ("pluto", "tensor", "bigloops", "feautrier")
 TILED_STRATEGIES = ("pluto", "tensor")
+#: strategies the fusion axis is enumerated on
+FUSION_STRATEGIES = ("pluto", "tensor")
+#: strategies the cost-mix axis is enumerated on (mixes replace the
+#: per-dim ILP recipe, so they only compose with the plain-proximity base)
+MIX_STRATEGIES = ("pluto",)
+#: cap on explicit SCC-derived statement-group variants per kernel
+MAX_GROUP_VARIANTS = 2
 
 
 @dataclass(frozen=True)
@@ -63,10 +88,21 @@ class TunedConfig:
     tile: Optional[Union[int, str]] = None   # None | int | 'l1' | 'l2'
     wavefront: bool = False
     autovec: bool = False
+    fusion: str = "smart"               # 'smart' | 'max' | 'no' | 'groups'
+    #: explicit statement groups (fusion == 'groups'), outermost dim
+    fusion_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    mix: Optional[str] = None           # key into costs.COST_MIXES
 
     @property
     def label(self) -> str:
         bits = [self.strategy]
+        if self.mix:
+            bits.append(f"mix{self.mix}")
+        if self.fusion == "groups" and self.fusion_groups:
+            bits.append("fg" + "-".join(
+                "".join(str(i) for i in g) for g in self.fusion_groups))
+        elif self.fusion != "smart":
+            bits.append(f"f{self.fusion}")
         if self.autovec:
             bits.append("autovec")
         if self.tile is not None:
@@ -75,13 +111,45 @@ class TunedConfig:
             bits.append("wave")
         return "+".join(bits)
 
+    @property
+    def base(self) -> "TunedConfig":
+        """The schedule-determining part (tile/wavefront are
+        post-processing and share the base schedule)."""
+        return replace(self, tile=None, wavefront=False)
+
+    @property
+    def uses_new_axes(self) -> bool:
+        """True when the winning choice exercises the fusion or cost-mix
+        axis (the §III-E space beyond strategy×tile×wavefront)."""
+        return self.fusion != "smart" or self.mix is not None
+
     def scheduler_config(self) -> CFG.SchedulerConfig:
         if self.strategy == "original":    # untransformed program order
             return CFG.SchedulerConfig()
         cfg = CFG.STRATEGIES[self.strategy]()
         if self.autovec:
             cfg.auto_vectorize = True
+        if self.fusion in ("max", "no"):
+            cfg.fusion_mode = self.fusion
+        elif self.fusion == "groups" and self.fusion_groups:
+            cfg.fusion = [CFG.FusionSpec(
+                0, groups=[list(g) for g in self.fusion_groups])]
+        if self.mix:
+            base_cons = list(cfg.ilp.get("default", CFG.DimConfig()).constraints)
+            cfg.ilp = {
+                dim: CFG.DimConfig(list(cfs), list(base_cons), rp)
+                for dim, (cfs, rp) in C.COST_MIXES[self.mix].items()
+            }
+            cfg.name = f"{cfg.name}+mix{self.mix}"
         return cfg
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedConfig":
+        d = dict(d)
+        fg = d.get("fusion_groups")
+        if fg is not None:
+            d["fusion_groups"] = tuple(tuple(int(i) for i in g) for g in fg)
+        return cls(**d)
 
 
 @dataclass
@@ -92,6 +160,7 @@ class TunedResult:
     checksum: Optional[float] = None
     source: str = "static"              # 'static' | 'measured' | 'cache'
     ranked: List[str] = field(default_factory=list)   # candidate labels, best-first
+    ranker: str = "analytic"            # 'analytic' | 'learned'
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -100,66 +169,113 @@ class TunedResult:
 
     @classmethod
     def from_dict(cls, d: dict) -> "TunedResult":
-        cfg = TunedConfig(**d["config"])
+        cfg = TunedConfig.from_dict(d["config"])
         return cls(cfg, d.get("static_cost", 0.0), d.get("seconds"),
-                   d.get("checksum"), "cache", list(d.get("ranked", [])))
+                   d.get("checksum"), "cache", list(d.get("ranked", [])),
+                   d.get("ranker", "analytic"))
 
 
 # ---------------------------------------------------------------------------
-# candidate generation
+# configuration enumeration
 # ---------------------------------------------------------------------------
 
 
-def candidate_space(scop: Scop, scheds: Dict[Tuple[str, bool], Schedule]
-                    ) -> List[TunedConfig]:
-    """The bounded, deterministic search space.  ``scheds`` maps
-    (strategy, autovec) to the already-computed schedule (needed to know
-    whether tiling / wavefronting even applies)."""
-    out: List[TunedConfig] = []
-    for strat in TUNE_STRATEGIES:
-        base = scheds.get((strat, False))
-        if base is None:
-            continue
-        out.append(TunedConfig(strat))
-        if strat == "tensor" and (strat, True) in scheds:
-            out.append(TunedConfig(strat, autovec=True))
-        if strat not in TILED_STRATEGIES:
-            continue
-        bands = find_tilable_bands(base)
-        if not bands:
-            continue
-        out.append(TunedConfig(strat, tile="l1"))
-        out.append(TunedConfig(strat, tile="l2"))
-        out.append(TunedConfig(strat, tile=32))
-        if any(b.length >= 2 and not b.parallel_first for b in bands):
-            # pipelined-parallel shape: wavefront variants
-            out.append(TunedConfig(strat, tile="l2", wavefront=True))
-            out.append(TunedConfig(strat, tile=32, wavefront=True))
+def scc_group_variants(scop: Scop, deps=None) -> List[Tuple[Tuple[int, ...], ...]]:
+    """Explicit FusionSpec statement groups derived from the SCC
+    condensation of the dependence graph: adjacent SCCs (in topological
+    order) merged pairwise — legal by construction, and points *between*
+    total distribution and maximal fusion.  Bounded and deterministic."""
+    stmts = scop.statements
+    if len(stmts) < 3:
+        return []           # with ≤2 statements 'max'/'no' already cover this
+    if deps is None:
+        from .deps import compute_dependences
+        deps = compute_dependences(scop)
+    for d in deps:
+        d.satisfied_at = None
+    sccs = _scc_groups(stmts, deps)
+    if not 2 <= len(sccs) <= 6:
+        return []
+    out: List[Tuple[Tuple[int, ...], ...]] = []
+    for i in range(min(len(sccs) - 1, MAX_GROUP_VARIANTS)):
+        groups = (sccs[:i] + [sorted(sccs[i] + sccs[i + 1])] + sccs[i + 2:])
+        if len(groups) < 2:
+            continue     # all statements in one group ≡ 'max', already enumerated
+        out.append(tuple(tuple(g) for g in groups))
     return out
 
 
-def _schedules_for_space(scop: Scop, cache: ScheduleCache
-                         ) -> Dict[Tuple[str, bool], Schedule]:
-    """One schedule per (strategy, autovec) base — structural-cache
-    lookups after the first tuning of a kernel shape.  Each miss computes
-    its own dependences so cached Schedule objects never share mutable
-    dependence state across candidates."""
-    scheds: Dict[Tuple[str, bool], Schedule] = {}
-    for strat in TUNE_STRATEGIES:
+def base_configs(scop: Scop, deps=None) -> List[TunedConfig]:
+    """Schedule-determining configuration bases: strategy × fusion ×
+    cost-mix (+ tensor autovec).  Deterministic order; tile/wavefront
+    variants are layered on later by :func:`candidate_space`."""
+    out: List[TunedConfig] = [TunedConfig(s) for s in TUNE_STRATEGIES]
+    out.append(TunedConfig("tensor", autovec=True))
+    if len(scop.statements) > 1:
+        for strat in FUSION_STRATEGIES:
+            for fm in ("max", "no"):
+                out.append(TunedConfig(strat, fusion=fm))
+        for groups in scc_group_variants(scop, deps):
+            out.append(TunedConfig("pluto", fusion="groups",
+                                   fusion_groups=groups))
+    for strat in MIX_STRATEGIES:
+        for mix in sorted(C.COST_MIXES):
+            out.append(TunedConfig(strat, mix=mix))
+    return out
+
+
+def _schedules_for_space(scop: Scop, cache: ScheduleCache,
+                         bases: Optional[Sequence[TunedConfig]] = None
+                         ) -> Dict[TunedConfig, Schedule]:
+    """One schedule per configuration base — structural-cache lookups
+    after the first tuning of a kernel shape.  Each miss computes its
+    own dependences so cached Schedule objects never share mutable
+    dependence state across candidates.  Bases whose configuration
+    cannot schedule (an illegal fusion spec, an infeasible
+    require-parallel demand) are dropped — any *other* exception is a
+    real defect in the enumerated space and propagates loudly instead
+    of silently shrinking the search."""
+    from .scheduler import SchedulingError
+
+    if bases is None:
+        bases = base_configs(scop)
+    scheds: Dict[TunedConfig, Schedule] = {}
+    for base in bases:
         try:
-            scheds[(strat, False)] = cached_schedule_scop(
-                scop, CFG.STRATEGIES[strat](), cache=cache)
-        except Exception:
+            scheds[base] = cached_schedule_scop(
+                scop, base.scheduler_config(), cache=cache)
+        except SchedulingError:
             continue
-        if strat == "tensor":
-            cfg = CFG.STRATEGIES[strat]()
-            cfg.auto_vectorize = True
-            try:
-                scheds[(strat, True)] = cached_schedule_scop(scop, cfg,
-                                                             cache=cache)
-            except Exception:
-                pass
     return scheds
+
+
+def candidate_space(scop: Scop, scheds: Dict[TunedConfig, Schedule]
+                    ) -> List[TunedConfig]:
+    """The bounded, deterministic search space: every *structurally
+    distinct* base schedule (fingerprint-deduplicated, first base wins)
+    plus its tile/wavefront variants where the schedule shape admits
+    them."""
+    out: List[TunedConfig] = []
+    seen: Dict[str, TunedConfig] = {}
+    for base, sched in scheds.items():
+        fp = schedule_fingerprint(sched)
+        if fp in seen:
+            continue
+        seen[fp] = base
+        out.append(base)
+        if base.strategy not in TILED_STRATEGIES:
+            continue
+        bands = find_tilable_bands(sched)
+        if not bands:
+            continue
+        out.append(replace(base, tile="l1"))
+        out.append(replace(base, tile="l2"))
+        out.append(replace(base, tile=32))
+        if any(b.length >= 2 and not b.parallel_first for b in bands):
+            # pipelined-parallel shape: wavefront variants
+            out.append(replace(base, tile="l2", wavefront=True))
+            out.append(replace(base, tile=32, wavefront=True))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -209,30 +325,17 @@ def static_cost(scop: Scop, sched: Schedule, tc: TunedConfig,
         trips = {s.index: _stmt_trip(scop, s) for s in scop.statements}
     memo = {} if memo is None else memo
     sid = id(sched)
-    if ("scan", sid) not in memo:
-        memo[("scan", sid)] = scan_from_schedule(sched)
-    scan = memo[("scan", sid)]
-    bands = []
-    if tc.tile is not None:
-        if ("bands", sid) not in memo:
-            memo[("bands", sid)] = find_tilable_bands(sched)
-        bands = memo[("bands", sid)]
+    scan = shared_scan(sched, memo)
+    bands = shared_bands(sched, memo) if tc.tile is not None else []
     tiled_ws_ok: Dict[int, bool] = {}
     if tc.tile is not None and bands:
         wskey = ("wsok", sid, str(tc.tile))
         if wskey not in memo:
-            sizes_by_band = (
-                {b.start: [int(tc.tile)] * b.length for b in bands}
-                if isinstance(tc.tile, int)
-                else auto_tile_sizes(sched, level=str(tc.tile), spec=spec,
-                                     bands=bands)
-            )
+            sizes_by_band = shared_tile_sizes(sched, memo, tc.tile, spec)
             ok: Dict[int, bool] = {}
             for b in bands:
-                gkey = ("groups", sid, b.start)
-                if gkey not in memo:
-                    memo[gkey] = band_access_groups(scan, b.start, b.length)
-                ws = working_set_bytes(memo[gkey], sizes_by_band.get(
+                groups = shared_groups(sched, memo, b.start, b.length)
+                ws = working_set_bytes(groups, sizes_by_band.get(
                     b.start, [32] * b.length), spec.elem_bytes)
                 ok[b.start] = ws <= spec.l2_bytes
             memo[wskey] = ok
@@ -333,7 +436,7 @@ def _original_reference(scop: Scop, scalars, use_cache: bool):
 
 
 def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
-             measure: bool = True, top_k: int = 5,
+             measure: bool = True, top_k: int = 8,
              cache: Optional[ScheduleCache] = None, use_cache: bool = True,
              spec: Optional[CacheSpec] = None,
              checksum_rel: float = 1e-6) -> TunedResult:
@@ -356,8 +459,12 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
     space_desc = {
         "version": SPACE_VERSION,
         "strategies": list(TUNE_STRATEGIES),
+        "fusion": list(FUSION_STRATEGIES),
+        "mixes": sorted(C.COST_MIXES),
         "measure": bool(measure),
         "top_k": int(top_k),
+        "analytic_guard": max(3, int(top_k) // 2),
+        "measure_bases": True,
         "l1": spec.l1_bytes, "l2": spec.l2_bytes,
         "elem": spec.elem_bytes,
         "scalars": sorted(scalars.items()),
@@ -371,6 +478,7 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
     key = autotune_key(scop, space_desc) if use_cache else None
     hit = cache.get(key)
     if isinstance(hit, dict) and "config" in hit:
+        # winner replay: no enumeration, no scheduling, no compilation
         return TunedResult.from_dict(hit)
 
     # use_cache=False must mean *no* caching anywhere: candidate
@@ -383,20 +491,57 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
         return TunedResult(TunedConfig("pluto"), source="static")
     trips = {s.index: _stmt_trip(scop, s) for s in scop.statements}
     memo: dict = {}
-    scored: List[Tuple[float, int, TunedConfig]] = []
+
+    # the learned ranker replaces the analytic ordering once the pool
+    # holds enough measured triples of the current search space; the
+    # analytic cost stays as a feature (and as the fallback)
+    from . import ranker as RK
+    model = RK.fit_ranker(load_measurements(cache, SPACE_VERSION)
+                          if use_cache else [])
+    feats_by_label: Dict[str, List[float]] = {}
+    scored: List[Tuple[float, int, TunedConfig, float]] = []
     for i, tc in enumerate(cands):
-        sched = scheds[(tc.strategy, tc.autovec)]
-        scored.append((static_cost(scop, sched, tc, spec, trips, memo), i, tc))
+        sched = scheds[tc.base]
+        cost = static_cost(scop, sched, tc, spec, trips, memo)
+        feats = RK.features(scop, sched, tc, cost, spec, trips, memo)
+        feats_by_label[tc.label] = feats
+        score = model.predict(feats) if model is not None else cost
+        scored.append((score, i, tc, cost))
     scored.sort(key=lambda t: (t[0], t[1]))
-    ranked_labels = [tc.label for _, _, tc in scored]
+    ranked_labels = [tc.label for _, _, tc, _ in scored]
+    ranker_name = "learned" if model is not None else "analytic"
+
+    # measured set: the primary ranking's top_k, plus the analytic
+    # prior's top picks whenever the learned model decided the order —
+    # a cold-start guard: a ridge model fitted on a few kernels can
+    # misrank an unseen kernel and silently drop the true winner from
+    # the measured set, which the prior's picks cap at a bounded cost
+    measured_set: List[Tuple[float, int, TunedConfig, float]] = list(scored[:top_k])
+    have = {t[2] for t in measured_set}
+    if model is not None:
+        by_analytic = sorted(scored, key=lambda t: (t[3], t[1]))
+        for t in by_analytic[:max(3, top_k // 2)]:
+            if t[2] not in have:
+                measured_set.append(t)
+                have.add(t[2])
+    # every structurally distinct *base* schedule is measured at least
+    # once: the strategy/fusion/mix axes change the loop structure, which
+    # is exactly where both rankers are least reliable, and the base
+    # count is already fingerprint-deduplicated and small.  Ranking
+    # prunes only the tile/wavefront fan-out.
+    for t in scored:
+        if t[2].tile is None and not t[2].wavefront and t[2] not in have:
+            measured_set.append(t)
+            have.add(t[2])
 
     best: Optional[TunedResult] = None
     if measure:
         from .crunner import checksums_match, measure_source
 
         ref = _original_reference(scop, scalars, use_cache)
-        for cost, _, tc in scored[:top_k]:
-            sched = scheds[(tc.strategy, tc.autovec)]
+        triples: List[dict] = []
+        for _, _, tc, cost in measured_set:
+            sched = scheds[tc.base]
             try:
                 src = build_source(scop, tc, sched, scalars)
                 r = measure_source(src, tag=f"tune_{scop.name}_{tc.label}",
@@ -405,9 +550,16 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
                 continue                 # compile/codegen failure: skip
             if not checksums_match(r.checksum, ref.checksum, checksum_rel):
                 continue                 # wrong answer: discard candidate
+            triples.append({
+                "kernel": scop.name, "label": tc.label,
+                "feats": feats_by_label[tc.label], "seconds": r.seconds,
+                "v": SPACE_VERSION, "fv": RK.FEATURE_VERSION,
+            })
             if best is None or r.seconds < best.seconds:
                 best = TunedResult(tc, cost, r.seconds, r.checksum,
-                                   "measured", ranked_labels)
+                                   "measured", ranked_labels, ranker_name)
+        if use_cache:
+            record_measurements(cache, triples)
         if best is None:
             # every measured candidate was rejected (compile failure or
             # wrong checksum): return the original program order — the
@@ -417,9 +569,16 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
             # kernel shape
             return TunedResult(TunedConfig("original"), seconds=ref.seconds,
                                checksum=ref.checksum, source="measured",
-                               ranked=ranked_labels)
+                               ranked=ranked_labels, ranker=ranker_name)
     if best is None:
-        cost, _, tc = scored[0]
-        best = TunedResult(tc, cost, source="static", ranked=ranked_labels)
-    cache.put(key, best.to_dict())
+        _, _, tc, cost = scored[0]
+        best = TunedResult(tc, cost, source="static", ranked=ranked_labels,
+                           ranker=ranker_name)
+    if measure:
+        # only *measured* winners persist: a static winner can depend on
+        # the learned ranker's pool state, which the pool-independent
+        # autotune_key cannot encode — replaying it would go stale as
+        # the pool grows (static re-ranking is cheap anyway: schedules
+        # come from the cache and nothing compiles)
+        cache.put(key, best.to_dict())
     return best

@@ -262,6 +262,54 @@ def select_tile_sizes(sched: Schedule, start: int, length: int,
     return sizes
 
 
+# ---------------------------------------------------------------------------
+# shared per-schedule memo: the autotuner's analytic cost model and the
+# learned ranker's feature extraction score the same candidates over the
+# same handful of schedules — these helpers give both one set of memo
+# keys (keyed on id(schedule)) so every intermediate is computed once.
+# ---------------------------------------------------------------------------
+
+
+def shared_scan(sched: Schedule, memo: dict):
+    key = ("scan", id(sched))
+    if key not in memo:
+        memo[key] = scan_from_schedule(sched)
+    return memo[key]
+
+
+def shared_bands(sched: Schedule, memo: dict):
+    from .postproc import find_tilable_bands
+
+    key = ("bands", id(sched))
+    if key not in memo:
+        memo[key] = find_tilable_bands(sched)
+    return memo[key]
+
+
+def shared_groups(sched: Schedule, memo: dict, start: int, length: int):
+    key = ("groups", id(sched), start)
+    if key not in memo:
+        memo[key] = band_access_groups(shared_scan(sched, memo), start, length)
+    return memo[key]
+
+
+def shared_tile_sizes(sched: Schedule, memo: dict, tile,
+                      spec: Optional[CacheSpec] = None) -> Dict[int, List[int]]:
+    """Per-band tile sizes for a candidate tile source (int or cache
+    level), memoized: ``{band_start: [sizes]}``."""
+    spec = spec or default_spec()
+    bands = shared_bands(sched, memo)
+    key = ("sizes", id(sched), str(tile))
+    if key not in memo:
+        memo[key] = (
+            {b.start: [int(tile)] * b.length for b in bands}
+            if isinstance(tile, int)
+            else auto_tile_sizes(sched, level=str(tile), spec=spec,
+                                 bands=bands)
+        )
+    return memo[key]
+
+
 def auto_tile_sizes(sched: Schedule, level: str = "l2",
                     spec: Optional[CacheSpec] = None,
                     bands=None) -> Dict[int, List[int]]:

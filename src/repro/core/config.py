@@ -22,6 +22,17 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
+#: cost functions the ILP constructor understands (paper §III-A1);
+#: configs may additionally reference their own ``new_variables``
+KNOWN_COST_FUNCTIONS = ("proximity", "feautrier", "contiguity",
+                        "bigLoopsFirst")
+FUSION_MODES = ("smart", "max", "no")
+DIRECTIVE_TYPES = ("vectorize", "parallel", "sequential")
+
+
+class ConfigError(ValueError):
+    """Malformed JSON configuration (paper Listing 2 interface)."""
+
 
 @dataclass
 class DimConfig:
@@ -84,55 +95,158 @@ class SchedulerConfig:
         return None
 
     # -- JSON --------------------------------------------------------------
+    @staticmethod
+    def _dim_key(entry: dict, what: str) -> Union[int, str]:
+        dim = entry.get("scheduling_dimension", "default")
+        if dim == "default":
+            return dim
+        if isinstance(dim, bool) or not isinstance(dim, int) or dim < 0:
+            raise ConfigError(
+                f"{what}: scheduling_dimension must be a non-negative "
+                f"integer or 'default', got {dim!r}")
+        return dim
+
+    @staticmethod
+    def _entries(strat: dict, key: str) -> List[dict]:
+        val = strat.get(key, [])
+        if not isinstance(val, list):
+            raise ConfigError(f"{key} must be a list, got {type(val).__name__}")
+        for entry in val:
+            if not isinstance(entry, dict):
+                raise ConfigError(
+                    f"{key} entries must be objects, got {entry!r}")
+        return val
+
     @classmethod
     def from_json(cls, src: Union[str, dict]) -> "SchedulerConfig":
+        """Parse the paper-Listing-2 JSON interface.
+
+        ``src`` is a dict (optionally wrapped in ``scheduling_strategy``)
+        or a path to a JSON file.  Malformed input raises
+        :class:`ConfigError` (a ``ValueError``) with a message naming the
+        offending key — never a bare ``KeyError``/``TypeError`` from deep
+        inside the scheduler."""
         if isinstance(src, str):
             with open(src) as f:
                 data = json.load(f)
         else:
             data = src
+        if not isinstance(data, dict):
+            raise ConfigError(
+                f"configuration must be a JSON object, got {type(data).__name__}")
         strat = data.get("scheduling_strategy", data)
+        if not isinstance(strat, dict):
+            raise ConfigError("scheduling_strategy must be a JSON object")
         cfg = cls()
-        cfg.new_variables = list(strat.get("new_variables", []))
-        for entry in strat.get("ILP_construction", []):
-            dim = entry.get("scheduling_dimension", "default")
+        nv = strat.get("new_variables", [])
+        if not isinstance(nv, list) or not all(isinstance(v, str) for v in nv):
+            raise ConfigError("new_variables must be a list of strings")
+        cfg.new_variables = list(nv)
+        for entry in cls._entries(strat, "ILP_construction"):
+            dim = cls._dim_key(entry, "ILP_construction")
+            cfs = entry.get("cost_functions", ["proximity"])
+            if not isinstance(cfs, list) or not cfs:
+                raise ConfigError(
+                    f"ILP_construction[{dim}]: cost_functions must be a "
+                    f"non-empty list")
+            for cf in cfs:
+                if cf not in KNOWN_COST_FUNCTIONS and cf not in cfg.new_variables:
+                    raise ConfigError(
+                        f"ILP_construction[{dim}]: unknown cost function "
+                        f"{cf!r} (known: {', '.join(KNOWN_COST_FUNCTIONS)}, "
+                        f"plus declared new_variables)")
+            cons = entry.get("constraints", [])
+            if not isinstance(cons, list) or not all(isinstance(c, str) for c in cons):
+                raise ConfigError(
+                    f"ILP_construction[{dim}]: constraints must be a list "
+                    f"of strings")
             cfg.ilp[dim] = DimConfig(
-                cost_functions=list(entry.get("cost_functions", ["proximity"])),
-                constraints=list(entry.get("constraints", [])),
+                cost_functions=list(cfs),
+                constraints=list(cons),
                 require_parallel=bool(entry.get("require_parallel", False)),
             )
-        for entry in strat.get("custom_constraints", []):
-            dim = entry.get("scheduling_dimension", "default")
-            cfg.custom_constraints.setdefault(dim, []).extend(entry.get("constraints", []))
-        for entry in strat.get("fusion", []):
+        for entry in cls._entries(strat, "custom_constraints"):
+            dim = cls._dim_key(entry, "custom_constraints")
+            cons = entry.get("constraints", [])
+            if not isinstance(cons, list) or not all(isinstance(c, str) for c in cons):
+                raise ConfigError(
+                    f"custom_constraints[{dim}]: constraints must be a "
+                    f"list of strings")
+            cfg.custom_constraints.setdefault(dim, []).extend(cons)
+        for entry in cls._entries(strat, "fusion"):
+            dim = entry.get("scheduling_dimension", 0)
+            if dim != "default" and (isinstance(dim, bool)
+                                     or not isinstance(dim, int) or dim < 0):
+                raise ConfigError(
+                    f"fusion: scheduling_dimension must be a non-negative "
+                    f"integer or 'default', got {dim!r}")
             groups = entry.get("stmts_fusion")
             if groups is not None:
-                groups = [[int(x) for x in g] for g in groups]
+                if not isinstance(groups, list):
+                    raise ConfigError("fusion: stmts_fusion must be a list "
+                                      "of statement-index lists")
+                try:
+                    groups = [[int(x) for x in g] for g in groups]
+                except (TypeError, ValueError):
+                    raise ConfigError(
+                        "fusion: stmts_fusion groups must contain "
+                        "statement indices") from None
+                flat = [i for g in groups for i in g]
+                if len(flat) != len(set(flat)):
+                    raise ConfigError(
+                        "fusion: stmts_fusion groups must be disjoint "
+                        f"(got {groups})")
             cfg.fusion.append(
                 FusionSpec(
-                    dimension=entry.get("scheduling_dimension", 0),
+                    dimension=dim,
                     total_distribution=bool(entry.get("total_distribution", False)),
                     groups=groups,
                 )
             )
-        for entry in strat.get("directives", []):
+        for entry in cls._entries(strat, "directives"):
+            dtype = entry.get("type")
+            if dtype not in DIRECTIVE_TYPES:
+                raise ConfigError(
+                    f"directives: type must be one of {DIRECTIVE_TYPES}, "
+                    f"got {dtype!r}")
             stmts = entry.get("stmts", [])
             if isinstance(stmts, (str, int)):
-                stmts = [int(stmts)]
-            else:
+                stmts = [stmts]
+            try:
                 stmts = [int(x) for x in stmts]
+            except (TypeError, ValueError):
+                raise ConfigError(
+                    f"directives[{dtype}]: stmts must be statement "
+                    f"indices, got {entry.get('stmts')!r}") from None
             it = entry.get("iterator")
-            cfg.directives.append(
-                Directive(entry["type"], stmts, None if it is None else int(it))
-            )
+            if it is not None:
+                try:
+                    it = int(it)
+                except (TypeError, ValueError):
+                    raise ConfigError(
+                        f"directives[{dtype}]: iterator must be an integer "
+                        f"depth or null, got {it!r}") from None
+            cfg.directives.append(Directive(dtype, stmts, it))
         cfg.auto_vectorize = bool(strat.get("auto_vectorization", False))
-        cfg.fusion_mode = strat.get("fusion_mode", "smart")
-        cfg.coeff_bound = int(strat.get("coeff_bound", 4))
+        fm = strat.get("fusion_mode", "smart")
+        if fm not in FUSION_MODES:
+            raise ConfigError(
+                f"fusion_mode must be one of {FUSION_MODES}, got {fm!r}")
+        cfg.fusion_mode = fm
+        for key, default in (("coeff_bound", 4), ("cst_bound", 32)):
+            val = strat.get(key, default)
+            if isinstance(val, bool) or not isinstance(val, int) or val < 1:
+                raise ConfigError(
+                    f"{key} must be a positive integer, got {val!r}")
+            setattr(cfg, key, val)
         cfg.parametric_shift = bool(strat.get("parametric_shift", False))
         cfg.name = strat.get("name", "json")
         return cfg
 
     def to_json(self) -> dict:
+        """Listing-2 JSON rendering; loses only the Python ``strategy``
+        callback — ``from_json(to_json(cfg))`` reproduces every other
+        field exactly (the config round-trip conformance invariant)."""
         out: Dict[str, Any] = {"scheduling_strategy": {}}
         s = out["scheduling_strategy"]
         if self.new_variables:
@@ -146,6 +260,11 @@ class SchedulerConfig:
             }
             for dim, dc in self.ilp.items()
         ]
+        if self.custom_constraints:
+            s["custom_constraints"] = [
+                {"scheduling_dimension": dim, "constraints": list(cons)}
+                for dim, cons in self.custom_constraints.items()
+            ]
         if self.fusion:
             s["fusion"] = [
                 {
@@ -163,6 +282,10 @@ class SchedulerConfig:
         if self.auto_vectorize:
             s["auto_vectorization"] = True
         s["fusion_mode"] = self.fusion_mode
+        s["coeff_bound"] = self.coeff_bound
+        s["cst_bound"] = self.cst_bound
+        if self.parametric_shift:
+            s["parametric_shift"] = True
         s["name"] = self.name
         return out
 

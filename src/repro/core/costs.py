@@ -202,3 +202,35 @@ def stage_from_coeffs(stmts: Sequence[Statement], coeffs: Dict[int, List[int]],
             if c:
                 obj[t_it(s, k)] = obj.get(t_it(s, k), Fraction(0)) + Fraction(c)
     return obj
+
+
+# ---------------------------------------------------------------------------
+# per-dimension cost-function mixes (paper §III-E): named recipes the
+# autotuner composes into kernel-specific configurations.  Each mix maps
+# a scheduling dimension (or 'default') to (cost_functions, require_parallel)
+# — the raw material for a DimConfig.  All mixes are static (no Python
+# callback), so mixed configurations stay cacheable.
+# ---------------------------------------------------------------------------
+
+COST_MIXES: Dict[str, Dict[object, tuple]] = {
+    # stride ordering: contiguity before proximity on every dim (the
+    # tensor-style costs without its no-skewing constraint)
+    "cp": {"default": (("contiguity", "proximity"), False)},
+    # stride ordering reversed: proximity first, contiguity tie-break
+    "pc": {"default": (("proximity", "contiguity"), False)},
+    # contiguity steers only the outer two scheduling dims (one of which
+    # is typically a scalar distribution dim), plain proximity below
+    "c01": {0: (("contiguity", "proximity"), False),
+            1: (("contiguity", "proximity"), False),
+            "default": (("proximity",), False)},
+    # largest-extent loops outermost, plain proximity below
+    "blf0": {0: (("bigLoopsFirst", "proximity"), False),
+             1: (("bigLoopsFirst", "proximity"), False),
+             "default": (("proximity",), False)},
+    # parallelism-demanding outer dims: static isl-style coincidence
+    # (require_parallel with the scheduler's feautrier fallback), but
+    # cacheable because there is no dynamic callback
+    "par0": {0: (("proximity",), True),
+             1: (("proximity",), True),
+             "default": (("proximity",), False)},
+}

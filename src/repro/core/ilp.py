@@ -404,6 +404,26 @@ class ILPProblem:
         return self.solve_min({}, want=()) is not None
 
 
+def stage_values(stages: Sequence[Affine], sol: Dict[str, Fraction]
+                 ) -> List[Fraction]:
+    """Exact value of each lexicographic objective stage at ``sol``.
+
+    ``lexmin(want=...)`` always materializes the objectives' own
+    variables, so the returned solution is sufficient to evaluate every
+    stage — this is the engine-agnostic ground truth the differential
+    tests compare between the exact core and the HiGHS oracle (two
+    engines may pick different alternate optima, but the stage values of
+    a lexicographic optimum are unique)."""
+    out: List[Fraction] = []
+    for obj in stages:
+        v = Fraction(obj.get(1, 0))
+        for k, c in obj.items():
+            if k != 1:
+                v += Fraction(c) * sol[k]
+        out.append(v)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # HiGHS engine (scipy) — opt-in cross-check / polyhedron-query backend
 # ---------------------------------------------------------------------------

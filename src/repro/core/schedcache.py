@@ -238,3 +238,93 @@ def autotune_key(scop: Scop, space: Dict[str, Any]) -> str:
         sort_keys=True, separators=(",", ":"),
     )
     return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def schedule_fingerprint(sched) -> str:
+    """Structural digest of a *computed* schedule (rows, band structure,
+    parallelism, fallback) — two configurations whose schedules hash
+    equal generate identical code for identical tile choices.  The
+    autotuner uses this to deduplicate enumerated configurations: on a
+    single-SCC kernel ``max``/``no``/``smart`` fusion all collapse to
+    one candidate instead of three."""
+    rows = {}
+    for idx, rr in sorted(sched.rows.items()):
+        rows[str(idx)] = [
+            [r.kind, sorted(("|".join(map(str, k)), str(v))
+                            for k, v in r.coeffs.items() if v)]
+            for r in rr
+        ]
+    payload = json.dumps(
+        {"rows": rows, "bands": list(sched.bands),
+         "parallel": list(sched.parallel), "fallback": bool(sched.fallback),
+         # codegen-visible annotations beyond the rows: vectorized
+         # iterators and explicit sequential marks
+         "vec": sorted((str(k), int(v)) for k, v in sched.vector_iter.items()),
+         "seq": sorted(map(list, sched.seq_marked))},
+        sort_keys=True, separators=(",", ":"),
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# measurement pool: every autotuner *measurement* is persisted as a
+# (kernel, config, features, seconds) triple in an append-only JSONL
+# file next to the pickle pool.  The learned static ranker
+# (:mod:`repro.core.ranker`) trains on these rows; like the rest of the
+# cache, disk failures degrade silently to "no training data".
+# ---------------------------------------------------------------------------
+
+MEASUREMENTS_FILE = "measurements.jsonl"
+
+
+def record_measurements(cache: ScheduleCache, rows) -> None:
+    """Append measurement triples (plain dicts) to the cache's pool.
+    One ``write`` call per batch keeps concurrent writers line-atomic on
+    POSIX (O_APPEND)."""
+    if not rows or not cache.disk:
+        return
+    try:
+        os.makedirs(cache.dir, exist_ok=True)
+        blob = "".join(json.dumps(r, sort_keys=True) + "\n" for r in rows)
+        with open(os.path.join(cache.dir, MEASUREMENTS_FILE), "a") as f:
+            f.write(blob)
+    except Exception:
+        pass
+
+
+def load_measurements(cache: ScheduleCache, space_version: Optional[int] = None,
+                      limit: int = 20000,
+                      tail_bytes: int = 8 << 20) -> list:
+    """Recent persisted measurement rows (most recent ``limit``),
+    optionally filtered to one search-space version.  The pool is
+    append-only and sits on the compile hot path, so only the last
+    ``tail_bytes`` of the file are read and parsed — an unboundedly
+    grown pool costs a bounded seek+read, not an O(file) parse.
+    Returns [] on any disk trouble."""
+    if not cache.disk:
+        return []
+    out = []
+    try:
+        with open(os.path.join(cache.dir, MEASUREMENTS_FILE), "rb") as f:
+            f.seek(0, os.SEEK_END)
+            size = f.tell()
+            start = max(0, size - tail_bytes)
+            f.seek(start)
+            blob = f.read().decode("utf-8", errors="replace")
+        lines = blob.splitlines()
+        if start > 0 and lines:
+            lines = lines[1:]         # drop the partial first line
+        for ln in lines:
+            ln = ln.strip()
+            if not ln:
+                continue
+            try:
+                row = json.loads(ln)
+            except json.JSONDecodeError:
+                continue              # torn tail line from a dying writer
+            if space_version is not None and row.get("v") != space_version:
+                continue
+            out.append(row)
+    except Exception:
+        return []
+    return out[-limit:]

@@ -194,7 +194,8 @@ class StrategyState:
 class PolyTOPSScheduler:
     def __init__(self, scop: Scop, config: Optional[SchedulerConfig] = None,
                  deps: Optional[List[Dependence]] = None, engine: str = "lex",
-                 incremental: bool = True, decompose: bool = True):
+                 incremental: bool = True, decompose: bool = True,
+                 record_stage_values: bool = False):
         self.scop = scop
         self.config = config or SchedulerConfig()
         self.deps = deps if deps is not None else compute_dependences(scop)
@@ -207,6 +208,11 @@ class PolyTOPSScheduler:
         self.decompose = decompose and incremental
         self._farkas_cache: Optional[Dict[Tuple, Any]] = {} if incremental else None
         self._base_probs: Dict[Tuple, Any] = {}
+        self._fusion_applied: Set[int] = set()
+        # opt-in (differential tests): exact per-dim stage objective
+        # values in stats — off on the production path, where nothing
+        # reads them
+        self.record_stage_values = record_stage_values
         self.params = scop.param_names()
         self.stats: Dict[str, Any] = {
             "ilp_solves": 0, "ilp_time": 0.0,
@@ -232,6 +238,7 @@ class PolyTOPSScheduler:
         scop, cfg = self.scop, self.config
         stmts = scop.statements
         self._base_probs.clear()
+        self._fusion_applied: Set[int] = set()
         for d in self.deps:
             d.satisfied_at = None
         active: List[Dependence] = list(self.deps)
@@ -377,8 +384,16 @@ class PolyTOPSScheduler:
     def _distribution_groups(self, dim, active, comp, band_start):
         fspec = self.config.fusion_for(dim)
         stmts = self.scop.statements
+        # an explicit FusionSpec is a *one-shot* distribution decision:
+        # once its scalar dimension is emitted the spec must not fire
+        # again (a 'default'-dimension spec would otherwise re-distribute
+        # at every subsequent dim, emitting scalar dims until max_dims
+        # with no linear progression at all)
+        if fspec is not None and id(fspec) in self._fusion_applied:
+            fspec = None
         if fspec is not None:
             if fspec.groups is not None:
+                self._fusion_applied.add(id(fspec))
                 covered = {i for g in fspec.groups for i in g}
                 groups = [list(g) for g in fspec.groups]
                 for s in stmts:
@@ -386,6 +401,7 @@ class PolyTOPSScheduler:
                         groups.append([s.index])
                 return groups
             if fspec.total_distribution:
+                self._fusion_applied.add(id(fspec))
                 return _scc_groups(stmts, active)
         if dim == 0 and self.config.fusion_mode != "max" and len(stmts) > 1:
             sccs = _scc_groups(stmts, active)
@@ -719,6 +735,10 @@ class PolyTOPSScheduler:
             self.stats["lex_stages_skipped"] += prob.stages_skipped
             self.stats["lex_pivots"] += prob.last_pivots
             prob.last_pivots = 0
+            if sol is not None and self.record_stage_values:
+                from .ilp import stage_values
+                self.stats.setdefault("stage_values", []).append(
+                    (dim, stage_values(stages, sol)))
         finally:
             prob.pop(mark)
         if sol is None:
@@ -874,6 +894,10 @@ class PolyTOPSScheduler:
         prob.last_pivots = 0
         if sol is None:
             return None
+        if self.record_stage_values:
+            from .ilp import stage_values
+            self.stats.setdefault("stage_values", []).append(
+                (dim, stage_values(stages, sol)))
         out: Dict[int, Dict[Tuple, Fraction]] = {}
         for s in stmts:
             coeffs: Dict[Tuple, Fraction] = {}

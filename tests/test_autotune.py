@@ -161,8 +161,156 @@ def test_candidate_space_structure():
     assert any("tilel2" in l for l in labels)
     # static costs are finite and positive
     for tc in cands:
-        c = static_cost(scop, scheds[(tc.strategy, tc.autovec)], tc)
+        c = static_cost(scop, scheds[tc.base], tc)
         assert c > 0
+
+
+# ---------------------------------------------------------------------------
+# the §III-E axes: fusion modes, explicit groups, cost mixes
+# ---------------------------------------------------------------------------
+
+
+def test_space_covers_fusion_and_mix_axes():
+    """Multi-statement kernels must enumerate fusion variants whose
+    schedules are structurally distinct, and the dedup must collapse the
+    ones that aren't."""
+    from repro.core.autotune import _schedules_for_space, base_configs
+    from repro.core.schedcache import schedule_fingerprint
+
+    scop = make_mvt(48)
+    bases = base_configs(scop)
+    assert any(b.fusion == "max" for b in bases)
+    assert any(b.fusion == "no" for b in bases)
+    assert any(b.mix is not None for b in bases)
+    scheds = _schedules_for_space(scop, ScheduleCache(disk=False), bases)
+    cands = candidate_space(scop, scheds)
+    # mvt: smart fusion fuses the two independent statements, so 'no'
+    # must survive dedup as a genuinely different schedule
+    assert any(c.fusion == "no" for c in cands)
+    # dedup invariant: every candidate base has a unique fingerprint
+    fps = [schedule_fingerprint(scheds[c.base]) for c in cands
+           if c.tile is None and not c.wavefront]
+    assert len(fps) == len(set(fps))
+
+
+def test_scc_group_variants_legal_and_bounded():
+    from repro.core.autotune import MAX_GROUP_VARIANTS, scc_group_variants
+    from repro.core.scops_polybench import make_mm2
+
+    scop = make_mm2(16)
+    variants = scc_group_variants(scop)
+    assert 0 < len(variants) <= MAX_GROUP_VARIANTS
+    n = len(scop.statements)
+    for groups in variants:
+        flat = sorted(i for g in groups for i in g)
+        assert flat == list(range(n))       # a partition of all statements
+        # each explicit-group config must schedule without a legality
+        # error (groups follow the SCC topological order)
+        tc = TunedConfig("pluto", fusion="groups", fusion_groups=groups)
+        sched = schedule_scop(scop, tc.scheduler_config())
+        assert not sched.fallback
+
+
+def test_mix_configs_thread_into_ilp_construction():
+    from repro.core.costs import COST_MIXES
+
+    for mix, recipe in COST_MIXES.items():
+        tc = TunedConfig("pluto", mix=mix)
+        cfg = tc.scheduler_config()
+        for dim, (cfs, rp) in recipe.items():
+            assert cfg.ilp[dim].cost_functions == list(cfs)
+            assert cfg.ilp[dim].require_parallel == rp
+        # every mix must actually schedule gemm (no unknown cost names)
+        sched = schedule_scop(make_gemm(24), cfg)
+        assert not sched.fallback
+
+
+def test_label_encodes_every_axis():
+    tc = TunedConfig("pluto", tile="l2", wavefront=True, fusion="groups",
+                     fusion_groups=((0, 1), (2,)), mix="c01")
+    assert tc.label == "pluto+mixc01+fg01-2+tilel2+wave"
+    tc2 = TunedConfig("tensor", fusion="max", autovec=True)
+    assert tc2.label == "tensor+fmax+autovec"
+    assert tc.uses_new_axes and tc2.uses_new_axes
+    assert not TunedConfig("pluto", tile=32).uses_new_axes
+
+
+def test_tuned_result_roundtrip_with_new_axes():
+    from repro.core.autotune import TunedResult
+
+    tc = TunedConfig("pluto", tile=32, fusion="groups",
+                     fusion_groups=((0,), (1, 2)), mix="pc")
+    r = TunedResult(tc, 1.5, 0.01, 42.0, "measured", ["a", "b"], "learned")
+    r2 = TunedResult.from_dict(r.to_dict())
+    assert r2.config == tc
+    assert r2.source == "cache" and r2.ranker == "learned"
+    assert r2.config.fusion_groups == ((0,), (1, 2))
+
+
+# ---------------------------------------------------------------------------
+# learned ranker + measurement pool
+# ---------------------------------------------------------------------------
+
+
+def test_ranker_below_min_samples_falls_back():
+    from repro.core import ranker as RK
+
+    assert RK.fit_ranker([]) is None
+    rows = [{"kernel": "k", "feats": [0.0] * len(RK.FEATURE_NAMES),
+             "seconds": 0.1, "v": 2, "fv": RK.FEATURE_VERSION}] * 5
+    assert RK.fit_ranker(rows) is None
+
+
+def test_ranker_learns_within_kernel_ordering():
+    """Synthetic pool where log(time) = 2·feat0: the fitted model must
+    rank a smaller feat0 as faster, deterministically."""
+    import math
+
+    from repro.core import ranker as RK
+
+    nf = len(RK.FEATURE_NAMES)
+    rows = []
+    for k in range(4):
+        for j in range(12):
+            feats = [0.0] * nf
+            feats[0] = float(j) / 3.0 + k      # log_static_cost varies
+            feats[2] = 3.0 + k                 # kernel-constant: cancels
+            rows.append({"kernel": f"k{k}", "feats": feats,
+                         "seconds": math.exp(2.0 * feats[0]),
+                         "v": 2, "fv": RK.FEATURE_VERSION})
+    m1 = RK.fit_ranker(rows)
+    m2 = RK.fit_ranker(list(rows))
+    assert m1 is not None and m1.weights == m2.weights   # deterministic
+    lo = [0.0] * nf
+    hi = [0.0] * nf
+    hi[0] = 2.0
+    assert m1.predict(lo) < m1.predict(hi)
+    # rows with a stale feature version never train a model
+    stale = [dict(r, fv=RK.FEATURE_VERSION + 1) for r in rows]
+    assert RK.fit_ranker(stale) is None
+
+
+def test_measurement_pool_roundtrip(tmp_path):
+    from repro.core.schedcache import load_measurements, record_measurements
+
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    rows = [{"kernel": "gemm", "label": "pluto", "feats": [1.0], "seconds": 0.5,
+             "v": 2, "fv": 1},
+            {"kernel": "gemm", "label": "tensor", "feats": [2.0], "seconds": 0.25,
+             "v": 1, "fv": 1}]
+    record_measurements(cache, rows)
+    record_measurements(cache, [])            # no-op
+    got = load_measurements(cache)
+    assert got == rows
+    assert load_measurements(cache, space_version=2) == rows[:1]
+    # disk-less caches neither write nor read
+    mem = ScheduleCache(disk=False)
+    record_measurements(mem, rows)
+    assert load_measurements(mem) == []
+    # torn tail line is skipped silently
+    with open(tmp_path / "measurements.jsonl", "a") as f:
+        f.write('{"kernel": "trunc')
+    assert load_measurements(cache) == rows
 
 
 @pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")
@@ -185,6 +333,48 @@ def test_autotune_measured_served_from_cache(tmp_path):
     assert r3.source == "cache"
     assert r3.config == r1.config
     assert cache2.stats["disk_hits"] >= 1
+
+
+@pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")
+def test_second_compile_is_pure_cache_hit(tmp_path, monkeypatch):
+    """Winner replay: the second autotune of the same kernel shape must
+    not enumerate, schedule, rank or measure anything — guarded by
+    poisoning every enumeration entry point after the first call."""
+    from repro.core import autotune as AT
+
+    scop = make_gesummv(40)
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    r1 = autotune(scop, scalars=SCALARS, measure=True, top_k=3, cache=cache)
+    assert r1.source == "measured"
+
+    def boom(*a, **k):
+        raise AssertionError("cache hit must not re-enumerate")
+
+    monkeypatch.setattr(AT, "base_configs", boom)
+    monkeypatch.setattr(AT, "_schedules_for_space", boom)
+    monkeypatch.setattr(AT, "candidate_space", boom)
+    monkeypatch.setattr(AT, "build_source", boom)
+    r2 = autotune(make_gesummv(40), scalars=SCALARS, measure=True, top_k=3,
+                  cache=cache)
+    assert r2.source == "cache"
+    assert r2.config == r1.config and r2.ranked == r1.ranked
+
+
+@pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")
+def test_measured_autotune_records_training_triples(tmp_path):
+    from repro.core import ranker as RK
+    from repro.core.autotune import SPACE_VERSION
+    from repro.core.schedcache import load_measurements
+
+    cache = ScheduleCache(cache_dir=str(tmp_path))
+    autotune(make_gemm(40), scalars=SCALARS, measure=True, top_k=3,
+             cache=cache)
+    rows = load_measurements(cache, SPACE_VERSION)
+    assert rows, "measured candidates must persist as training triples"
+    for r in rows:
+        assert r["kernel"] == "gemm"
+        assert len(r["feats"]) == len(RK.FEATURE_NAMES)
+        assert r["seconds"] > 0 and r["fv"] == RK.FEATURE_VERSION
 
 
 @pytest.mark.skipif(not HAVE_GCC, reason="no C compiler")

@@ -1,0 +1,180 @@
+"""Conformance tests for the paper-Listing-2 JSON configuration
+interface (``SchedulerConfig.from_json`` / ``to_json``).
+
+Three layers:
+
+* round-trip — every Listing-2 key (``new_variables``, per-dim
+  ``ILP_construction`` cost functions/constraints/require_parallel,
+  ``custom_constraints``, ``fusion`` with explicit statement groups,
+  ``directives``, ``auto_vectorization``, bounds, ``parametric_shift``)
+  survives ``from_json(to_json(cfg))`` exactly;
+* acceptance — the wrapped/unwrapped forms, file input, coercions the
+  scheduler relies on (string statement indices), and defaults;
+* rejection — malformed input raises :class:`ConfigError` (a
+  ``ValueError`` naming the offending key), never a bare
+  ``KeyError``/``TypeError`` from deep inside the scheduler.
+"""
+import json
+
+import pytest
+
+from repro.core import config as CFG
+from repro.core.config import (ConfigError, DimConfig, Directive, FusionSpec,
+                               SchedulerConfig)
+
+
+def _full_config() -> SchedulerConfig:
+    """One config exercising every JSON-expressible field."""
+    cfg = SchedulerConfig(name="full")
+    cfg.new_variables = ["slack"]
+    cfg.ilp[0] = DimConfig(cost_functions=["contiguity", "proximity"],
+                           constraints=["no-skewing"])
+    cfg.ilp[1] = DimConfig(cost_functions=["proximity"], require_parallel=True)
+    cfg.ilp["default"] = DimConfig(cost_functions=["proximity", "slack"])
+    cfg.custom_constraints["default"] = ["S0_it_0 >= 1"]
+    cfg.custom_constraints[2] = ["Si_cst <= 3"]
+    cfg.fusion = [FusionSpec(0, groups=[[0, 1], [2]]),
+                  FusionSpec("default", total_distribution=True)]
+    cfg.directives = [Directive("vectorize", [0], 1),
+                      Directive("parallel", [0, 1], None),
+                      Directive("sequential", [2], 0)]
+    cfg.auto_vectorize = True
+    cfg.fusion_mode = "no"
+    cfg.coeff_bound = 7
+    cfg.cst_bound = 11
+    cfg.parametric_shift = True
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_every_key():
+    cfg = _full_config()
+    assert SchedulerConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_roundtrip_predefined_strategies():
+    for name, factory in CFG.STRATEGIES.items():
+        cfg = factory()
+        if cfg.strategy is not None:      # dynamic callback: not JSON-able
+            continue
+        got = SchedulerConfig.from_json(cfg.to_json())
+        assert got == cfg, name
+
+
+def test_roundtrip_defaults():
+    cfg = SchedulerConfig(name="json")
+    assert SchedulerConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_roundtrip_through_json_text_and_file(tmp_path):
+    cfg = _full_config()
+    text = json.dumps(cfg.to_json())
+    assert SchedulerConfig.from_json(json.loads(text)) == cfg
+    path = tmp_path / "cfg.json"
+    path.write_text(text)
+    assert SchedulerConfig.from_json(str(path)) == cfg
+
+
+def test_roundtrip_is_stable():
+    """to_json ∘ from_json is the identity on the JSON side too."""
+    d = _full_config().to_json()
+    assert SchedulerConfig.from_json(d).to_json() == d
+
+
+# ---------------------------------------------------------------------------
+# acceptance details
+# ---------------------------------------------------------------------------
+
+
+def test_unwrapped_dict_accepted():
+    cfg = SchedulerConfig.from_json(
+        {"ILP_construction": [{"scheduling_dimension": "default",
+                               "cost_functions": ["proximity"]}],
+         "fusion_mode": "max"})
+    assert cfg.fusion_mode == "max"
+    assert cfg.ilp["default"].cost_functions == ["proximity"]
+
+
+def test_string_statement_indices_coerced():
+    cfg = SchedulerConfig.from_json({
+        "fusion": [{"scheduling_dimension": 0,
+                    "stmts_fusion": [["1"], ["0"]]}],
+        "directives": [{"type": "vectorize", "stmts": "2", "iterator": "1"}],
+    })
+    assert cfg.fusion[0].groups == [[1], [0]]
+    assert cfg.directives[0] == Directive("vectorize", [2], 1)
+
+
+def test_new_variable_usable_as_cost_function():
+    cfg = SchedulerConfig.from_json({
+        "new_variables": ["mu"],
+        "ILP_construction": [{"cost_functions": ["mu", "proximity"]}],
+    })
+    assert cfg.ilp["default"].cost_functions == ["mu", "proximity"]
+
+
+def test_defaults_applied():
+    cfg = SchedulerConfig.from_json({})
+    assert cfg.fusion_mode == "smart"
+    assert cfg.coeff_bound == 4 and cfg.cst_bound == 32
+    assert not cfg.auto_vectorize and not cfg.parametric_shift
+    assert cfg.name == "json"
+
+
+# ---------------------------------------------------------------------------
+# rejection: malformed input → ConfigError (a ValueError), with a
+# message naming the offending key
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("data,needle", [
+    ([1, 2], "JSON object"),
+    ({"scheduling_strategy": [1]}, "scheduling_strategy"),
+    ({"new_variables": "x"}, "new_variables"),
+    ({"new_variables": [1]}, "new_variables"),
+    ({"ILP_construction": {"a": 1}}, "ILP_construction"),
+    ({"ILP_construction": ["proximity"]}, "entries must be objects"),
+    ({"ILP_construction": [{"scheduling_dimension": -1}]},
+     "scheduling_dimension"),
+    ({"ILP_construction": [{"scheduling_dimension": 1.5}]},
+     "scheduling_dimension"),
+    ({"ILP_construction": [{"cost_functions": []}]}, "cost_functions"),
+    ({"ILP_construction": [{"cost_functions": "proximity"}]},
+     "cost_functions"),
+    ({"ILP_construction": [{"cost_functions": ["nearness"]}]}, "nearness"),
+    ({"ILP_construction": [{"cost_functions": ["proximity"],
+                            "constraints": [1]}]}, "constraints"),
+    ({"custom_constraints": [{"scheduling_dimension": "x"}]},
+     "scheduling_dimension"),
+    ({"custom_constraints": [{"constraints": "S0_cst >= 1"}]}, "constraints"),
+    ({"fusion": [{"scheduling_dimension": -2}]}, "scheduling_dimension"),
+    ({"fusion": [{"stmts_fusion": "01"}]}, "stmts_fusion"),
+    ({"fusion": [{"stmts_fusion": [["a"]]}]}, "statement indices"),
+    ({"fusion": [{"stmts_fusion": [[0, 1], [1, 2]]}]}, "disjoint"),
+    ({"directives": [{"stmts": [0]}]}, "type"),
+    ({"directives": [{"type": "unroll", "stmts": [0]}]}, "unroll"),
+    ({"directives": [{"type": "vectorize", "stmts": ["a"]}]}, "stmts"),
+    ({"directives": [{"type": "vectorize", "stmts": [0],
+                      "iterator": "x"}]}, "iterator"),
+    ({"fusion_mode": "merge"}, "fusion_mode"),
+    ({"coeff_bound": 0}, "coeff_bound"),
+    ({"coeff_bound": True}, "coeff_bound"),
+    ({"cst_bound": -3}, "cst_bound"),
+    ({"cst_bound": "32"}, "cst_bound"),
+])
+def test_malformed_rejected(data, needle):
+    with pytest.raises(ConfigError) as exc:
+        SchedulerConfig.from_json(data)
+    assert needle in str(exc.value)
+    assert isinstance(exc.value, ValueError)
+
+
+def test_malformed_file_rejected(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"fusion_mode": "everything"}))
+    with pytest.raises(ConfigError):
+        SchedulerConfig.from_json(str(path))

@@ -1,0 +1,220 @@
+"""Fusion-axis property tests (paper §III-E).
+
+Every fusion configuration the autotuner can enumerate — the
+``smart``/``max``/``no`` modes and explicit SCC-derived statement
+groups — must yield a schedule that passes the *exact* legality check
+against every dependence (``PolyTOPSScheduler._lex_satisfied``, the
+piecewise-emptiness test over the dependence polyhedra: no dependence
+may ever be lexicographically violated, strongly satisfied or not).
+
+Property layer (hypothesis via ``tests/_hypothesis_compat``, plus a
+seeded sweep that always runs): *arbitrary* explicit statement
+partitions either schedule legally or are rejected with
+``SchedulingError`` at config application — never a silently illegal
+schedule; partitions that respect the SCC topological order are always
+accepted.
+
+Structural layer: ``max``/``no`` fusion produce the expected band-count
+extremes on 2mm/3mm (one fused outer group with a depth-≥2 permutable
+band vs one group per SCC).
+"""
+import random
+
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import config as CFG
+from repro.core.autotune import TunedConfig, base_configs
+from repro.core.scheduler import (PolyTOPSScheduler, SchedulingError,
+                                  _scc_groups)
+from repro.core.scops_polybench import (make_gemm, make_gesummv, make_mm2,
+                                        make_mm3, make_mvt)
+
+SMALL_KERNELS = {
+    "gemm": lambda: make_gemm(12),
+    "mvt": lambda: make_mvt(12),
+    "gesummv": lambda: make_gesummv(12),
+    "mm2": lambda: make_mm2(8),
+    "mm3": lambda: make_mm3(8),
+}
+
+
+def _schedule_and_check(scop, cfg):
+    """Schedule and run the exact legality check against ALL deps."""
+    sch = PolyTOPSScheduler(scop, cfg)
+    sched = sch.schedule()
+    for dep in sched.deps:
+        assert sch._lex_satisfied(dep, sched), \
+            f"dependence {dep} violated by {cfg.name}/{cfg.fusion_mode}"
+    return sched
+
+
+def _outer_groups(sched) -> int:
+    """Number of statement groups at the outermost distribution level
+    (1 when the leading dimension is already linear = fully fused)."""
+    stmts = sched.scop.statements
+    for d in range(sched.n_dims):
+        rows = [sched.rows[s.index][d] for s in stmts]
+        if all(r.kind == "scalar" for r in rows):
+            return len({r.cst() for r in rows})
+        if any(r.kind == "linear" for r in rows):
+            return 1
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# every enumerated configuration is legal
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SMALL_KERNELS))
+def test_enumerated_configs_pass_exact_legality(name):
+    """The full autotuner enumeration (fusion modes, explicit SCC
+    groups, cost mixes) on each kernel: every base that schedules must
+    satisfy every dependence exactly."""
+    scop = SMALL_KERNELS[name]()
+    n_checked = 0
+    for base in base_configs(scop):
+        try:
+            cfg = base.scheduler_config()
+        except KeyError:
+            pytest.fail(f"unknown strategy/mix in {base}")
+        _schedule_and_check(SMALL_KERNELS[name](), cfg)
+        n_checked += 1
+    assert n_checked == len(base_configs(scop))   # nothing skipped
+
+
+@pytest.mark.parametrize("fm", ["smart", "max", "no"])
+@pytest.mark.parametrize("name", sorted(SMALL_KERNELS))
+def test_fusion_modes_legal(name, fm):
+    scop = SMALL_KERNELS[name]()
+    cfg = CFG.pluto_style()
+    cfg.fusion_mode = fm
+    _schedule_and_check(scop, cfg)
+
+
+# ---------------------------------------------------------------------------
+# arbitrary explicit partitions: legal schedule or loud rejection
+# ---------------------------------------------------------------------------
+
+
+def _check_partition(name: str, order, cuts):
+    """Build an explicit statement partition from a permutation + cut
+    set; the scheduler must either raise SchedulingError (partition
+    violates a dependence) or produce an exactly-legal schedule."""
+    scop = SMALL_KERNELS[name]()
+    n = len(scop.statements)
+    perm = list(dict.fromkeys(i % n for i in order))
+    perm += [i for i in range(n) if i not in perm]
+    groups, cur = [], []
+    for pos, i in enumerate(perm):
+        cur.append(i)
+        if pos in cuts:
+            groups.append(cur)
+            cur = []
+    if cur:
+        groups.append(cur)
+    tc = TunedConfig("pluto", fusion="groups",
+                     fusion_groups=tuple(tuple(g) for g in groups))
+    try:
+        _schedule_and_check(scop, tc.scheduler_config())
+    except SchedulingError:
+        pass                      # loud rejection is a correct outcome
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(sorted(SMALL_KERNELS)),
+    order=st.lists(st.integers(0, 7), min_size=1, max_size=8),
+    cuts=st.sets(st.integers(0, 7)),
+)
+def test_property_arbitrary_partitions(name, order, cuts):
+    _check_partition(name, order, cuts)
+
+
+def test_seeded_partition_sweep():
+    """The same property as a seeded sweep — runs without hypothesis."""
+    rng = random.Random(20260731)
+    names = sorted(SMALL_KERNELS)
+    for _ in range(60):
+        name = names[rng.randrange(len(names))]
+        order = [rng.randrange(8) for _ in range(rng.randint(1, 8))]
+        cuts = {rng.randrange(8) for _ in range(rng.randint(0, 4))}
+        _check_partition(name, order, cuts)
+
+
+def test_topological_partitions_always_accepted():
+    """Partitions that respect the SCC topological order never raise:
+    any grouping of adjacent SCCs is legal by construction."""
+    from repro.core.deps import compute_dependences
+
+    for name in ("mm2", "mm3", "mvt"):
+        scop = SMALL_KERNELS[name]()
+        deps = compute_dependences(scop)
+        for d in deps:
+            d.satisfied_at = None
+        sccs = _scc_groups(scop.statements, deps)
+        rng = random.Random(hash(name) & 0xFFFF)
+        for _ in range(8):
+            groups, cur = [], []
+            for scc in sccs:
+                cur.extend(scc)
+                if rng.random() < 0.5:
+                    groups.append(sorted(cur))
+                    cur = []
+            if cur:
+                groups.append(sorted(cur))
+            tc = TunedConfig("pluto", fusion="groups",
+                             fusion_groups=tuple(tuple(g) for g in groups))
+            _schedule_and_check(SMALL_KERNELS[name](), tc.scheduler_config())
+
+
+# ---------------------------------------------------------------------------
+# band-count extremes on 2mm / 3mm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,n_sccs", [("mm2", 4), ("mm3", 6)])
+def test_fusion_extremes_band_counts(name, n_sccs):
+    """max fusion: one fused outer group with a depth-≥2 permutable
+    leading band; no fusion: one outer group per SCC."""
+    outs = {}
+    for fm in ("smart", "max", "no"):
+        cfg = CFG.pluto_style()
+        cfg.fusion_mode = fm
+        sched = _schedule_and_check(SMALL_KERNELS[name](), cfg)
+        outs[fm] = (_outer_groups(sched), sched)
+    assert outs["max"][0] == 1
+    assert outs["no"][0] == n_sccs
+    assert outs["max"][0] <= outs["smart"][0] <= outs["no"][0]
+    # max: the leading dims form one fused permutable band of depth ≥ 2
+    max_sched = outs["max"][1]
+    assert max_sched.bands[0] == max_sched.bands[1]
+    # no: the leading dim is the scalar distribution dim
+    no_sched = outs["no"][1]
+    stmts = no_sched.scop.statements
+    assert all(no_sched.rows[s.index][0].kind == "scalar" for s in stmts)
+
+
+def test_explicit_groups_apply_once():
+    """A 'default'-dimension FusionSpec with groups must distribute
+    exactly once — not emit scalar dims at every dimension (the
+    apply-once scheduler invariant)."""
+    scop = SMALL_KERNELS["mm2"]()
+    cfg = CFG.pluto_style()
+    cfg.fusion = [CFG.FusionSpec("default",
+                                 groups=[[0, 1], [2, 3]])]
+    sched = _schedule_and_check(scop, cfg)
+    assert not sched.fallback
+    scalar_dims = [
+        d for d in range(sched.n_dims)
+        if all(sched.rows[s.index][d].kind == "scalar"
+               for s in scop.statements)
+    ]
+    # one distribution dim from the spec + the final textual-order dim
+    assert len(scalar_dims) <= 2
+    # every statement still got its full linear depth
+    for s in scop.statements:
+        lin = [r for r in sched.rows[s.index] if r.kind == "linear"
+               and any(r.it_vector(s.dim))]
+        assert len(lin) == s.dim

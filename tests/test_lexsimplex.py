@@ -308,6 +308,81 @@ def test_projection_has_no_multipliers():
 
 
 # ---------------------------------------------------------------------------
+# differential: config-varied objectives, exact core vs HiGHS oracle.
+# The autotuner's enumerated configurations (fusion modes, explicit
+# statement groups, per-dim cost mixes) construct per-dimension ILPs
+# whose objective *stages* differ from the plain strategy sweep; on each
+# of them the exact core and the HiGHS oracle must agree on every stage
+# value (two engines may pick different alternate optima, but the stage
+# values of a lexicographic optimum are unique).
+# ---------------------------------------------------------------------------
+
+DIFF_KERNELS = ("gemm", "mvt", "mm2")
+
+
+def _small_scop(kernel):
+    from repro.core.scops_polybench import make_gemm, make_mm2, make_mvt
+    return {"gemm": lambda: make_gemm(10),
+            "mvt": lambda: make_mvt(10),
+            "mm2": lambda: make_mm2(8)}[kernel]()
+
+
+@pytest.mark.parametrize("kernel", DIFF_KERNELS)
+def test_config_varied_objectives_agree_with_highs(kernel):
+    from repro.core.autotune import base_configs
+
+    for base in base_configs(_small_scop(kernel)):
+        cfgs = {}
+        scheds = {}
+        for eng in ("lex", "highs"):
+            scop = _small_scop(kernel)
+            try:
+                sch = PolyTOPSScheduler(scop, base.scheduler_config(),
+                                        engine=eng, decompose=False,
+                                        record_stage_values=True)
+                scheds[eng] = sch.schedule()
+                cfgs[eng] = sch.stats.get("stage_values", [])
+            except Exception as e:
+                cfgs[eng] = ("raised", type(e).__name__)
+        if isinstance(cfgs["lex"], tuple) or isinstance(cfgs["highs"], tuple):
+            # a config that fails must fail identically on both engines
+            assert cfgs["lex"] == cfgs["highs"], base.label
+            continue
+        sv_lex, sv_highs = cfgs["lex"], cfgs["highs"]
+        if _sig(scheds["lex"]) == _sig(scheds["highs"]):
+            # identical trajectories: the full stage-value streams match
+            assert sv_lex == sv_highs, base.label
+        else:
+            # alternate optima may diverge the *trajectory* after some
+            # dim, but the first solved dimension is the same problem on
+            # both engines: its stage values must agree exactly
+            assert sv_lex and sv_highs, base.label
+            assert sv_lex[0] == sv_highs[0], base.label
+
+
+def test_stage_values_recorded_for_custom_mix():
+    """A per-dim cost mix reaches ILP objective construction: the
+    contiguity-first dims carry an extra leading stage vs plain pluto."""
+    from repro.core.autotune import TunedConfig
+
+    scop = _small_scop("gemm")
+    sch_pluto = PolyTOPSScheduler(_small_scop("gemm"), CFG.pluto_style(),
+                                  decompose=False, record_stage_values=True)
+    sch_pluto.schedule()
+    sch_mix = PolyTOPSScheduler(
+        scop, TunedConfig("pluto", mix="cp").scheduler_config(),
+        decompose=False, record_stage_values=True)
+    sch_mix.schedule()
+    sv_p = sch_pluto.stats["stage_values"]
+    sv_m = sch_mix.stats["stage_values"]
+    assert sv_p and sv_m
+    # proximity contributes 2 stages (u, w); contiguity prepends one
+    # more on dims where incomplete statements remain
+    assert any(len(vm[1]) == len(vp[1]) + 1
+               for vm, vp in zip(sv_m, sv_p) if vm[0] == vp[0])
+
+
+# ---------------------------------------------------------------------------
 # the 56-combo exact-equality invariant (the former residual list → zero)
 # ---------------------------------------------------------------------------
 
