@@ -26,7 +26,12 @@ Usage:
 
 A schedule dump records the full signature: per-statement rows (kind +
 exact rational coefficients), band structure, per-dimension parallelism,
-the fallback flag, and the solver tag the corpus was generated with.
+the fallback flag, the solver tag the corpus was generated with — and
+the serialized **schedule tree** (``repro.core.schedtree``): loop
+structure, FM-derived bounds, separation decisions and parallel/vector/
+tile marks, so tree *construction* is determinism-gated alongside the
+schedule rows (a separation or bound-pruning change fails CI loudly
+even when the rows are unchanged).
 """
 from __future__ import annotations
 
@@ -69,6 +74,8 @@ def all_kernels():
 
 
 def schedule_dump(sched) -> dict:
+    from repro.core.schedtree import schedule_tree, tree_to_json
+
     rows = {}
     for idx, rr in sorted(sched.rows.items()):
         rows[str(idx)] = [
@@ -76,12 +83,19 @@ def schedule_dump(sched) -> dict:
                       for k, v in sorted(r.coeffs.items())}]
             for r in rr
         ]
+    try:
+        tree = tree_to_json(schedule_tree(sched))
+    except ValueError as e:
+        # deterministic marker for schedules no backend can scan
+        # (non-invertible / unbounded) — still drift-gated
+        tree = {"error": str(e)}
     return {
         "solver": SOLVER_TAG,
         "rows": rows,
         "bands": list(sched.bands),
         "parallel": list(sched.parallel),
         "fallback": bool(sched.fallback),
+        "tree": tree,
     }
 
 

@@ -22,6 +22,9 @@
 #                  informational context only
 #   * polybench  — generated-code smoke on the fast set (checksum-gated;
 #                  ERROR rows fail; kernel-specific geomean floor 1.3x)
+#   * pallas     — JAX-CPU (interpret) smoke: every Pallas kernel runs
+#                  through the schedule-tree → lower_to_kernel_plan
+#                  lowering and must numerically match kernels/ref.py
 #
 # Every run writes tier1_summary.json (per-gate ok + metrics) for CI to
 # upload/consume, even when a gate fails.
@@ -52,7 +55,8 @@ for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
         gates[name].update(json.loads(detail))
     except json.JSONDecodeError:
         pass
-expected = ["tests", "coverage", "golden", "sched_bench", "polybench"]
+expected = ["tests", "coverage", "golden", "sched_bench", "polybench",
+            "pallas"]
 ok = all(gates.get(g, {}).get("ok") for g in expected)
 print(json.dumps({"ok": ok, "gates": gates}, indent=2, sort_keys=True))
 PY
@@ -223,6 +227,22 @@ then
 else
   record polybench 0 "$(cat .tier1_pb_detail.json 2>/dev/null || echo '{}')"
   rm -f .tier1_pb_detail.json
+  exit 1
+fi
+
+echo "== pallas smoke (JAX CPU, interpret mode, tree lowering) =="
+T0=$SECONDS
+PALLAS_OUT="$(mktemp)"
+if JAX_PLATFORMS=cpu timeout 600 python -m repro.kernels.bench --smoke \
+     > "$PALLAS_OUT" 2>&1; then
+  cat "$PALLAS_OUT"
+  record pallas 1 "{\"seconds\": $((SECONDS - T0))}"
+  rm -f "$PALLAS_OUT"
+else
+  cat "$PALLAS_OUT" >&2
+  echo "PALLAS SMOKE FAILED (crash or numerical mismatch vs kernels/ref.py)" >&2
+  record pallas 0 "{\"seconds\": $((SECONDS - T0))}"
+  rm -f "$PALLAS_OUT"
   exit 1
 fi
 

@@ -12,8 +12,9 @@ Public API:
     sched = schedule_scop(k, config.tensor_style())
     print(sched.pretty())
 
-Code generation: repro.core.codegen (numpy) / repro.core.cbackend (C).
-Kernel plans for Pallas: repro.core.akg.
+Code generation: one schedule-tree IR (repro.core.schedtree) feeds every
+backend — repro.core.codegen (numpy), repro.core.cbackend (C), and
+repro.core.akg.lower_to_kernel_plan (Pallas kernel plans).
 """
 from . import config
 from .config import (DimConfig, Directive, FusionSpec, SchedulerConfig,

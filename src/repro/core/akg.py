@@ -1,28 +1,38 @@
-"""AKG bridge: tensor ops → SCoPs → PolyTOPS schedules → kernel plans.
+"""AKG bridge: tensor ops → SCoPs → PolyTOPS schedule trees → kernel plans.
 
 This is how the paper's scheduler becomes a first-class feature of the
-TPU framework (DESIGN.md §2): the loop order, band structure and
-vectorized dimension chosen by PolyTOPS for an operator's SCoP are
-translated into a :class:`KernelPlan` — grid-dimension order, BlockSpec
-tile shapes and the lane-mapped innermost dim — consumed by the Pallas
-kernels in ``repro.kernels``.
+TPU framework (DESIGN.md §2): the schedule tree produced by PolyTOPS for
+an operator's SCoP (:mod:`repro.core.schedtree` — the same IR the numpy
+and C emitters walk) is *lowered* into a :class:`KernelPlan` — grid
+dimension order from the outer bands, the lane-mapped vector dim from
+the ``vector`` mark (or the vectorize directive / innermost band),
+BlockSpec tile shapes fitted to VMEM via the shared cache model —
+consumed by the Pallas kernels in ``repro.kernels``.
 
-TPU adaptation: the vectorized iterator maps to the 128-lane VPU axis,
-the next-inner to 8 sublanes; MXU-facing tiles snap to multiples of
-(128, 128); tile sizes are chosen so the working set fits VMEM (~16 MiB
-usable) — this replaces the paper's externally-provided NPU tile sizes.
+:func:`lower_to_kernel_plan` is fully general: any scheduled SCoP's tree
+maps to a plan.  ``plan_matmul`` / ``plan_attention`` /
+``plan_mamba_scan`` are thin wrappers that build the operator SCoP,
+schedule it (through the structural schedule cache, tree included in the
+payload) and lower — plus at most a kernel-specific tile clamp (flash
+attention's online-softmax state, the mamba VMEM-resident hidden state).
+
+TPU adaptation: the vector iterator maps to the 128-lane VPU axis, the
+next-inner to 8 sublanes; tiles snap to LANE/SUBLANE multiples; tile
+sizes are chosen so the working set — from the statement's *real* access
+groups (:func:`repro.core.cachemodel.stmt_access_groups`), times the
+double/triple-buffering factor — fits VMEM (~16 MiB usable).  This
+replaces the paper's externally-provided NPU tile sizes.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
-from .config import SchedulerConfig, tensor_style
-from .postproc import find_tilable_bands
+from .config import tensor_style
 from .schedcache import cached_schedule_scop
-from .scheduler import Schedule, schedule_scop
-from .scop import Scop
+from .schedtree import ScheduleTree, schedule_tree, yvar
+from .scop import Scop, Statement
 
 VMEM_BYTES = 16 * 2**20
 LANE = 128
@@ -48,62 +58,112 @@ def _matmul_scop(m: int, n: int, k: int) -> Scop:
     return s
 
 
-def _order_from_schedule(sched: Schedule, stmt_idx: int = 0) -> List[str]:
-    stmt = sched.scop.statements[stmt_idx]
-    order = []
-    for row in sched.rows[stmt.index]:
-        if row.kind != "linear":
-            continue
-        itv = row.it_vector(stmt.dim)
-        nz = [k for k, v in enumerate(itv) if v != 0]
-        if len(nz) == 1 and stmt.iters[nz[0]] not in order:
-            order.append(stmt.iters[nz[0]])
-    for it in stmt.iters:     # safety: append anything unplaced
-        if it not in order:
-            order.append(it)
-    return order
+def _iter_extents(scop: Scop, stmt: Statement) -> Dict[str, int]:
+    """Concrete trip count per statement iterator (parameter values baked
+    in) — the dimension sizes the VMEM tile fitter works against."""
+    from .cachemodel import stmt_iter_ranges
+
+    return {it: (max(1, int(rng[1] - rng[0]) + 1) if rng is not None else 1)
+            for it, rng in stmt_iter_ranges(scop, stmt).items()}
 
 
 def _fit_tiles(order: List[str], dims: Dict[str, int], vector_iter: str,
-               bytes_per_elem: int = 2, n_buffers: int = 3,
-               stmt=None) -> Dict[str, int]:
+               stmt: Statement, bytes_per_elem: int = 2,
+               n_buffers: int = 3,
+               fixed: Optional[Dict[str, int]] = None) -> Dict[str, int]:
     """Snap tiles to TPU-friendly sizes under a VMEM budget.
 
-    The working set comes from the shared cache model
-    (:func:`repro.core.cachemodel.stmt_access_groups`) when the SCoP
-    statement is available: per-access tile footprints from the actual
-    subscript strides, times ``n_buffers`` for double/triple buffering —
-    the same estimator that sizes CPU cache tiles sizes VMEM tiles."""
+    The working set always comes from the shared cache model
+    (:func:`repro.core.cachemodel.stmt_access_groups`): per-access tile
+    footprints from the statement's actual subscript strides, times
+    ``n_buffers`` for double/triple buffering — the same estimator that
+    sizes CPU cache tiles sizes VMEM tiles.  No heuristic fallback: the
+    statement's real access groups are required.
+
+    ``fixed`` pins dims to a given tile (e.g. a VMEM-resident state dim
+    that must stay whole); pinned dims are exempt from shrinking, so the
+    others shrink against the true footprint."""
     from .cachemodel import stmt_access_groups, working_set_bytes
 
+    fixed = fixed or {}
     tile = {}
     for it in order:
         d = dims[it]
-        if it == vector_iter:
+        if it in fixed:
+            tile[it] = min(fixed[it], d)
+        elif it == vector_iter:
             tile[it] = min(d, 512 if d % 512 == 0 else LANE * max(d // LANE, 1))
             tile[it] = max(min(tile[it], d), min(d, LANE))
         else:
             tile[it] = min(d, 128 if d >= 128 else d)
-    groups = stmt_access_groups(stmt, order) if stmt is not None else None
+    groups = stmt_access_groups(stmt, order)
 
     # shrink until the working set fits VMEM
     def wset():
-        if groups is not None:
-            sizes = [tile[i] for i in order]
-            return n_buffers * working_set_bytes(groups, sizes, bytes_per_elem)
-        t = [tile[i] for i in order]        # no access info: legacy guess
-        prod2 = 1
-        for a in t[-2:]:
-            prod2 *= a
-        return n_buffers * prod2 * bytes_per_elem * 4
+        sizes = [tile[i] for i in order]
+        return n_buffers * working_set_bytes(groups, sizes, bytes_per_elem)
 
-    shrink_order = [it for it in order if it != vector_iter]
+    shrink_order = [it for it in order if it != vector_iter and it not in fixed]
     while wset() > VMEM_BYTES and any(tile[i] > SUBLANE for i in shrink_order):
         for it in shrink_order:
             if tile[it] > SUBLANE:
                 tile[it] //= 2
                 break
     return tile
+
+
+def lower_to_kernel_plan(tree: ScheduleTree, stmt_idx: Optional[int] = None,
+                         *, bytes_per_elem: int = 2, n_buffers: int = 3,
+                         fixed_tiles: Optional[Dict[str, int]] = None
+                         ) -> KernelPlan:
+    """Map any scheduled SCoP's schedule tree to a :class:`KernelPlan`.
+
+    * **grid order** — outer→inner point bands of the tree (tile/wave
+      counter bands are post-processing artifacts and skipped), each
+      mapped back to the statement iterator it scans through the tree's
+      iterator substitution;
+    * **vector dim** — the band carrying the ``vector`` mark when one
+      exists, else the schedule's vectorize directive, else the
+      innermost loop (contiguity put it there);
+    * **tiles** — lane/sublane-snapped sizes fitted to VMEM via the
+      shared cache model (:func:`_fit_tiles`).
+
+    ``stmt_idx`` defaults to the deepest statement (scalar-init
+    statements have no loop nest to map to a grid); a zero-dimensional
+    choice raises ``ValueError`` so rankers can drop the candidate.
+    """
+    scop = tree.scop
+    if stmt_idx is None:
+        stmt_idx = max(range(len(scop.statements)),
+                       key=lambda i: (scop.statements[i].dim, -i))
+    stmt = scop.statements[stmt_idx]
+    if stmt.dim == 0:
+        raise ValueError(
+            f"statement S{stmt.index} has no loop dimensions to lower")
+    sub = tree.subst.get(stmt.index, {})
+    order: List[str] = []
+    vec: Optional[str] = None
+    for band in tree.bands():
+        if stmt.index not in band.stmts or band.role:
+            continue
+        y = yvar(band.dim)
+        cands = [it for it in stmt.iters if sub.get(it, {}).get(y)]
+        if len(cands) == 1 and cands[0] not in order:
+            order.append(cands[0])
+            if band.vector and vec is None:
+                vec = cands[0]
+    for it in stmt.iters:     # safety: append anything unplaced
+        if it not in order:
+            order.append(it)
+    if vec is None:
+        vi = tree.vector_iter.get(stmt.index)
+        vec = stmt.iters[vi] if vi is not None else order[-1]
+    dims = _iter_extents(scop, stmt)
+    tile = _fit_tiles(order, dims, vec, stmt,
+                      bytes_per_elem=bytes_per_elem, n_buffers=n_buffers,
+                      fixed=fixed_tiles)
+    return KernelPlan(tuple(order), vec, tile, tuple(tree.sched_bands),
+                      tree.pretty)
 
 
 @functools.lru_cache(maxsize=64)
@@ -115,19 +175,10 @@ def plan_matmul(m: int, n: int, k: int,
     cfg = tensor_style()
     cfg.auto_vectorize = True
     # structural cache: repeat plans for the same (m, n, k) shape are a
-    # lookup, persisted on disk across serving/benchmark processes
-    sched = cached_schedule_scop(scop, cfg)
-    order = _order_from_schedule(sched)
-    vec = None
-    stmt = scop.statements[0]
-    vi = sched.vector_iter.get(0)
-    if vi is not None:
-        vec = stmt.iters[vi]
-    else:
-        vec = order[-1]
-    tile = _fit_tiles(order, {"i": m, "kk": k, "j": n}, vec, stmt=stmt)
-    bands = tuple(sched.bands)
-    return KernelPlan(tuple(order), vec, tile, bands, sched.pretty())
+    # lookup, persisted on disk across serving/benchmark processes —
+    # with the schedule tree riding along in the payload
+    sched = cached_schedule_scop(scop, cfg, with_tree=True)
+    return lower_to_kernel_plan(schedule_tree(sched))
 
 
 @functools.lru_cache(maxsize=8)
@@ -141,12 +192,33 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
             with s.loop("d", 0, "D"):
                 s.stmt("S[q,kk] = S[q,kk] + Qm[q,d] * Km[kk,d]")
     cfg = tensor_style()
-    sched = cached_schedule_scop(s, cfg)
-    order = _order_from_schedule(sched)
-    tile = _fit_tiles(order, {"q": seq_q, "kk": seq_k, "d": head_dim}, "d",
-                      stmt=s.statements[0])
+    sched = cached_schedule_scop(s, cfg, with_tree=True)
+    plan = lower_to_kernel_plan(schedule_tree(sched))
     # flash blocking: q and k tiles bounded for the online-softmax state
+    tile = dict(plan.tile)
     tile["q"] = min(tile.get("q", 128), 128)
     tile["kk"] = min(tile.get("kk", 128), 128)
-    return KernelPlan(tuple(order), "d", tile, tuple(sched.bands),
-                      sched.pretty())
+    return replace(plan, tile=tile)
+
+
+@functools.lru_cache(maxsize=16)
+def plan_mamba_scan(seq: int, d_inner: int, state: int) -> KernelPlan:
+    """Selective-scan (Mamba-1) recurrence h_t = a_t ⊙ h_{t-1} + b_t with
+    y_t = h_t · c_t: the scheduler discovers t sequential-outermost (the
+    recurrence dependence) with the d/state dims parallel inside, and the
+    lowering turns that into the kernel's chunked grid — chunk size from
+    the t tile, d-block from the d tile."""
+    s = Scop("mamba_scan", params={"T": seq, "D": d_inner, "S": state})
+    with s.loop("t", 0, "T"):
+        with s.loop("d", 0, "D"):
+            with s.loop("n", 0, "S"):
+                s.stmt("H[d,n] = A[t,d,n] * H[d,n] + B[t,d,n]")
+                s.stmt("Y[t,d] = Y[t,d] + H[d,n] * Cs[t,n]")
+    cfg = tensor_style()
+    sched = cached_schedule_scop(s, cfg, with_tree=True)
+    # kernel constraint: the hidden state (d_block × state) is VMEM-
+    # resident scratch across chunks — the state dim stays whole, pinned
+    # *inside* the fit so t/d shrink against the true footprint
+    return lower_to_kernel_plan(schedule_tree(sched), stmt_idx=0,
+                                bytes_per_elem=4, n_buffers=2,
+                                fixed_tiles={"n": state})

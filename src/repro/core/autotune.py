@@ -58,7 +58,8 @@ from . import costs as C
 from .cachemodel import (CacheSpec, default_spec, shared_bands,
                          shared_groups, shared_scan, shared_tile_sizes,
                          working_set_bytes)
-from .codegen import _yvar, iterator_substitution, level_parallel
+from .schedtree import (iterator_substitution, level_parallel,
+                        schedule_tree, yvar as _yvar)
 from .postproc import find_tilable_bands, tile_schedule
 from .schedcache import (ScheduleCache, autotune_key, cached_schedule_scop,
                          global_cache, load_measurements,
@@ -295,17 +296,14 @@ def _stmt_trip(scop: Scop, stmt) -> float:
     """Box-volume iteration estimate with concrete parameter values.
     Identical across candidate schedules of the same SCoP, so it only
     weights statements against each other."""
-    from .polyhedron import maximum, minimum
+    from .cachemodel import stmt_iter_ranges
 
-    cons = list(stmt.domain) + scop.param_rows()
     trip = 1.0
-    for it in stmt.iters:
-        hi = maximum(cons, {it: Fraction(1)})
-        lo = minimum(cons, {it: Fraction(1)})
-        if hi is None or lo is None:
+    for rng in stmt_iter_ranges(scop, stmt).values():
+        if rng is None:
             trip *= 100.0
         else:
-            trip *= max(1.0, float(hi - lo) + 1.0)
+            trip *= max(1.0, float(rng[1] - rng[0]) + 1.0)
     return trip
 
 
@@ -582,3 +580,61 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
         # come from the cache and nothing compiles)
         cache.put(key, best.to_dict())
     return best
+
+
+# ---------------------------------------------------------------------------
+# backend-aware candidate lowering: the same enumerated configuration
+# space, ranked by the same static model, but lowered to Pallas
+# KernelPlans through the schedule tree instead of C sources — so the
+# autotuner can rank TPU kernel plans too.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PallasCandidate:
+    """One Pallas lowering: a scheduler configuration, its schedule tree
+    lowered to a :class:`~repro.core.akg.KernelPlan`, and the analytic
+    cost that ranked it (shared with the CPU measurement path)."""
+    config: TunedConfig
+    plan: object                       # repro.core.akg.KernelPlan
+    static_cost: float
+
+
+def rank_pallas_plans(scop: Scop, *, top_k: int = 4,
+                      cache: Optional[ScheduleCache] = None,
+                      use_cache: bool = True,
+                      spec: Optional[CacheSpec] = None
+                      ) -> List[PallasCandidate]:
+    """Enumerate the schedule-determining bases (strategy × fusion ×
+    cost mix, fingerprint-deduplicated like :func:`autotune`), rank them
+    with the static cost model, and lower the best trees to
+    :class:`~repro.core.akg.KernelPlan`\\ s, best-first.
+
+    Tile/wavefront variants are deliberately excluded: BlockSpec tile
+    fitting is the lowering's job (VMEM budget + lane/sublane snapping),
+    not a search axis.  Deterministic: candidate order, ranking
+    tie-breaks and the lowering are all pure functions of the SCoP."""
+    from .akg import lower_to_kernel_plan
+
+    spec = spec or default_spec()
+    cache = cache or global_cache()
+    sched_cache = cache if use_cache else ScheduleCache(disk=False)
+    scheds = _schedules_for_space(scop, sched_cache)
+    bases = [tc for tc in candidate_space(scop, scheds)
+             if tc.tile is None and not tc.wavefront]
+    trips = {s.index: _stmt_trip(scop, s) for s in scop.statements}
+    memo: dict = {}
+    scored = sorted(
+        ((static_cost(scop, scheds[tc.base], tc, spec, trips, memo), i, tc)
+         for i, tc in enumerate(bases)),
+        key=lambda t: (t[0], t[1]))
+    out: List[PallasCandidate] = []
+    for cost, _, tc in scored:
+        if len(out) >= top_k:
+            break
+        try:
+            plan = lower_to_kernel_plan(schedule_tree(scheds[tc.base]))
+        except ValueError:
+            continue       # non-invertible/unbounded schedule: not lowerable
+        out.append(PallasCandidate(tc, plan, cost))
+    return out

@@ -41,7 +41,8 @@ from dataclasses import dataclass
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .codegen import ScanStmt, _yvar, iterator_substitution, scan_from_schedule
+from .schedtree import (ScanStmt, iterator_substitution, scan_from_schedule,
+                        yvar as _yvar)
 from .scheduler import Schedule
 
 
@@ -159,6 +160,22 @@ def band_access_groups(scan: Sequence[ScanStmt], start: int,
 def working_set_bytes(groups: Sequence[AccessGroup], sizes: Sequence[int],
                       elem_bytes: int = 8) -> int:
     return elem_bytes * sum(g.tile_elems(sizes) for g in groups)
+
+
+def stmt_iter_ranges(scop, stmt) -> Dict[str, Optional[Tuple[Fraction, Fraction]]]:
+    """Rational (min, max) of each statement iterator over its domain
+    with the SCoP's concrete parameter values, or None when the LP finds
+    no bound — the shared extent primitive behind the autotuner's trip
+    estimate and the AKG/Pallas VMEM tile fitter."""
+    from .polyhedron import maximum, minimum
+
+    cons = list(stmt.domain) + scop.param_rows()
+    out: Dict[str, Optional[Tuple[Fraction, Fraction]]] = {}
+    for it in stmt.iters:
+        hi = maximum(cons, {it: Fraction(1)})
+        lo = minimum(cons, {it: Fraction(1)})
+        out[it] = None if hi is None or lo is None else (lo, hi)
+    return out
 
 
 def stmt_access_groups(stmt, iters: Sequence[str]) -> List[AccessGroup]:

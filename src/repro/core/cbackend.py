@@ -4,23 +4,29 @@ schedule (kernel + deterministic init + timing + checksum).
 The Python/numpy backend (codegen.py) is the correctness oracle; this
 backend is the *measurement* path for the paper's CPU experiments
 (§IV-B/C/D): gcc -O3 -march=native applies real SIMD vectorization and
-real cache behaviour. Parallel dims get ``#pragma omp parallel for`` and
-vectorizable innermost dims ``#pragma omp simd`` (this container has one
-core, so omp-parallel speedups are structural — documented in
-EXPERIMENTS.md; SIMD + locality effects are real).
+real cache behaviour.  Both emitters walk the same schedule-tree IR
+(:mod:`repro.core.schedtree`): loop separation, FM bounds and the
+``parallel`` marks are computed once at tree construction; this class
+only renders C syntax.  ``parallel``-marked bands get ``#pragma omp
+parallel for`` (outermost / wavefront-inner only) and parallel innermost
+bands ``#pragma omp simd`` (this container has one core, so omp-parallel
+speedups are structural — documented in EXPERIMENTS.md; SIMD + locality
+effects are real).
 
 Concrete parameter values are baked in as compile-time constants,
-exactly like PolyBench reference harnesses.
+exactly like PolyBench reference harnesses — and the tree for this
+backend is built with that concrete context (``concrete=True``), which
+is what collapses tiled/wavefronted MINI/MAXI bound chains.
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional
 
 from .affine import Affine
-from .codegen import (CodeGenerator, ScanStmt, _affine_src, _substitute_body,
-                      _yvar, level_parallel, wave_parallel)
+from .codegen import CodeGenerator, _affine_src, _substitute_body, _yvar
 from .polyhedron import maximum, minimum
+from .schedtree import (BandNode, LeafNode, ScanStmt, ScheduleTree,
+                        render_affine)
 from .scheduler import Schedule
 from .scop import Scop, _ACCESS, _split_subscripts
 
@@ -81,11 +87,17 @@ def array_extents(scop: Scop) -> Dict[str, List[int]]:
 
 
 class CCodeGenerator(CodeGenerator):
+    #: bake concrete parameter values into the FM bound-pruning context
+    #: (they are #defines in the emitted program)
+    CONCRETE = True
+
     def __init__(self, sched: Schedule, scan: Optional[List[ScanStmt]] = None,
                  scalars: Optional[Dict[str, float]] = None,
                  omp: bool = True, repeats: int = 1,
-                 func_name: Optional[str] = None):
-        super().__init__(sched, scan=scan, vectorize=False, func_name=func_name)
+                 func_name: Optional[str] = None,
+                 tree: Optional[ScheduleTree] = None):
+        super().__init__(sched, scan=scan, vectorize=False,
+                         func_name=func_name, tree=tree)
         self.scalars = dict(scalars or {})
         self.omp = omp
         self.repeats = repeats
@@ -114,18 +126,13 @@ class CCodeGenerator(CodeGenerator):
                 out[name] = new
         return out
 
-    def _scan_context(self):
-        """The C backend bakes concrete parameter values as #defines, so
-        FM redundancy pruning may assume them outright — this is what
-        collapses the parametric MINI/MAXI bound chains of tiled and
-        wavefronted nests to a handful of terms."""
-        return super()._scan_context() + self.scop.param_rows()
-
     # -- program ----------------------------------------------------------
     def generate(self) -> str:
         scop = self.scop
         self.lines = []
         self.indent = 0
+        self._bands = {}
+        self._loop_depth = 0
         self._parallel_emitted = False
         ext = array_extents(scop)
         e = self._emit
@@ -176,8 +183,7 @@ class CCodeGenerator(CodeGenerator):
         e("")
         e(f"static void {self.func_name}(void) {{")
         self.indent += 1
-        n_dims = max(ss.n_dims() for ss in self.scan)
-        self._gen_level(list(self.scan), 0, n_dims, {})
+        self._walk(self.tree.root)
         self.indent -= 1
         e("}")
         e("")
@@ -199,61 +205,54 @@ class CCodeGenerator(CodeGenerator):
         e("}")
         return "\n".join(self.lines)
 
-    # -- loop emission (C syntax + pragmas) ---------------------------------
-    def _gen_loop(self, group, d, n_dims, guards):
-        y = _yvar(d)
-        los, his = [], []
-        for ss in group:
-            lo, hi = self._scanners[ss.stmt.index].bounds[d]
-            los.append(self._bound_c(lo, lower=True))
-            his.append(self._bound_c(hi, lower=False))
-        lo_src = los[0] if len(set(los)) == 1 else _fold("MINI", sorted(set(los)))
-        hi_src = his[0] if len(set(his)) == 1 else _fold("MAXI", sorted(set(his)))
-        mixed = len(group) > 1 and (len(set(los)) > 1 or len(set(his)) > 1)
-        new_guards = dict(guards)
-        if mixed:
-            for ss, l, h in zip(group, los, his):
-                g = list(new_guards.get(ss.stmt.index, []))
-                g += [f"{y} >= {l}", f"{y} <= {h}"]
-                new_guards[ss.stmt.index] = g
-        par = level_parallel(self.sched, group, d)
-        innermost = all(self._innermost_linear(ss, d) for ss in group)
+    # -- loop emission (C syntax + pragmas from the tree's marks) -----------
+    def _emit_band(self, node: BandNode):
+        self._bands[node.dim] = node
+        y = _yvar(node.dim)
+        lo_src, hi_src = self._band_bounds(node)
         # omp-parallel only on OUTERMOST loops: a parallel region inside a
         # hot nest pays fork/join per outer iteration (measured ~60 µs of
         # constant overhead on trsmL when emitted at depth 2).  Wavefront
         # tile counters are the exception — their parallelism only exists
         # under the sequential wave loop.
-        if (self.omp and par and not self._parallel_emitted and not innermost
-                and (self.indent == 1 or wave_parallel(group, d))):
+        if (self.omp and node.parallel and not self._parallel_emitted
+                and not node.innermost
+                and (self._loop_depth == 0 or node.role == "wave_par")):
             self._emit("#pragma omp parallel for")
             self._parallel_emitted = True
-        if self.omp and par and innermost:
+        if self.omp and node.parallel and node.innermost:
             self._emit("#pragma omp simd")
-            for ss in group:
-                self.vectorized_stmts.add(ss.stmt.index)
+            for s in node.stmts:
+                self.vectorized_stmts.add(s)
         self._emit(f"for (int {y} = {lo_src}; {y} <= {hi_src}; {y}++) {{")
         self.indent += 1
+        self._loop_depth += 1
         body_start = len(self.lines)
-        self._gen_level(group, d + 1, n_dims, new_guards)
+        self._walk(node.child)
         if len(self.lines) == body_start:
             self._emit(";")
+        self._loop_depth -= 1
         self.indent -= 1
         self._emit("}")
 
-    def _bound_c(self, bounds: List[Affine], lower: bool) -> str:
+    def _render_bound(self, bounds: List[Affine], lower: bool) -> str:
         terms = []
         for e in bounds:
-            body, den = _affine_src(e)
+            body, den = render_affine(e)
             terms.append(_ceild_c(body, den) if lower else _floord_c(body, den))
+        if not terms:
+            raise ValueError("unbounded loop dimension")
         uniq = sorted(set(terms))
         return _fold("MAXI" if lower else "MINI", uniq)
 
-    def _emit_leaf(self, ss, guard_exprs):
-        s = ss.stmt
-        scanner = self._scanners[s.index]
+    def _fold_group(self, terms: List[str], lower: bool) -> str:
+        return _fold("MINI" if lower else "MAXI", terms)
+
+    def _emit_leaf(self, leaf: LeafNode):
+        s = self.scop.statements[leaf.stmt]
+        guard_exprs = self._band_guards(leaf)
         sub_src = {}
-        guard_exprs = list(guard_exprs)
-        for it, expr in scanner.subst.items():
+        for it, expr in self.tree.subst[s.index].items():
             body, den = _affine_src(expr)
             if den != 1:
                 sub_src[it] = _floord_c(body, den)

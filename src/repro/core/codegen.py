@@ -1,207 +1,43 @@
-"""Polyhedral code generation (CLooG-lite) + reference interpreter.
+"""Tree-walking numpy emitter + reference interpreter.
 
-Turns a :class:`Schedule` into executable Python/numpy source that scans
-statement instances in lexicographic schedule-date order:
+Turns a :class:`~repro.core.schedtree.ScheduleTree` (built once from a
+:class:`Schedule` by :mod:`repro.core.schedtree` — loop separation,
+Fourier–Motzkin bounds and parallel/vector marks all live there) into
+executable Python/numpy source that scans statement instances in
+lexicographic schedule-date order:
 
-* scalar dims  → sequencing (loop distribution),
-* linear dims  → loops with Fourier–Motzkin bounds,
-* *separation*: statements in one loop level are split into sequential
-  loops when the active-dependence direction graph permits (this is how
-  PolyTOPS' distribution materializes; cyclic groups stay fused with
-  per-statement guards),
-* innermost parallel loops of single-statement groups are emitted as
-  numpy slice/sum expressions — the CPU stand-in for the paper's NPU/SIMD
-  vector unit (DESIGN.md §2).
+* sequence nodes → sequencing (loop distribution),
+* band nodes     → loops over the tree's precomputed FM bounds,
+* bands carrying the ``vector`` mark (single-statement innermost
+  parallel loops) are emitted as numpy slice/sum expressions — the CPU
+  stand-in for the paper's NPU/SIMD vector unit (DESIGN.md §2).
 
-Tile dims (from postproc) arrive as inequality-defined dims and flow
-through the same FM machinery.
+Tile/wavefront dims (from postproc) are ordinary bands with
+``tile``/``wavefront`` marks and flow through the same walk.  This
+emitter is the correctness oracle; the C measurement backend
+(:mod:`repro.core.cbackend`) walks the *same* tree.
 """
 from __future__ import annotations
 
 import math
 import re
-import textwrap
-from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .affine import Affine, affine_eval, affine_to_str, parse_affine
-from .polyhedron import Constraint, bounds_of, fm_eliminate
-from .scheduler import Schedule, ScheduleRow
-from .scop import Scop, Statement
+from .affine import Affine, parse_affine
+from .schedtree import (BandNode, LeafNode, ScanStmt, ScheduleTree,
+                        SequenceNode, build_tree, coeff_of_y, render_affine,
+                        schedule_tree, yvar as _yvar)
+from .scheduler import Schedule
+from .scop import Scop
 
 # functions visible to generated Python code (match C's libm names)
 _EXEC_ENV: Dict[str, object] = {
     "np": np, "math": math, "sqrt": np.sqrt, "fabs": np.abs, "pow": np.power,
     "exp": np.exp, "log": np.log, "fmod": np.fmod, "floor": np.floor,
 }
-
-# ---------------------------------------------------------------------------
-# Scanning systems: per statement, dims described as equalities or
-# tile inequalities over (y*, it*, params)
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class DimSpec:
-    kind: str              # 'eq' (y == phi(it, N, 1)) | 'tile'
-    phi: Affine            # over stmt iterators / params / const(1)
-    tile: int = 0          # tile size for kind == 'tile'
-    sched_dim: int = 0     # schedule dim governing dependence satisfaction:
-                           # own dim for eq rows, band start for tile/wave dims
-    role: str = ""         # '' (point/eq) | 'tile' (tile counter) |
-                           # 'wave' (sequential wavefront sum) |
-                           # 'wave_par' (tile counter inside a wave: parallel
-                           # by band permutability, see level_parallel)
-
-
-@dataclass
-class ScanStmt:
-    stmt: Statement
-    dims: List[DimSpec]
-    guards: List[str] = field(default_factory=list)
-
-    def n_dims(self) -> int:
-        return len(self.dims)
-
-
-def scan_from_schedule(sched: Schedule) -> List[ScanStmt]:
-    out = []
-    for s in sched.scop.statements:
-        dims = []
-        for d, row in enumerate(sched.rows[s.index]):
-            phi: Affine = {}
-            for (key, *rest), v in row.coeffs.items():
-                if key == "it":
-                    phi[s.iters[rest[0]]] = v
-                elif key == "par":
-                    phi[rest[0]] = v
-                else:
-                    phi[1] = v
-            dims.append(DimSpec("eq", phi, sched_dim=d))
-        out.append(ScanStmt(s, dims))
-    return out
-
-
-def _yvar(d: int) -> str:
-    # underscore avoids collisions with SCoP array/scalar names like "y1"
-    return f"y_{d}"
-
-
-def _full_system(ss: ScanStmt, params: Sequence[str]) -> List[Constraint]:
-    """Constraints over (y*, it*, params) for one statement."""
-    cons: List[Constraint] = [(dict(e), k) for e, k in ss.stmt.domain]
-    for d, spec in enumerate(ss.dims):
-        y = _yvar(d)
-        if spec.kind == "eq":
-            e = dict(spec.phi)
-            e[y] = e.get(y, Fraction(0)) - 1
-            cons.append((e, "==0"))
-        else:  # tile: T*y <= phi <= T*y + T - 1
-            T = Fraction(spec.tile)
-            e1 = dict(spec.phi)
-            e1[y] = e1.get(y, Fraction(0)) - T
-            cons.append((e1, ">=0"))                      # phi - T*y >= 0
-            e2 = {k: -v for k, v in spec.phi.items()}
-            e2[y] = e2.get(y, Fraction(0)) + T
-            e2[1] = e2.get(1, Fraction(0)) + T - 1
-            cons.append((e2, ">=0"))                      # T*y + T-1 - phi >= 0
-    return cons
-
-
-def iterator_substitution(ss: ScanStmt) -> Dict[str, Affine]:
-    """Express each statement iterator as affine over (y*, params) by
-    inverting a full-rank subset of the scan's 'eq' rows.  Shared by the
-    scanners, the cache model (tile-footprint strides) and the autotuner
-    (locality scoring)."""
-    from .linalg_q import inverse, mat, rank
-
-    s = ss.stmt
-    eqs = []
-    for d, spec in enumerate(ss.dims):
-        if spec.kind == "eq" and any(k in s.iters for k in spec.phi):
-            eqs.append((d, spec.phi))
-    # build T (rows over iterators) picking a full-rank subset
-    rows, chosen = [], []
-    for d, phi in eqs:
-        row = [phi.get(it, Fraction(0)) for it in s.iters]
-        if rank(mat(rows + [row])) > len(rows):
-            rows.append(row)
-            chosen.append((d, phi))
-        if len(rows) == s.dim:
-            break
-    if len(rows) < s.dim:
-        raise ValueError(f"schedule not invertible for {s}")
-    tinv = inverse(mat(rows))
-    subst: Dict[str, Affine] = {}
-    for i, it in enumerate(s.iters):
-        expr: Affine = {}
-        for j, (d, phi) in enumerate(chosen):
-            c = tinv[i][j]
-            if c == 0:
-                continue
-            expr[_yvar(d)] = expr.get(_yvar(d), Fraction(0)) + c
-            for k, v in phi.items():
-                if k not in s.iters:   # params / const move to RHS
-                    expr[k] = expr.get(k, Fraction(0)) - c * v
-        subst[it] = {k: v for k, v in expr.items() if v != 0}
-    return subst
-
-
-def wave_parallel(group: Sequence[ScanStmt], d: int) -> bool:
-    """True when scan level ``d`` is a wavefront-inner tile counter for
-    every statement in the group — the one loop whose parallelism lives
-    under a sequential wave dim (see level_parallel)."""
-    specs = [ss.dims[d] for ss in group if d < ss.n_dims()]
-    return bool(specs) and all(spec.role == "wave_par" for spec in specs)
-
-
-def level_parallel(sched: Schedule, group: Sequence[ScanStmt], d: int) -> bool:
-    """Single source of truth for loop-level parallel legality, shared by
-    the Python oracle (vectorized emission) and the C backend (omp
-    parallel/simd pragmas) so both mark the same dims.
-
-    * wavefront sum dims are sequential by construction;
-    * the tile counter inside a wavefront ('wave_par') is parallel: the
-      band is fully permutable, so every active dependence has
-      componentwise non-negative distance, tile counters inherit that,
-      and equal wave value forces both tile deltas to zero (same tile);
-    * everything else is judged against SCHEDULE dims via
-      stmt_parallel_at_set (distance zero for all deps not satisfied
-      outside)."""
-    specs = [ss.dims[d] for ss in group if d < ss.n_dims()]
-    if not specs:
-        return False
-    if any(spec.role == "wave" for spec in specs):
-        return False
-    if wave_parallel(group, d):
-        return True
-    stmt_set = {ss.stmt.index for ss in group if d < ss.n_dims()}
-    sd = min(spec.sched_dim for spec in specs)
-    return sched.stmt_parallel_at_set(stmt_set, sd)
-
-
-class _StmtScanner:
-    """Precomputes, per statement, loop bounds of each y dim (in terms of
-    outer y dims and params) and the iterator substitution it = g(y).
-
-    ``context`` rows (parameter bounds or concrete values — see
-    ``bounds_of``) drive LP redundancy pruning of the FM chains."""
-
-    def __init__(self, ss: ScanStmt, params: Sequence[str],
-                 context: Sequence[Constraint] = ()):
-        self.ss = ss
-        self.params = list(params)
-        self.n = ss.n_dims()
-        sys_full = _full_system(ss, params)
-        self.bounds: List[Tuple[List[Affine], List[Affine]]] = []
-        for d in range(self.n):
-            inner = [it for it in ss.stmt.iters] + [_yvar(k) for k in range(self.n - 1, d, -1)]
-            lo, hi = bounds_of(sys_full, _yvar(d), inner, context=context)
-            self.bounds.append((lo, hi))
-        self.subst = iterator_substitution(ss)
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +53,8 @@ def _floor_div_src(num: str, den: int) -> str:
 
 
 def _affine_src(e: Affine, sub: Optional[Dict[str, Affine]] = None) -> str:
-    """Affine over y*/params (ints at runtime) to Python source."""
+    """Affine over y*/params (ints at runtime) to source, optionally
+    substituting iterator expressions first.  Returns (body, den)."""
     if sub:
         e2: Affine = {}
         for k, v in e.items():
@@ -227,40 +64,7 @@ def _affine_src(e: Affine, sub: Optional[Dict[str, Affine]] = None) -> str:
             else:
                 e2[k] = e2.get(k, Fraction(0)) + v
         e = {k: v for k, v in e2.items() if v != 0}
-    # common denominator
-    den = 1
-    for v in e.values():
-        den = den * v.denominator // math.gcd(den, v.denominator)
-    parts = []
-    for k, v in sorted(e.items(), key=lambda kv: str(kv[0])):
-        c = int(v * den)
-        if c == 0:
-            continue
-        if k == 1:
-            parts.append(f"{c:+d}")
-        elif c == 1:
-            parts.append(f"+{k}")
-        elif c == -1:
-            parts.append(f"-{k}")
-        else:
-            parts.append(f"{c:+d}*{k}")
-    body = "".join(parts) or "0"
-    if body.startswith("+"):
-        body = body[1:]
-    return body, den
-
-
-def _bound_src(bounds: List[Affine], lower: bool) -> str:
-    terms = []
-    for e in bounds:
-        body, den = _affine_src(e)
-        terms.append(_ceil_div_src(body, den) if lower else _floor_div_src(body, den))
-    if not terms:
-        raise ValueError("unbounded loop dimension")
-    uniq = sorted(set(terms))
-    if len(uniq) == 1:
-        return uniq[0]
-    return ("max(" if lower else "min(") + ", ".join(uniq) + ")"
+    return render_affine(e)
 
 
 _NAME_RE = re.compile(r"[A-Za-z_][A-Za-z_0-9]*")
@@ -274,41 +78,66 @@ def _substitute_body(body: str, subst: Dict[str, str]) -> str:
     return _NAME_RE.sub(repl, body)
 
 
+def _drop_var(e: Affine, sub: Dict[str, Affine], d: int) -> Optional[Affine]:
+    """Substituted expr with the y_d term removed (slice base address)."""
+    out: Affine = {}
+    for k, v in e.items():
+        if k == 1:
+            out[1] = out.get(1, Fraction(0)) + v
+        elif k in sub:
+            for k2, v2 in sub[k].items():
+                out[k2] = out.get(k2, Fraction(0)) + v * v2
+        else:
+            out[k] = out.get(k, Fraction(0)) + v
+    out.pop(_yvar(d), None)
+    return {k: v for k, v in out.items() if v != 0}
+
+
 # ---------------------------------------------------------------------------
 # the generator
 # ---------------------------------------------------------------------------
 
 class CodeGenerator:
+    """Tree-walking Python/numpy emitter.
+
+    Accepts either a prebuilt ``tree`` or a ``Schedule`` (+ optional
+    tiled ``scan``), in which case the tree is built here with the
+    parametric bound context (see :data:`CONCRETE`)."""
+
+    #: bound-pruning context: the numpy oracle stays parametric (only the
+    #: SCoP's assumed parameter lower bound); the C backend overrides
+    #: this to bake concrete parameter values (see CCodeGenerator)
+    CONCRETE = False
+
     def __init__(self, sched: Schedule, scan: Optional[List[ScanStmt]] = None,
-                 vectorize: bool = True, func_name: Optional[str] = None):
+                 vectorize: bool = True, func_name: Optional[str] = None,
+                 tree: Optional[ScheduleTree] = None):
         self.sched = sched
         self.scop = sched.scop
         self.params = self.scop.param_names()
-        self.scan = scan if scan is not None else scan_from_schedule(sched)
         self.vectorize = vectorize
         self.func_name = func_name or f"kernel_{self.scop.name}".replace("-", "_")
         self.lines: List[str] = []
         self.indent = 0
-        ctx = self._scan_context()
-        self._scanners = {ss.stmt.index: _StmtScanner(ss, self.params, ctx)
-                          for ss in self.scan}
+        if tree is None:
+            if scan is None and not self.CONCRETE:
+                tree = schedule_tree(sched)      # shared memoized tree
+            else:
+                tree = build_tree(sched, scan=scan, concrete=self.CONCRETE)
+        self.tree = tree
         self.vectorized_stmts: Set[int] = set()
-
-    def _scan_context(self) -> List[Constraint]:
-        """Known-true rows for FM redundancy pruning.  The Python oracle
-        stays parametric: only the SCoP's assumed parameter lower bound.
-        (The C backend bakes concrete parameter values — see
-        CCodeGenerator.)"""
-        return self.scop.param_min_rows()
+        self._bands: Dict[int, BandNode] = {}
+        self._loop_depth = 0
 
     # -- public ---------------------------------------------------------
     def generate(self) -> str:
         self.lines = []
+        self._bands = {}
+        self._loop_depth = 0
         args = ", ".join(list(self.scop.arrays) + self.scop.scalars + self.params)
         self._emit(f"def {self.func_name}({args}):")
         self.indent += 1
-        n_dims = max(ss.n_dims() for ss in self.scan)
-        self._gen_level(list(self.scan), 0, n_dims, {})
+        self._walk(self.tree.root)
         self._emit("return None")
         self.indent -= 1
         return "\n".join(self.lines)
@@ -319,146 +148,92 @@ class CodeGenerator:
         exec(compile(src, f"<polytops:{self.func_name}>", "exec"), env)
         return env[self.func_name], src
 
-    # -- internals --------------------------------------------------------
+    # -- the walk ---------------------------------------------------------
     def _emit(self, line: str):
         self.lines.append("    " * self.indent + line)
 
-    def _const_at(self, ss: ScanStmt, d: int) -> Optional[int]:
-        spec = ss.dims[d]
-        if spec.kind != "eq":
-            return None
-        if any(k in ss.stmt.iters for k in spec.phi):
-            return None
-        if any(k != 1 for k in spec.phi):
-            return None   # parametric constant: treat as loop
-        return int(spec.phi.get(1, Fraction(0)))
-
-    def _gen_level(self, group: List[ScanStmt], d: int, n_dims: int,
-                   guards: Dict[int, List[str]]):
-        if not group:
+    def _walk(self, node):
+        if node is None:
             return
-        if d >= n_dims or all(ss.n_dims() <= d for ss in group):
-            for ss in sorted(group, key=lambda s: s.stmt.index):
-                self._emit_leaf(ss, guards.get(ss.stmt.index, []))
-            return
-        consts = {ss.stmt.index: self._const_at(ss, d) for ss in group}
-        if all(c is not None for c in consts.values()):
-            order: Dict[int, List[ScanStmt]] = {}
-            for ss in group:
-                order.setdefault(consts[ss.stmt.index], []).append(ss)
-            for c in sorted(order):
-                self._gen_level(order[c], d + 1, n_dims, guards)
-            return
-        # linear level: separate into sequential loop groups when legal
-        for sub in self._separate(group, d):
-            self._gen_loop(sub, d, n_dims, guards)
+        if isinstance(node, SequenceNode):
+            for c in node.children:
+                self._walk(c)
+        elif isinstance(node, BandNode):
+            self._emit_band(node)
+        else:
+            self._emit_leaf(node)
 
-    def _separate(self, group: List[ScanStmt], d: int) -> List[List[ScanStmt]]:
-        """Order statements into sequential loop groups; merge cyclic ones."""
-        if len(group) == 1:
-            return [group]
-        idx = {ss.stmt.index: ss for ss in group}
-        # deps that still constrain relative order at/below this level —
-        # satisfaction is judged against SCHEDULE dims, not scan levels
-        level_sd = min(ss.dims[d].sched_dim for ss in group if d < ss.n_dims())
-        edges: Set[Tuple[int, int]] = set()
-        for dep in self.sched.deps:
-            a, b = dep.source.index, dep.target.index
-            if a == b or a not in idx or b not in idx:
-                continue
-            if dep.satisfied_at is not None and dep.satisfied_at < level_sd:
-                continue
-            edges.add((a, b))
-        # union cyclic pairs via SCC on the subgraph
-        from .scheduler import _scc_groups
-        deps_like = [_FakeDep(a, b, idx) for (a, b) in edges]
-        sccs = _scc_groups([ss.stmt for ss in group], deps_like)
-        out = []
-        for comp in sccs:
-            # keep statements with *identical* loop structure together only
-            # if they are in the same SCC; singleton SCCs become their own
-            # sequential loop (classic distribution)
-            out.append([idx[i] for i in comp if i in idx])
-        return [g for g in out if g]
-
-    def _gen_loop(self, group: List[ScanStmt], d: int, n_dims: int,
-                  guards: Dict[int, List[str]]):
-        y = _yvar(d)
+    def _band_bounds(self, node: BandNode) -> Tuple[str, str]:
+        """Loop bounds: per-statement rendered bounds, folded across the
+        group (min of lowers / max of uppers for the domain union)."""
         los, his = [], []
-        for ss in group:
-            lo, hi = self._scanners[ss.stmt.index].bounds[d]
-            los.append(_bound_src(lo, lower=True))
-            his.append(_bound_src(hi, lower=False))
-        lo_src = los[0] if len(set(los)) == 1 else "min(" + ", ".join(sorted(set(los))) + ")"
-        hi_src = his[0] if len(set(his)) == 1 else "max(" + ", ".join(sorted(set(his))) + ")"
-        mixed = len(group) > 1 and (len(set(los)) > 1 or len(set(his)) > 1)
-        new_guards = dict(guards)
-        if mixed:
-            for ss, l, h in zip(group, los, his):
-                g = new_guards.setdefault(ss.stmt.index, list(guards.get(ss.stmt.index, [])))
-                g += [f"{y} >= {l}", f"{y} <= {h}"]
-                new_guards[ss.stmt.index] = g
-        # vectorized innermost?
-        if (
-            self.vectorize
-            and len(group) == 1
-            and self._innermost_linear(group[0], d)
-            and self._can_vectorize(group[0], d)
-            and not new_guards.get(group[0].stmt.index)
-        ):
-            if self._emit_vectorized(group[0], d, lo_src, hi_src):
-                return
+        for s in node.stmts:
+            lo, hi = node.bounds[s]
+            los.append(self._render_bound(lo, lower=True))
+            his.append(self._render_bound(hi, lower=False))
+        lo_src = (los[0] if len(set(los)) == 1
+                  else self._fold_group(sorted(set(los)), lower=True))
+        hi_src = (his[0] if len(set(his)) == 1
+                  else self._fold_group(sorted(set(his)), lower=False))
+        return lo_src, hi_src
+
+    def _render_bound(self, bounds: List[Affine], lower: bool) -> str:
+        terms = []
+        for e in bounds:
+            body, den = render_affine(e)
+            terms.append(_ceil_div_src(body, den) if lower
+                         else _floor_div_src(body, den))
+        if not terms:
+            raise ValueError("unbounded loop dimension")
+        uniq = sorted(set(terms))
+        if len(uniq) == 1:
+            return uniq[0]
+        return ("max(" if lower else "min(") + ", ".join(uniq) + ")"
+
+    def _fold_group(self, terms: List[str], lower: bool) -> str:
+        return ("min(" if lower else "max(") + ", ".join(terms) + ")"
+
+    def _emit_band(self, node: BandNode):
+        self._bands[node.dim] = node
+        y = _yvar(node.dim)
+        lo_src, hi_src = self._band_bounds(node)
+        if (self.vectorize and node.vector
+                and self._emit_vectorized(node, lo_src, hi_src)):
+            return
         self._emit(f"for {y} in range({lo_src}, ({hi_src}) + 1):")
         self.indent += 1
+        self._loop_depth += 1
         body_start = len(self.lines)
-        self._gen_level(group, d + 1, n_dims, new_guards)
+        self._walk(node.child)
         if len(self.lines) == body_start:
             self._emit("pass")
+        self._loop_depth -= 1
         self.indent -= 1
 
-    def _innermost_linear(self, ss: ScanStmt, d: int) -> bool:
-        for dd in range(d + 1, ss.n_dims()):
-            if self._const_at(ss, dd) is None:
-                return False
-        return True
+    def _band_guards(self, leaf: LeafNode) -> List[str]:
+        """Per-statement bound guards for mixed-bound fused loops, from
+        the enclosing bands the tree flagged."""
+        out: List[str] = []
+        for d in leaf.guards:
+            band = self._bands[d]
+            lo, hi = band.bounds[leaf.stmt]
+            l = self._render_bound(lo, lower=True)
+            h = self._render_bound(hi, lower=False)
+            y = _yvar(d)
+            out += [f"{y} >= {l}", f"{y} <= {h}"]
+        return out
 
-    def _can_vectorize(self, ss: ScanStmt, d: int) -> bool:
-        spec = ss.dims[d]
-        if spec.kind != "eq":
-            return False
-        s = ss.stmt
-        # schedule-legality via the marking shared with the C backend
-        if not level_parallel(self.sched, [ss], d):
-            return False
-        # the loop variable must enter subscripts with coeff in {0, ±1}
-        sub = self._scanners[s.index].subst
-        for acc in s.accesses:
-            for e in acc.subscripts:
-                c = self._coeff_of_y(e, sub, d)
-                if c is None or abs(c) not in (0, 1):
-                    return False
-        return True
-
-    def _coeff_of_y(self, e: Affine, sub: Dict[str, Affine], d: int) -> Optional[Fraction]:
-        tot = Fraction(0)
-        for k, v in e.items():
-            if k == 1 or k in self.params:
-                continue
-            c = sub[k].get(_yvar(d), Fraction(0))
-            tot += v * c
-        if tot.denominator != 1:
-            return None
-        return tot
-
-    def _emit_vectorized(self, ss: ScanStmt, d: int, lo: str, hi: str) -> bool:
-        """Emit the innermost loop as numpy slices. Two patterns:
+    def _emit_vectorized(self, node: BandNode, lo: str, hi: str) -> bool:
+        """Emit a ``vector``-marked band as numpy slices. Two patterns:
         parallel assignment (LHS varies with y) or sum-reduction
         (LHS constant in y, body is `X = X + expr`)."""
-        s = ss.stmt
-        sub = self._scanners[s.index].subst
+        d = node.dim
+        s = self.scop.statements[node.stmts[0]]
+        sub = self.tree.subst[s.index]
         y = _yvar(d)
         lhs_acc = s.writes()[0]
-        lhs_coef = [self._coeff_of_y(e, sub, d) for e in lhs_acc.subscripts]
+        lhs_coef = [coeff_of_y(e, sub, d, self.params)
+                    for e in lhs_acc.subscripts]
         if any(_affine_src(expr)[1] != 1 for expr in sub.values()):
             return False   # non-unimodular substitution: fall back to loops
         sub_src = {it: _affine_src(expr)[0] for it, expr in sub.items()}
@@ -468,12 +243,12 @@ class CodeGenerator:
             # otherwise independent slices form a cross product instead
             # of the diagonal access (hypothesis-found bug)
             n_vec = sum(1 for e in text_subs
-                        if self._coeff_of_y(e, sub, d) not in (0, None))
+                        if coeff_of_y(e, sub, d, self.params) not in (0, None))
             if n_vec > 1:
                 return None
             parts = []
             for e in text_subs:
-                c = self._coeff_of_y(e, sub, d)
+                c = coeff_of_y(e, sub, d, self.params)
                 body, den = _affine_src(e, sub)
                 if den != 1:
                     return None
@@ -543,15 +318,13 @@ class CodeGenerator:
         self.vectorized_stmts.add(s.index)
         return True
 
-    def _emit_leaf(self, ss: ScanStmt, guard_exprs: List[str]):
-        s = ss.stmt
-        scanner = self._scanners[s.index]
+    def _emit_leaf(self, leaf: LeafNode):
+        s = self.scop.statements[leaf.stmt]
+        guard_exprs = self._band_guards(leaf)
         sub_src = {}
-        integral = True
-        for it, expr in scanner.subst.items():
+        for it, expr in self.tree.subst[s.index].items():
             body, den = _affine_src(expr)
             if den != 1:
-                integral = False
                 sub_src[it] = _floor_div_src(body, den)
                 guard_exprs = guard_exprs + [f"({body}) % {den} == 0"]
             else:
@@ -564,30 +337,6 @@ class CodeGenerator:
             self.indent -= 1
         else:
             self._emit(body)
-
-
-def _drop_var(e: Affine, sub: Dict[str, Affine], d: int) -> Optional[Affine]:
-    """Substituted expr with the y_d term removed (slice base address)."""
-    out: Affine = {}
-    for k, v in e.items():
-        if k == 1:
-            out[1] = out.get(1, Fraction(0)) + v
-        elif k in sub:
-            for k2, v2 in sub[k].items():
-                out[k2] = out.get(k2, Fraction(0)) + v * v2
-        else:
-            out[k] = out.get(k, Fraction(0)) + v
-    out.pop(_yvar(d), None)
-    return {k: v for k, v in out.items() if v != 0}
-
-
-class _FakeDep:
-    """Adapter so codegen can reuse the scheduler's SCC machinery."""
-
-    def __init__(self, a: int, b: int, idx):
-        self.source = idx[a].stmt
-        self.target = idx[b].stmt
-        self.satisfied_at = None
 
 
 # ---------------------------------------------------------------------------

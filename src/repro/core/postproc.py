@@ -19,7 +19,7 @@ from dataclasses import dataclass
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .codegen import DimSpec, ScanStmt, scan_from_schedule, _yvar
+from .schedtree import DimSpec, ScanStmt, scan_from_schedule, yvar as _yvar
 from .scheduler import Schedule
 
 

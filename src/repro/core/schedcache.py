@@ -34,6 +34,7 @@ from typing import Any, Dict, Optional
 
 from .config import SchedulerConfig
 from .ilp import SOLVER_TAG
+from .schedtree import TREE_VERSION
 from .scop import Scop
 
 # bump when Schedule layout or scheduler semantics change incompatibly
@@ -104,6 +105,10 @@ def schedule_key(scop: Scop, cfg: SchedulerConfig, engine: str,
         return None
     payload = json.dumps(
         {"v": CACHE_VERSION, "engine": engine, "solver": SOLVER_TAG,
+         # cached Schedule payloads may carry a memoized schedule tree
+         # (see cached_schedule_scop); a tree-format/construction change
+         # must invalidate them even when the schedule rows are unchanged
+         "tree": TREE_VERSION,
          "scop": scop_fingerprint(scop), "config": cfp,
          "extra": dict(sorted((extra or {}).items()))},
         sort_keys=True, separators=(",", ":"),
@@ -197,7 +202,8 @@ def global_cache() -> ScheduleCache:
 
 def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
                          engine: str = "lex",
-                         cache: Optional[ScheduleCache] = None, **kwargs):
+                         cache: Optional[ScheduleCache] = None,
+                         with_tree: bool = False, **kwargs):
     """Drop-in cached variant of :func:`repro.core.scheduler.schedule_scop`.
 
     Uncacheable configs (strategy callbacks) schedule normally.  The
@@ -206,6 +212,13 @@ def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
     Schedule embeds its Dependence objects (codegen reads their
     ``satisfied_at``), so sharing a caller's dependence list across
     entries would let a later scheduling run mutate earlier cache hits.
+
+    ``with_tree=True`` (the AKG kernel-plan hot path) builds the
+    schedule tree (:func:`repro.core.schedtree.schedule_tree`) before
+    publishing, so the cache payload carries the FM bounds too — a warm
+    process skips both the scheduler *and* the bound computation.  The
+    cache key includes the tree format version, so construction changes
+    invalidate tree-carrying entries.
     """
     from .scheduler import schedule_scop
 
@@ -214,8 +227,21 @@ def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
     key = schedule_key(scop, config, engine, extra=kwargs)
     hit = cache.get(key)
     if hit is not None:
+        if with_tree and getattr(hit, "_tree", None) is None:
+            try:
+                from .schedtree import schedule_tree
+                schedule_tree(hit)          # attach + persist for next time
+                cache.put(key, hit)
+            except Exception:
+                pass
         return hit
     sched = schedule_scop(scop, config, engine=engine, **kwargs)
+    if with_tree:
+        try:
+            from .schedtree import schedule_tree
+            schedule_tree(sched)
+        except Exception:
+            pass                            # tree is an optimization only
     cache.put(key, sched)
     return sched
 

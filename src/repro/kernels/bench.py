@@ -1,19 +1,27 @@
-"""Pallas kernel microbenchmarks.
+"""Pallas kernel microbenchmarks + CI smoke gate.
 
 On this CPU container the kernels execute in interpret mode, so absolute
 times are NOT TPU times — the CSV reports (a) interpret-mode sanity
 timings, (b) the PolyTOPS plan for each kernel (the actual deliverable:
 grid order/tiles), and (c) the XLA-reference timing for context.
+
+``python -m repro.kernels.bench --smoke`` is the JAX-CPU smoke gate run
+by ``scripts/tier1.sh`` / CI: every kernel executes through the
+schedule-tree → ``lower_to_kernel_plan`` lowering (interpret mode) and
+must numerically match its pure-jnp oracle in ``repro.kernels.ref`` —
+exit status 1 on any mismatch.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.akg import plan_attention, plan_matmul
+from ..core.akg import plan_attention, plan_matmul, plan_mamba_scan
 from . import ops, ref
 
 
@@ -50,5 +58,84 @@ def run(out=sys.stdout):
     a_bar = jax.nn.sigmoid(jax.random.normal(r, (1, 128, 256, 16))) * 0.9
     b_bar = jax.random.normal(jax.random.fold_in(r, 4), (1, 128, 256, 16)) * 0.1
     c = jax.random.normal(jax.random.fold_in(r, 5), (1, 128, 16))
+    plan = plan_mamba_scan(128, 256, 16)
     t_i = _time(lambda *x: ops.selective_scan(*x), a_bar, b_bar, c, reps=1)
-    print(f"mamba_scan_128_interpret,{t_i:.1f},state-in-VMEM chunked", file=out)
+    print(f"mamba_scan_128_interpret,{t_i:.1f},"
+          f"chunk={plan.tile['t']} dblock={plan.tile['d']} state-in-VMEM",
+          file=out)
+
+
+def smoke(out=sys.stdout) -> int:
+    """CI gate: run every Pallas kernel (small shapes, interpret mode)
+    through the schedule-tree lowering and check numerical agreement
+    with the pure-jnp oracles.  Returns the number of failures."""
+    failures = 0
+    r = jax.random.PRNGKey(0)
+
+    def check(name, got, want, tol):
+        nonlocal failures
+        got = np.asarray(got, np.float32)
+        want = np.asarray(want, np.float32)
+        err = float(np.max(np.abs(got - want)))
+        ok = np.allclose(got, want, rtol=tol, atol=tol)
+        print(f"{name},{'PASS' if ok else 'FAIL'},max_abs_err={err:.3e}",
+              file=out)
+        if not ok:
+            failures += 1
+
+    m = n = k = 128
+    a = jax.random.normal(r, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(r, 1), (k, n), jnp.float32)
+    plan = plan_matmul(m, n, k)
+    print(f"plan_matmul,{'>'.join(plan.loop_order)},vec={plan.vector_iter} "
+          f"tiles={plan.tile}", file=out)
+    check("matmul_smoke", ops.matmul(a, b, interpret=True),
+          ref.matmul_ref(a, b), 1e-4)
+
+    bsz, s, h, d = 1, 128, 2, 64
+    q = jax.random.normal(r, (bsz, s, h, d), jnp.float32) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(r, 2), (bsz, s, h, d),
+                           jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(r, 3), (bsz, s, h, d),
+                          jnp.float32)
+    plan = plan_attention(s, s, d)
+    print(f"plan_attention,{'>'.join(plan.loop_order)},vec={plan.vector_iter} "
+          f"tiles={plan.tile}", file=out)
+    got = ops.flash_attention(q, kk, v, causal=True, interpret=True)
+    want = ref.attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(bsz * h, s, d),
+        kk.transpose(0, 2, 1, 3).reshape(bsz * h, s, d),
+        v.transpose(0, 2, 1, 3).reshape(bsz * h, s, d),
+        causal=True).reshape(bsz, h, s, d).transpose(0, 2, 1, 3)
+    check("flash_attention_smoke", got, want, 1e-4)
+
+    bsz, s, di, st = 1, 64, 128, 8
+    a_bar = jax.nn.sigmoid(jax.random.normal(r, (bsz, s, di, st))) * 0.9
+    b_bar = jax.random.normal(jax.random.fold_in(r, 4),
+                              (bsz, s, di, st)) * 0.1
+    c = jax.random.normal(jax.random.fold_in(r, 5), (bsz, s, st))
+    plan = plan_mamba_scan(s, di, st)
+    print(f"plan_mamba_scan,{'>'.join(plan.loop_order)},"
+          f"vec={plan.vector_iter} tiles={plan.tile}", file=out)
+    check("mamba_scan_smoke", ops.selective_scan(a_bar, b_bar, c,
+                                                 interpret=True),
+          ref.selective_scan_ref(a_bar, b_bar, c), 1e-4)
+
+    print(f"pallas_smoke,{'PASS' if not failures else 'FAIL'},"
+          f"failures={failures}", file=out)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the numerical smoke gate instead of timings")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return 1 if smoke() else 0
+    run()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

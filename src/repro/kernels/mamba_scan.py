@@ -6,10 +6,17 @@ grid = (batch, d_blocks, seq_chunks), the chunk axis minormost. Inside a
 chunk the recurrence runs as a fori_loop (sequential in time, vector
 across the d_block lanes — the TPU-native layout for this kernel: state
 dim broadcast over lanes, time sequential).
+
+Block geometry comes from the scheduler: ``repro.core.akg.plan_mamba_scan``
+schedules the recurrence SCoP (t sequential-outermost by the h
+dependence, d/n parallel inside) and lowers its schedule tree to a
+KernelPlan — chunk = the t tile, d_block = the d tile — through the
+same ``lower_to_kernel_plan`` path as matmul and flash attention.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +41,17 @@ def _kernel(a_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int, n_chunks: int):
 
 
 def selective_scan(a_bar: jnp.ndarray, b_bar: jnp.ndarray, c: jnp.ndarray,
-                   d_block: int = 512, chunk: int = 128,
+                   d_block: Optional[int] = None, chunk: Optional[int] = None,
                    interpret: bool = True) -> jnp.ndarray:
     """a_bar, b_bar: (batch, seq, d_inner, state); c: (batch, seq, state).
-    Returns y: (batch, seq, d_inner) = Σ_n h[., ., d, n]·c[., ., n]."""
+    Returns y: (batch, seq, d_inner) = Σ_n h[., ., d, n]·c[., ., n].
+    Default block geometry comes from the PolyTOPS schedule tree."""
     bsz, seq, di, st = a_bar.shape
+    if d_block is None or chunk is None:
+        from ..core.akg import plan_mamba_scan
+        plan = plan_mamba_scan(seq, di, st)
+        d_block = d_block if d_block is not None else plan.tile["d"]
+        chunk = chunk if chunk is not None else plan.tile["t"]
     d_block = min(d_block, di)
     while di % d_block:
         d_block //= 2

@@ -12,11 +12,12 @@ import pytest
 
 from repro.core import config as CFG
 from repro.core.autotune import (TunedConfig, autotune, build_source,
-                                 candidate_space, static_cost)
+                                 candidate_space, rank_pallas_plans,
+                                 static_cost)
 from repro.core.cachemodel import (CacheSpec, auto_tile_sizes,
                                    band_access_groups, select_tile_sizes,
                                    stmt_access_groups, working_set_bytes)
-from repro.core.codegen import scan_from_schedule
+from repro.core.schedtree import scan_from_schedule
 from repro.core.postproc import find_tilable_bands, tile_schedule
 from repro.core.schedcache import ScheduleCache
 from repro.core.scheduler import PolyTOPSScheduler, schedule_scop
@@ -406,3 +407,56 @@ def test_crunner_key_includes_cflags_and_gcc():
     assert k1 != k2                       # flag change → new key
     assert crunner._result_key("int main(){}") == k1   # restored → stable
     assert crunner.compiler_version()     # fingerprint available
+
+
+# ---------------------------------------------------------------------------
+# backend-aware candidate lowering: Pallas kernel plans
+# ---------------------------------------------------------------------------
+
+
+def test_rank_pallas_plans_matmul():
+    """The enumerated configuration space lowers to ranked KernelPlans
+    through the schedule tree — deterministic, lane-sane, best-first."""
+    from repro.core.akg import LANE, _matmul_scop
+
+    scop = _matmul_scop(256, 256, 256)
+    cands = rank_pallas_plans(scop, use_cache=False,
+                              cache=ScheduleCache(disk=False))
+    assert cands, "no lowerable candidates"
+    costs = [c.static_cost for c in cands]
+    assert costs == sorted(costs)
+    best = cands[0]
+    # tensor-style contiguity should rank first and put lanes on j
+    assert best.plan.vector_iter == "j"
+    assert best.plan.tile["j"] % LANE == 0
+    # deterministic: same input → identical ranking and plans
+    again = rank_pallas_plans(scop, use_cache=False,
+                              cache=ScheduleCache(disk=False))
+    assert [(c.config.label, c.plan) for c in again] == \
+           [(c.config.label, c.plan) for c in cands]
+
+
+def test_rank_pallas_plans_excludes_cpu_tiling_axis():
+    """Tile/wavefront variants are the VMEM fitter's job, not a Pallas
+    search axis."""
+    from repro.core.akg import _matmul_scop
+
+    cands = rank_pallas_plans(_matmul_scop(128, 128, 128), use_cache=False,
+                              cache=ScheduleCache(disk=False))
+    assert all(c.config.tile is None and not c.config.wavefront
+               for c in cands)
+
+
+def test_rank_pallas_plans_scalar_init_statement():
+    """A SCoP whose first statement is zero-dimensional (scalar init)
+    must lower the deepest statement's nest, not crash on stmt 0."""
+    from repro.core.scop import Scop
+
+    s = Scop("init_then_loop", params={"N": 64})
+    s.stmt("acc[0] = zero * 1.0")
+    with s.loop("i", 0, "N"):
+        s.stmt("acc[0] = acc[0] + x[i]")
+    cands = rank_pallas_plans(s, use_cache=False,
+                              cache=ScheduleCache(disk=False))
+    assert cands
+    assert all(c.plan.loop_order == ("i",) for c in cands)

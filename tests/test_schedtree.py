@@ -1,0 +1,208 @@
+"""Schedule-tree IR: lossless round-trip, single-source-of-truth emitters,
+and the full-corpus differential against the program-order oracle.
+
+The corpus mirrors the golden-schedule gate: every kernel × strategy
+combo, the fusion-variant extremes, and the static-autotune winners —
+for each, the tree-walking numpy emitter must reproduce the original
+program semantics exactly.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import config as CFG
+from repro.core.cbackend import CCodeGenerator, array_extents
+from repro.core.codegen import CodeGenerator, interpret_scop
+from repro.core.postproc import tile_schedule
+from repro.core.schedtree import (BandNode, SequenceNode, build_tree,
+                                  schedule_tree, tree_from_json, tree_to_json)
+from repro.core.scheduler import schedule_scop
+from repro.core.scops_npu import make_lu16, make_trsml, make_trsmu
+from repro.core.scops_polybench import REGISTRY
+
+# small shapes for every registry kernel (runtime-feasible numpy scans)
+SMALL = {
+    "gemm": 13, "mm2": 9, "mm3": 8, "atax": 17, "bicg": 12, "mvt": 14,
+    "gesummv": 12, "gemver": 11, "symm": 10, "syrk": 10, "syr2k": 9,
+    "trmm": 11, "trisolv": 14, "cholesky": 10, "lu": 11,
+    "gramschmidt": 9, "covariance": 10, "correlation": 10,
+    "doitgen": (4, 5, 6), "jacobi1d": (5, 17), "jacobi2d": (4, 11),
+    "heat3d": (3, 8), "fdtd2d": (4, 9), "seidel2d": (3, 10), "durbin": 11,
+}
+SCALARS = {"alpha": 1.5, "beta": 0.7, "zero": 0.0, "one": 1.0,
+           "fn": 10.0, "eps": 0.1}
+
+FUSION_KERNELS = ("fdtd2d", "gemm", "gesummv", "mm2", "mm3", "mvt")
+AUTOTUNE_KERNELS = ("gemm", "gesummv", "jacobi1d", "jacobi2d", "mvt", "trmm")
+
+
+def _makers():
+    out = dict(REGISTRY)
+    out.update({"npu_trsml": make_trsml, "npu_trsmu": make_trsmu,
+                "npu_lu16": make_lu16})
+    return out
+
+
+def _small_scop(name):
+    if name.startswith("npu_"):
+        return _makers()[name]()
+    return REGISTRY[name](SMALL[name])
+
+
+def _arrays(scop, seed=0):
+    ext = array_extents(scop)
+    r = np.random.default_rng(seed)
+    return {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
+            for a, dims in ext.items()}
+
+
+def _check_equivalence(scop, sched, scan=None, tree=None):
+    fn, src = CodeGenerator(sched, scan=scan, tree=tree).build()
+    a1, a2 = _arrays(scop), _arrays(scop)
+    sc = {k: SCALARS.get(k, 1.0) for k in scop.scalars}
+    interpret_scop(scop, a1, sc)
+    fn(**a2, **sc, **scop.params)
+    for k in a1:
+        np.testing.assert_allclose(
+            a1[k], a2[k], rtol=1e-7, atol=1e-9,
+            err_msg=f"{scop.name} {k}\n{src}")
+
+
+# ---------------------------------------------------------------------------
+# lossless JSON round-trip (incl. tiled / wavefronted trees)
+# ---------------------------------------------------------------------------
+
+ROUNDTRIP = [("gemm", None, False), ("mvt", None, False),
+             ("jacobi1d", 4, True), ("jacobi2d", 4, True),
+             ("trmm", 8, False), ("fdtd2d", None, False)]
+
+
+@pytest.mark.parametrize("name,tile,wf", ROUNDTRIP)
+def test_tree_json_roundtrip(name, tile, wf):
+    scop = _small_scop(name)
+    sched = schedule_scop(scop, CFG.pluto_style())
+    scan = tile_schedule(sched, tile, wavefront=wf) if tile else None
+    tree = build_tree(sched, scan=scan)
+    blob = json.dumps(tree_to_json(tree), sort_keys=True)
+    tree2 = tree_from_json(json.loads(blob), scop)
+    assert tree_to_json(tree2) == tree_to_json(tree)
+    # a deserialized tree drives BOTH emitters to identical output
+    assert (CodeGenerator(sched, tree=tree2).generate()
+            == CodeGenerator(sched, tree=tree).generate())
+
+
+@pytest.mark.parametrize("name,tile,wf", [("gemm", None, False),
+                                          ("jacobi2d", 4, True)])
+def test_c_emitter_from_deserialized_tree(name, tile, wf):
+    scop = _small_scop(name)
+    sched = schedule_scop(scop, CFG.pluto_style())
+    scan = tile_schedule(sched, tile, wavefront=wf) if tile else None
+    tree = build_tree(sched, scan=scan, concrete=True)
+    tree2 = tree_from_json(tree_to_json(tree), scop)
+    src1 = CCodeGenerator(sched, tree=tree, scalars=SCALARS).generate()
+    src2 = CCodeGenerator(sched, tree=tree2, scalars=SCALARS).generate()
+    assert src1 == src2
+
+
+def test_tree_marks_vocabulary():
+    """Tile and wavefront transformations surface as named marks."""
+    scop = _small_scop("jacobi2d")
+    sched = schedule_scop(scop, CFG.pluto_style())
+    scan = tile_schedule(sched, 4, wavefront=True)
+    marks = [m for b in build_tree(sched, scan=scan).bands() for m in b.marks]
+    assert "wavefront" in marks
+    assert any(m.startswith("tile(") for m in marks)
+    assert "parallel" in marks
+    # the wavefront-inner tile counter is the parallel one
+    tree = build_tree(sched, scan=scan)
+    wave_par = [b for b in tree.bands() if b.role == "wave_par"]
+    assert wave_par and all(b.parallel for b in wave_par)
+
+
+def test_vector_mark_on_innermost_parallel_band():
+    scop = _small_scop("gemm")
+    sched = schedule_scop(scop, CFG.pluto_style())
+    tree = schedule_tree(sched)
+    vec = [b for b in tree.bands() if b.vector]
+    assert vec and all(b.innermost for b in vec)
+
+
+def test_bounds_context_concrete_vs_parametric():
+    """The C backend's concrete-context tree may prune bound chains the
+    parametric tree keeps, never the other way around."""
+    scop = _small_scop("jacobi2d")
+    sched = schedule_scop(scop, CFG.pluto_style())
+    scan = tile_schedule(sched, 4, wavefront=True)
+    t_par = build_tree(sched, scan=tile_schedule(sched, 4, wavefront=True))
+    t_con = build_tree(sched, scan=scan, concrete=True)
+    n_par = sum(len(lo) + len(hi) for b in t_par.bands()
+                for lo, hi in b.bounds.values())
+    n_con = sum(len(lo) + len(hi) for b in t_con.bands()
+                for lo, hi in b.bounds.values())
+    assert n_con <= n_par
+
+
+# ---------------------------------------------------------------------------
+# no duplicated scheduler-output analysis in the emitters
+# ---------------------------------------------------------------------------
+
+def test_emitters_have_no_private_analysis():
+    """codegen/cbackend are pure tree walkers: separation, FM bounds and
+    parallel marking live only in schedtree."""
+    import repro.core.cbackend as cb
+    import repro.core.codegen as cg
+
+    for mod in (cg, cb):
+        path = mod.__file__
+        src = open(path).read()
+        for needle in ("fm_eliminate", "bounds_of(", "_scc_groups",
+                       "stmt_parallel_at_set", "_full_system(",
+                       "find_tilable_bands"):
+            assert needle not in src, f"{path} re-derives {needle}"
+    # the walk itself never calls back into the Schedule for legality
+    assert not hasattr(CodeGenerator, "_separate")
+    assert not hasattr(CodeGenerator, "_gen_level")
+
+
+# ---------------------------------------------------------------------------
+# full-corpus differential: numpy emitter ≡ program-order oracle
+# ---------------------------------------------------------------------------
+
+ALL_KERNELS = sorted(SMALL) + ["npu_trsml", "npu_trsmu", "npu_lu16"]
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+@pytest.mark.parametrize("style", ["pluto", "tensor"])
+def test_corpus_equivalence(name, style):
+    scop = _small_scop(name)
+    sched = schedule_scop(scop, CFG.STRATEGIES[style]())
+    _check_equivalence(scop, sched)
+
+
+@pytest.mark.parametrize("name", FUSION_KERNELS)
+@pytest.mark.parametrize("fmode", ["max", "no"])
+def test_fusion_variant_equivalence(name, fmode):
+    scop = _small_scop(name)
+    cfg = CFG.pluto_style()
+    cfg.fusion_mode = fmode
+    sched = schedule_scop(scop, cfg)
+    _check_equivalence(scop, sched)
+
+
+@pytest.mark.parametrize("name", AUTOTUNE_KERNELS)
+def test_autotune_winner_equivalence(name):
+    """The statically-ranked autotune winner (the 74-combo corpus's
+    third family) generates numpy code equivalent to the oracle."""
+    from repro.core.autotune import autotune
+    from repro.core.cachemodel import CacheSpec
+    from repro.core.schedcache import ScheduleCache
+
+    scop = _small_scop(name)
+    r = autotune(scop, measure=False, use_cache=False,
+                 cache=ScheduleCache(disk=False), spec=CacheSpec())
+    tc = r.config
+    sched = schedule_scop(scop, tc.scheduler_config())
+    scan = (tile_schedule(sched, tc.tile, wavefront=tc.wavefront)
+            if tc.tile is not None else None)
+    _check_equivalence(scop, sched, scan=scan)
