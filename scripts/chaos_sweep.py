@@ -1,0 +1,368 @@
+#!/usr/bin/env python
+"""Seeded chaos sweep: every fault site × the fast-set kernels.
+
+For each scenario the sweep arms one fault site
+(:data:`repro.core.resilience.FAULT_SITES`), runs the request through
+the hardened pipeline, and asserts the resilience contract:
+
+* **scheduling sites** (``ilp.solve``, ``farkas.project``, ``fm.bounds``,
+  ``cache.read``, ``cache.write``) — :func:`schedule_with_ladder` must
+  return a *legal* schedule (verified differentially against the
+  program-order numpy oracle, faults disarmed for the verification) and
+  must be **bit-deterministic**: the same seed + the same armed faults
+  walked twice produce identical schedule fingerprints and the same
+  ladder rung;
+* **measurement sites** (``cc.compile``, ``cc.run``, ``measure``, plus
+  the crunner result-cache reads/writes) — ``measure_source`` must
+  either succeed (cache faults are absorbed by quarantine-and-recompute)
+  or raise a *clean typed* ``MeasurementError``, never anything else;
+* **corruption** — a truncated schedule-cache pickle and a garbage
+  crunner result-cache JSON are quarantined and recomputed, counted in
+  ``CacheStats``;
+* **deadlines** — an already-expired deadline degrades to the identity
+  rung, still legal, still deterministic.
+
+Any escaped exception, illegal schedule, fingerprint mismatch between
+the two runs, or armed-but-never-fired site fails the sweep.  Results
+go to ``chaos_summary.json`` (``--out`` to change); exit status is
+nonzero on any failure.  Gated in ``scripts/tier1.sh`` under a 120 s
+budget.
+"""
+import argparse
+import json
+import os
+import pickle
+import shutil
+import sys
+import tempfile
+import time
+import traceback
+
+# isolated caches: the sweep corrupts and quarantines them on purpose
+_TMP = tempfile.mkdtemp(prefix="polytops_chaos_")
+os.environ["POLYTOPS_CC_CACHE"] = os.path.join(_TMP, "cc")
+os.environ["POLYTOPS_SCHED_CACHE"] = os.path.join(_TMP, "sched")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.cbackend import array_extents  # noqa: E402
+from repro.core.codegen import CodeGenerator, interpret_scop  # noqa: E402
+from repro.core.config import tensor_style  # noqa: E402
+from repro.core.resilience import (REGISTRY, Deadline,  # noqa: E402
+                                   MeasurementError, provenance,
+                                   schedule_with_ladder)
+from repro.core.schedcache import (ScheduleCache,  # noqa: E402
+                                   schedule_fingerprint)
+from repro.core.scops_polybench import (make_gemm, make_gesummv,  # noqa: E402
+                                        make_jacobi1d, make_jacobi2d,
+                                        make_mvt, make_trmm)
+
+# the PolyBench fast set at oracle-feasible sizes (mirrors the
+# regression basket of benchmarks/bench_polybench.py)
+FAST_KERNELS = {
+    "gemm": lambda: make_gemm(13),
+    "mvt": lambda: make_mvt(14),
+    "jacobi1d": lambda: make_jacobi1d((5, 17)),
+    "jacobi2d": lambda: make_jacobi2d((4, 11)),
+    "trmm": lambda: make_trmm(11),
+    "gesummv": lambda: make_gesummv(12),
+}
+SCALARS = {"alpha": 1.5, "beta": 0.7}
+
+SCHED_SITES = ("ilp.solve", "farkas.project", "fm.bounds",
+               "cache.read", "cache.write")
+#: sites hammered in unlimited mode too (every firing fails) — the
+#: scheduling-critical ones, where "forever" drives the ladder all the
+#: way down; restricted to two kernels to stay inside the time budget
+FOREVER_SITES = ("ilp.solve", "farkas.project", "fm.bounds")
+FOREVER_KERNELS = ("gemm", "jacobi1d")
+
+#: a minimal well-formed measurement target for the crunner sites
+TINY_C = """
+#include <stdio.h>
+#define REPEATS 1
+int main(void) {
+    double acc = 0.0;
+    for (int r = 0; r < REPEATS; ++r)
+        for (int i = 0; i < 1000; ++i) acc += (double)i * 1e-6;
+    printf("TIME_S 0.05 CHECKSUM %.17g\\n", acc);
+    return 0;
+}
+"""
+
+
+def _oracle_check(scop, sched) -> None:
+    """Differential legality check: the scheduled numpy emitter must
+    reproduce the program-order oracle exactly (faults must already be
+    disarmed — this is harness-side verification)."""
+    fn, src = CodeGenerator(sched).build()
+    ext = array_extents(scop)
+    r = np.random.default_rng(0)
+    a1 = {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
+          for a, dims in ext.items()}
+    a2 = {k: v.copy() for k, v in a1.items()}
+    sc = {k: SCALARS.get(k, 1.0) for k in scop.scalars}
+    interpret_scop(scop, a1, sc)
+    fn(**a2, **sc, **scop.params)
+    for k in a1:
+        np.testing.assert_allclose(
+            a1[k], a2[k], rtol=1e-7, atol=1e-9,
+            err_msg=f"{scop.name} {k} diverged from program order\n{src}")
+
+
+_RUN_SEQ = [0]
+
+
+def _one_ladder_run(kernel: str, site, times: int, deadline_s=None):
+    """Arm, schedule through the ladder, disarm, verify legality.
+    Returns (fingerprint, provenance-key, fired_count).
+
+    Every run gets a fresh *disk-backed* cache directory: the
+    ``cache.read``/``cache.write`` sites only exist on the disk tier,
+    and a shared directory would let run 2 take a warm path run 1 never
+    saw.  ``with_tree=True`` so the FM bound pass (``fm.bounds``) is
+    part of the exercised pipeline, exactly as the AKG kernel-plan path
+    drives it."""
+    scop = FAST_KERNELS[kernel]()
+    _RUN_SEQ[0] += 1
+    cache = ScheduleCache(
+        cache_dir=os.path.join(_TMP, f"ladder_{_RUN_SEQ[0]}"))
+    REGISTRY.reset()
+    if site is not None:
+        REGISTRY.arm(site, times=times)
+    try:
+        sched = schedule_with_ladder(
+            scop, tensor_style(), cache=cache, with_tree=True,
+            deadline=Deadline(deadline_s) if deadline_s is not None
+            else None)
+    finally:
+        fired = REGISTRY.fired.get(site, 0) if site is not None else 0
+        REGISTRY.reset()
+    _oracle_check(scop, sched)
+    prov = provenance(sched)
+    # reason strings may embed wall-clock elapsed times (deadline
+    # breaches) — determinism is asserted on everything else
+    key = {"degraded": prov["degraded"],
+           "fallback_level": prov["fallback_level"], "rung": prov["rung"],
+           "n_reasons": len(prov["reasons"])}
+    return schedule_fingerprint(sched), key, fired
+
+
+def run_sched_scenarios(results):
+    for site in SCHED_SITES:
+        for kernel in FAST_KERNELS:
+            modes = [("once", 1)]
+            if site in FOREVER_SITES and kernel in FOREVER_KERNELS:
+                modes.append(("forever", -1))
+            for mode, times in modes:
+                name = f"sched/{site}/{kernel}/{mode}"
+                t0 = time.monotonic()
+                row = {"scenario": name, "site": site, "kernel": kernel,
+                       "mode": mode}
+                try:
+                    fp1, prov1, fired1 = _one_ladder_run(kernel, site, times)
+                    fp2, prov2, fired2 = _one_ladder_run(kernel, site, times)
+                    row.update(fingerprint=fp1[:16], rung=prov1["rung"],
+                               fallback_level=prov1["fallback_level"],
+                               fired=fired1)
+                    if fired1 == 0:
+                        raise AssertionError(
+                            f"armed site {site} never fired — sweep bug, "
+                            f"not a pass")
+                    if fp1 != fp2 or prov1 != prov2 or fired1 != fired2:
+                        raise AssertionError(
+                            f"nondeterministic under identical faults: "
+                            f"run1=({fp1[:12]}, {prov1}, fired={fired1}) "
+                            f"run2=({fp2[:12]}, {prov2}, fired={fired2})")
+                    row["ok"] = True
+                except Exception:
+                    row.update(ok=False, error=traceback.format_exc())
+                row["seconds"] = round(time.monotonic() - t0, 3)
+                results.append(row)
+
+
+def run_deadline_scenarios(results):
+    for kernel in ("gemm", "mvt"):
+        name = f"deadline/expired/{kernel}"
+        t0 = time.monotonic()
+        row = {"scenario": name, "site": None, "kernel": kernel,
+               "mode": "deadline0"}
+        try:
+            fp1, prov1, _ = _one_ladder_run(kernel, None, 0, deadline_s=0.0)
+            fp2, prov2, _ = _one_ladder_run(kernel, None, 0, deadline_s=0.0)
+            row.update(fingerprint=fp1[:16], rung=prov1["rung"],
+                       fallback_level=prov1["fallback_level"])
+            if not prov1["degraded"]:
+                raise AssertionError(
+                    f"expired deadline did not degrade: {prov1}")
+            if (fp1, prov1) != (fp2, prov2):
+                raise AssertionError("deadline degradation nondeterministic")
+            row["ok"] = True
+        except Exception:
+            row.update(ok=False, error=traceback.format_exc())
+        row["seconds"] = round(time.monotonic() - t0, 3)
+        results.append(row)
+
+
+def run_measure_scenarios(results):
+    from repro.core.crunner import CACHE_DIR, measure_source
+
+    if shutil.which("gcc") is None:
+        results.append({"scenario": "measure/*", "ok": True,
+                        "skipped": "no C compiler"})
+        return
+    expect = {"cc.compile": "compile", "cc.run": "run", "measure": "measure"}
+    for site, phase in expect.items():
+        name = f"measure/{site}/tiny"
+        t0 = time.monotonic()
+        row = {"scenario": name, "site": site, "kernel": "tiny",
+               "mode": "once"}
+        try:
+            REGISTRY.reset()
+            REGISTRY.arm(site, times=1)
+            try:
+                measure_source(TINY_C, tag=f"chaos_{site.replace('.', '_')}",
+                               use_cache=False)
+                raise AssertionError(f"armed {site} did not surface")
+            except MeasurementError as e:
+                if e.kind != "injected" or e.phase != phase:
+                    raise AssertionError(
+                        f"wrong typed error for {site}: "
+                        f"kind={e.kind} phase={e.phase}") from e
+                row.update(kind=e.kind, phase=e.phase,
+                           fired=REGISTRY.fired.get(site, 0))
+            finally:
+                REGISTRY.reset()
+            row["ok"] = True
+        except Exception:
+            row.update(ok=False, error=traceback.format_exc())
+        row["seconds"] = round(time.monotonic() - t0, 3)
+        results.append(row)
+
+    # crunner cache faults are absorbed, not surfaced: quarantine (read)
+    # or degrade-to-uncached (write) + recompute.  Each site gets its
+    # own source text (the result-cache key is the source hash), and the
+    # write fault is armed on the *first* run — the only one that
+    # reaches the write path (a warm read returns before writing).
+    for site in ("cache.read", "cache.write"):
+        name = f"measure/{site}/tiny"
+        t0 = time.monotonic()
+        row = {"scenario": name, "site": site, "kernel": "tiny",
+               "mode": "once"}
+        src = f"// chaos {site}\n" + TINY_C
+        try:
+            REGISTRY.reset()
+            if site == "cache.read":
+                measure_source(src, tag="chaos_cache", use_cache=True)
+            REGISTRY.arm(site, times=1)
+            try:
+                r = measure_source(src, tag="chaos_cache", use_cache=True)
+            finally:
+                fired = REGISTRY.fired.get(site, 0)
+                REGISTRY.reset()
+            if fired == 0:
+                raise AssertionError(f"armed site {site} never fired")
+            row.update(fired=fired, checksum=r.checksum, ok=True)
+        except Exception:
+            row.update(ok=False, error=traceback.format_exc())
+        row["seconds"] = round(time.monotonic() - t0, 3)
+        results.append(row)
+
+    # corruption: a garbage result-cache JSON is quarantined + recomputed
+    name = "corrupt/crunner-json"
+    t0 = time.monotonic()
+    row = {"scenario": name, "site": None, "kernel": "tiny",
+           "mode": "corrupt"}
+    try:
+        REGISTRY.reset()
+        r1 = measure_source(TINY_C, tag="chaos_corrupt", use_cache=True)
+        wrote = [p for p in CACHE_DIR.glob("*.json")]
+        if not wrote:
+            raise AssertionError("no result-cache file to corrupt")
+        for p in wrote:
+            p.write_text("{truncated garbage")
+        r2 = measure_source(TINY_C, tag="chaos_corrupt", use_cache=True)
+        if abs(r1.checksum - r2.checksum) > 1e-12:
+            raise AssertionError("recompute after corruption diverged")
+        qdir = CACHE_DIR / "quarantine"
+        if not (qdir.is_dir() and any(qdir.iterdir())):
+            raise AssertionError("corrupt cache file was not quarantined")
+        row.update(quarantined=len(list(qdir.iterdir())), ok=True)
+    except Exception:
+        row.update(ok=False, error=traceback.format_exc())
+    row["seconds"] = round(time.monotonic() - t0, 3)
+    results.append(row)
+
+
+def run_corrupt_schedcache(results):
+    name = "corrupt/schedcache-pickle"
+    t0 = time.monotonic()
+    row = {"scenario": name, "site": None, "kernel": "gemm",
+           "mode": "corrupt"}
+    try:
+        cdir = os.path.join(_TMP, "sched_corrupt")
+        scop = FAST_KERNELS["gemm"]()
+        c1 = ScheduleCache(cache_dir=cdir)
+        sched = schedule_with_ladder(scop, tensor_style(), cache=c1)
+        fp = schedule_fingerprint(sched)
+        pkls = [os.path.join(r, f) for r, _, fs in os.walk(cdir)
+                for f in fs if f.endswith(".pkl") and "quarantine" not in r]
+        if not pkls:
+            raise AssertionError("no schedule pickle to corrupt")
+        for p in pkls:
+            with open(p, "wb") as f:
+                f.write(pickle.dumps({"not": "a schedule"})[:7])
+        c2 = ScheduleCache(cache_dir=cdir)
+        again = schedule_with_ladder(FAST_KERNELS["gemm"](), tensor_style(),
+                                     cache=c2)
+        if schedule_fingerprint(again) != fp:
+            raise AssertionError("recompute after corruption diverged")
+        if c2.stats.corrupt < 1:
+            raise AssertionError(
+                f"corruption not counted: {c2.stats.as_dict()}")
+        row.update(corrupt_counted=c2.stats.corrupt, ok=True)
+    except Exception:
+        row.update(ok=False, error=traceback.format_exc())
+    row["seconds"] = round(time.monotonic() - t0, 3)
+    results.append(row)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="chaos_summary.json")
+    args = ap.parse_args(argv)
+    t0 = time.monotonic()
+    results = []
+    run_sched_scenarios(results)
+    run_deadline_scenarios(results)
+    run_measure_scenarios(results)
+    run_corrupt_schedcache(results)
+    failures = [r for r in results if not r.get("ok")]
+    summary = {
+        "ok": not failures,
+        "n_scenarios": len(results),
+        "n_failures": len(failures),
+        "seconds": round(time.monotonic() - t0, 2),
+        "scenarios": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    for r in results:
+        mark = "ok " if r.get("ok") else "FAIL"
+        extra = (f" rung={r['rung']}" if "rung" in r else "") + \
+                (f" fired={r['fired']}" if "fired" in r else "")
+        print(f"{mark} {r['scenario']}{extra} ({r.get('seconds', 0)}s)")
+    print(f"chaos sweep: {len(results) - len(failures)}/{len(results)} "
+          f"scenarios ok in {summary['seconds']}s -> {args.out}")
+    if failures:
+        for r in failures:
+            print(f"-- {r['scenario']} --\n{r.get('error', '')}",
+                  file=sys.stderr)
+        return 1
+    shutil.rmtree(_TMP, ignore_errors=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

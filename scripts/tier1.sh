@@ -25,6 +25,11 @@
 #   * pallas     — JAX-CPU (interpret) smoke: every Pallas kernel runs
 #                  through the schedule-tree → lower_to_kernel_plan
 #                  lowering and must numerically match kernels/ref.py
+#   * chaos      — seeded fault-injection sweep (scripts/chaos_sweep.py):
+#                  every fault site × the fast-set kernels must yield a
+#                  legal schedule (numpy-oracle differential) or a clean
+#                  typed error, bit-deterministically; writes
+#                  chaos_summary.json
 #
 # Every run writes tier1_summary.json (per-gate ok + metrics) for CI to
 # upload/consume, even when a gate fails.
@@ -56,7 +61,7 @@ for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
     except json.JSONDecodeError:
         pass
 expected = ["tests", "coverage", "golden", "sched_bench", "polybench",
-            "pallas"]
+            "pallas", "chaos"]
 ok = all(gates.get(g, {}).get("ok") for g in expected)
 print(json.dumps({"ok": ok, "gates": gates}, indent=2, sort_keys=True))
 PY
@@ -243,6 +248,24 @@ else
   echo "PALLAS SMOKE FAILED (crash or numerical mismatch vs kernels/ref.py)" >&2
   record pallas 0 "{\"seconds\": $((SECONDS - T0))}"
   rm -f "$PALLAS_OUT"
+  exit 1
+fi
+
+echo "== chaos sweep (fault injection × fast set, 120s budget) =="
+T0=$SECONDS
+if timeout 120 python scripts/chaos_sweep.py --out chaos_summary.json; then
+  CH_DETAIL="$(python - <<'PY'
+import json
+d = json.load(open("chaos_summary.json"))
+print(json.dumps({"seconds": d["seconds"], "scenarios": d["n_scenarios"],
+                  "failures": d["n_failures"]}))
+PY
+)"
+  record chaos 1 "$CH_DETAIL"
+else
+  echo "CHAOS SWEEP FAILED (escaped exception, illegal degraded schedule," >&2
+  echo "nondeterministic fingerprint, or never-fired armed site)" >&2
+  record chaos 0 "{\"seconds\": $((SECONDS - T0))}"
   exit 1
 fi
 

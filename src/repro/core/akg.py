@@ -30,7 +30,8 @@ from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
 from .config import tensor_style
-from .schedcache import cached_schedule_scop
+from .resilience import provenance as _provenance, schedule_with_ladder
+from .schedcache import global_cache
 from .schedtree import ScheduleTree, schedule_tree, yvar
 from .scop import Scop, Statement
 
@@ -41,12 +42,22 @@ SUBLANE = 8
 
 @dataclass(frozen=True)
 class KernelPlan:
-    """Loop-nest plan for a Pallas kernel."""
+    """Loop-nest plan for a Pallas kernel.
+
+    ``degraded``/``fallback_level``/``degrade_reasons`` carry the
+    degradation-ladder provenance of the schedule the plan was lowered
+    from (see :mod:`repro.core.resilience`): a plan is still *correct*
+    when degraded — every ladder rung is legal — but it may be lowered
+    from a fallback schedule rather than the configured one, which a
+    serving layer may want to log or re-plan later."""
     loop_order: Tuple[str, ...]       # outer → inner iterator names
     vector_iter: Optional[str]        # lane-mapped innermost iterator
     tile: Dict[str, int]              # iterator -> tile size
     bands: Tuple[int, ...]            # band id per scheduled dim
     schedule_str: str = ""            # human-readable schedule (debug)
+    degraded: bool = False
+    fallback_level: int = 0
+    degrade_reasons: Tuple[str, ...] = ()
 
 
 def _matmul_scop(m: int, n: int, k: int) -> Scop:
@@ -114,8 +125,8 @@ def _fit_tiles(order: List[str], dims: Dict[str, int], vector_iter: str,
 
 def lower_to_kernel_plan(tree: ScheduleTree, stmt_idx: Optional[int] = None,
                          *, bytes_per_elem: int = 2, n_buffers: int = 3,
-                         fixed_tiles: Optional[Dict[str, int]] = None
-                         ) -> KernelPlan:
+                         fixed_tiles: Optional[Dict[str, int]] = None,
+                         sched=None) -> KernelPlan:
     """Map any scheduled SCoP's schedule tree to a :class:`KernelPlan`.
 
     * **grid order** — outer→inner point bands of the tree (tile/wave
@@ -131,6 +142,10 @@ def lower_to_kernel_plan(tree: ScheduleTree, stmt_idx: Optional[int] = None,
     ``stmt_idx`` defaults to the deepest statement (scalar-init
     statements have no loop nest to map to a grid); a zero-dimensional
     choice raises ``ValueError`` so rankers can drop the candidate.
+
+    ``sched`` (the Schedule the tree was built from) supplies the
+    degradation-ladder provenance stamped on the plan; omitted, the
+    plan reports a clean, non-degraded lowering.
     """
     scop = tree.scop
     if stmt_idx is None:
@@ -162,11 +177,42 @@ def lower_to_kernel_plan(tree: ScheduleTree, stmt_idx: Optional[int] = None,
     tile = _fit_tiles(order, dims, vec, stmt,
                       bytes_per_elem=bytes_per_elem, n_buffers=n_buffers,
                       fixed=fixed_tiles)
+    prov = _provenance(sched) if sched is not None else None
     return KernelPlan(tuple(order), vec, tile, tuple(tree.sched_bands),
-                      tree.pretty)
+                      tree.pretty,
+                      degraded=bool(prov["degraded"]) if prov else False,
+                      fallback_level=prov["fallback_level"] if prov else 0,
+                      degrade_reasons=tuple(prov["reasons"]) if prov else ())
 
 
-@functools.lru_cache(maxsize=64)
+def _plan_memo(maxsize: int):
+    """Like ``functools.lru_cache`` but degraded plans are returned
+    without being pinned: a plan lowered from a fault- or deadline-
+    degraded schedule must not be served for the rest of the process —
+    the next call re-plans and caches the clean result once the
+    transient clears (the in-memory twin of schedcache's rule that
+    degraded schedules are never published)."""
+    def deco(fn):
+        memo: Dict[tuple, KernelPlan] = {}
+
+        @functools.wraps(fn)
+        def wrapper(*args):
+            hit = memo.get(args)
+            if hit is not None:
+                return hit
+            plan = fn(*args)
+            if not plan.degraded:
+                if len(memo) >= maxsize:     # FIFO, same spirit as lru
+                    memo.pop(next(iter(memo)))
+                memo[args] = plan
+            return plan
+
+        wrapper.cache_clear = memo.clear
+        return wrapper
+    return deco
+
+
+@_plan_memo(maxsize=64)
 def plan_matmul(m: int, n: int, k: int,
                 strategy: str = "tensor") -> KernelPlan:
     """PolyTOPS-planned matmul: tensor-style scheduling yields the
@@ -176,12 +222,15 @@ def plan_matmul(m: int, n: int, k: int,
     cfg.auto_vectorize = True
     # structural cache: repeat plans for the same (m, n, k) shape are a
     # lookup, persisted on disk across serving/benchmark processes —
-    # with the schedule tree riding along in the payload
-    sched = cached_schedule_scop(scop, cfg, with_tree=True)
-    return lower_to_kernel_plan(schedule_tree(sched))
+    # with the schedule tree riding along in the payload.  The ladder
+    # makes planning total: a fault degrades the schedule (provenance on
+    # the plan) instead of failing the kernel build.
+    sched = schedule_with_ladder(scop, cfg, cache=global_cache(),
+                                 with_tree=True)
+    return lower_to_kernel_plan(schedule_tree(sched), sched=sched)
 
 
-@functools.lru_cache(maxsize=8)
+@_plan_memo(maxsize=8)
 def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
     """Schedule the S = Q·Kᵀ core (q, k, d loops): contiguity puts d
     innermost (lanes) and yields the q-block × k-block band that the
@@ -192,8 +241,9 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
             with s.loop("d", 0, "D"):
                 s.stmt("S[q,kk] = S[q,kk] + Qm[q,d] * Km[kk,d]")
     cfg = tensor_style()
-    sched = cached_schedule_scop(s, cfg, with_tree=True)
-    plan = lower_to_kernel_plan(schedule_tree(sched))
+    sched = schedule_with_ladder(s, cfg, cache=global_cache(),
+                                 with_tree=True)
+    plan = lower_to_kernel_plan(schedule_tree(sched), sched=sched)
     # flash blocking: q and k tiles bounded for the online-softmax state
     tile = dict(plan.tile)
     tile["q"] = min(tile.get("q", 128), 128)
@@ -201,7 +251,7 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
     return replace(plan, tile=tile)
 
 
-@functools.lru_cache(maxsize=16)
+@_plan_memo(maxsize=16)
 def plan_mamba_scan(seq: int, d_inner: int, state: int) -> KernelPlan:
     """Selective-scan (Mamba-1) recurrence h_t = a_t ⊙ h_{t-1} + b_t with
     y_t = h_t · c_t: the scheduler discovers t sequential-outermost (the
@@ -215,10 +265,11 @@ def plan_mamba_scan(seq: int, d_inner: int, state: int) -> KernelPlan:
                 s.stmt("H[d,n] = A[t,d,n] * H[d,n] + B[t,d,n]")
                 s.stmt("Y[t,d] = Y[t,d] + H[d,n] * Cs[t,n]")
     cfg = tensor_style()
-    sched = cached_schedule_scop(s, cfg, with_tree=True)
+    sched = schedule_with_ladder(s, cfg, cache=global_cache(),
+                                 with_tree=True)
     # kernel constraint: the hidden state (d_block × state) is VMEM-
     # resident scratch across chunks — the state dim stays whole, pinned
     # *inside* the fit so t/d shrink against the true footprint
     return lower_to_kernel_plan(schedule_tree(sched), stmt_idx=0,
                                 bytes_per_elem=4, n_buffers=2,
-                                fixed_tiles={"n": state})
+                                fixed_tiles={"n": state}, sched=sched)

@@ -49,12 +49,14 @@ measurement pool returns the same configuration.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import asdict, dataclass, field, replace
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from . import config as CFG
 from . import costs as C
+from .resilience import Deadline, DeadlineExceeded, MeasurementError
 from .cachemodel import (CacheSpec, default_spec, shared_bands,
                          shared_groups, shared_scan, shared_tile_sizes,
                          working_set_bytes)
@@ -162,6 +164,17 @@ class TunedResult:
     source: str = "static"              # 'static' | 'measured' | 'cache'
     ranked: List[str] = field(default_factory=list)   # candidate labels, best-first
     ranker: str = "analytic"            # 'analytic' | 'learned'
+    #: True when the search itself was compromised (deadline truncation,
+    #: reference-measurement failure) — the winner may not be the true
+    #: optimum and is never persisted.  Individual candidate failures
+    #: alone do not degrade the result: the surviving winner is still a
+    #: fully validated measurement.
+    degraded: bool = False
+    reasons: List[str] = field(default_factory=list)
+    #: MeasurementError rows (kind/tag/phase/detail) of every failed
+    #: compile-and-measure attempt, including retries and checksum
+    #: mismatches — the search's failure log, not an error state
+    failures: List[dict] = field(default_factory=list)
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -173,7 +186,10 @@ class TunedResult:
         cfg = TunedConfig.from_dict(d["config"])
         return cls(cfg, d.get("static_cost", 0.0), d.get("seconds"),
                    d.get("checksum"), "cache", list(d.get("ranked", [])),
-                   d.get("ranker", "analytic"))
+                   d.get("ranker", "analytic"),
+                   bool(d.get("degraded", False)),
+                   list(d.get("reasons", [])),
+                   list(d.get("failures", [])))
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +242,9 @@ def base_configs(scop: Scop, deps=None) -> List[TunedConfig]:
 
 
 def _schedules_for_space(scop: Scop, cache: ScheduleCache,
-                         bases: Optional[Sequence[TunedConfig]] = None
+                         bases: Optional[Sequence[TunedConfig]] = None,
+                         deadline: Optional[Deadline] = None,
+                         reasons: Optional[List[str]] = None
                          ) -> Dict[TunedConfig, Schedule]:
     """One schedule per configuration base — structural-cache lookups
     after the first tuning of a kernel shape.  Each miss computes its
@@ -235,18 +253,35 @@ def _schedules_for_space(scop: Scop, cache: ScheduleCache,
     cannot schedule (an illegal fusion spec, an infeasible
     require-parallel demand) are dropped — any *other* exception is a
     real defect in the enumerated space and propagates loudly instead
-    of silently shrinking the search."""
+    of silently shrinking the search.
+
+    A ``deadline`` breach (checked at each base boundary and inside the
+    scheduler's dimension loop) *truncates* enumeration rather than
+    raising: the bases already scheduled stay usable, and the truncation
+    is appended to ``reasons`` so the caller can mark its result
+    degraded."""
     from .scheduler import SchedulingError
 
     if bases is None:
         bases = base_configs(scop)
     scheds: Dict[TunedConfig, Schedule] = {}
     for base in bases:
+        if deadline is not None and deadline.expired():
+            if reasons is not None:
+                reasons.append(
+                    f"enumeration truncated at {base.label!r}: deadline "
+                    f"({deadline.elapsed():.3f}s > {deadline.budget_s:.3f}s)")
+            break
         try:
             scheds[base] = cached_schedule_scop(
-                scop, base.scheduler_config(), cache=cache)
+                scop, base.scheduler_config(), cache=cache,
+                deadline=deadline)
         except SchedulingError:
             continue
+        except DeadlineExceeded as e:
+            if reasons is not None:
+                reasons.append(f"enumeration truncated at {base.label!r}: {e}")
+            break
     return scheds
 
 
@@ -416,16 +451,22 @@ def build_source(scop: Scop, tc: TunedConfig, sched: Schedule,
                           repeats=repeats).generate()
 
 
-def _original_reference(scop: Scop, scalars, use_cache: bool):
-    """Checksum of the untransformed program order — the correctness
-    anchor every measured candidate must reproduce."""
+def _ref_source(scop: Scop, scalars) -> str:
+    """C source of the untransformed program order — the correctness
+    anchor every measured candidate must checksum-match."""
     from .cbackend import CCodeGenerator
-    from .crunner import measure_source
 
     sched = PolyTOPSScheduler(scop, CFG.SchedulerConfig())._fallback_original()
-    src = CCodeGenerator(sched, scalars=scalars).generate()
-    return measure_source(src, tag=f"tune_{scop.name}_orig",
-                          use_cache=use_cache)
+    return CCodeGenerator(sched, scalars=scalars).generate()
+
+
+def _original_reference(scop: Scop, scalars, use_cache: bool):
+    """Measured reference checksum/seconds (no retry policy — callers
+    needing record/retry/exclude go through autotune's loop)."""
+    from .crunner import measure_source
+
+    return measure_source(_ref_source(scop, scalars),
+                          tag=f"tune_{scop.name}_orig", use_cache=use_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -433,11 +474,18 @@ def _original_reference(scop: Scop, scalars, use_cache: bool):
 # ---------------------------------------------------------------------------
 
 
+#: backoff before the single retry of a failed measurement — long
+#: enough to ride out a transient (a scheduler blip, an injected
+#: one-shot fault), short enough not to dominate the search
+RETRY_BACKOFF_S = 0.05
+
+
 def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
              measure: bool = True, top_k: int = 8,
              cache: Optional[ScheduleCache] = None, use_cache: bool = True,
              spec: Optional[CacheSpec] = None,
-             checksum_rel: float = 1e-6) -> TunedResult:
+             checksum_rel: float = 1e-6,
+             deadline: Optional[Deadline] = None) -> TunedResult:
     """Pick a kernel-specific configuration for ``scop``.
 
     With ``measure=True`` the ``top_k`` statically-ranked candidates are
@@ -446,6 +494,19 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
     in the schedule-cache pool — the second call for the same kernel
     shape returns the tuned config without scheduling or compiling
     anything (``result.source == 'cache'``).
+
+    Failure policy: a candidate whose compile-and-measure attempt dies
+    with a typed :class:`~repro.core.resilience.MeasurementError`
+    (source blowup, gcc timeout/failure, crashing or hanging binary,
+    parse error) is recorded in ``result.failures``, retried once after
+    a short backoff, then excluded; checksum mismatches are recorded
+    the same way and excluded without retry (a wrong answer is
+    deterministic, not transient).  The search never raises for a
+    candidate failure — it returns the best *surviving* measured
+    candidate, or the analytic winner when nothing could be measured.
+    A ``deadline`` is checked at every enumeration and candidate
+    boundary; a breach truncates the search with best-so-far and marks
+    the result ``degraded`` (degraded winners are never persisted).
     """
     spec = spec or default_spec()
     cache = cache or global_cache()
@@ -483,10 +544,14 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
     # schedules go through a throwaway in-memory cache, not the shared
     # pool (else POLYTOPS_NO_CACHE runs would serve stale schedules)
     sched_cache = cache if use_cache else ScheduleCache(disk=False)
-    scheds = _schedules_for_space(scop, sched_cache)
+    reasons: List[str] = []
+    failures: List[dict] = []
+    scheds = _schedules_for_space(scop, sched_cache, deadline=deadline,
+                                  reasons=reasons)
     cands = candidate_space(scop, scheds)
     if not cands:
-        return TunedResult(TunedConfig("pluto"), source="static")
+        return TunedResult(TunedConfig("pluto"), source="static",
+                           degraded=bool(reasons), reasons=reasons)
     trips = {s.index: _stmt_trip(scop, s) for s in scop.statements}
     memo: dict = {}
 
@@ -533,21 +598,64 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
             have.add(t[2])
 
     best: Optional[TunedResult] = None
+    ref = None
     if measure:
         from .crunner import checksums_match, measure_source
 
-        ref = _original_reference(scop, scalars, use_cache)
+        def _measure_once(make_src, tag: str):
+            """One compile-and-measure attempt with the shared failure
+            policy: a typed MeasurementError is recorded and retried
+            once after a backoff; a second failure (or any untyped
+            codegen exception) excludes the candidate (returns None)."""
+            for attempt in (1, 2):
+                try:
+                    return measure_source(make_src(), tag=tag,
+                                          use_cache=use_cache)
+                except MeasurementError as e:
+                    failures.append(dict(e.row(), attempt=attempt))
+                    if attempt == 1:
+                        time.sleep(RETRY_BACKOFF_S)
+                except (KeyboardInterrupt, SystemExit):
+                    raise
+                except Exception as e:   # untyped codegen defect: exclude,
+                    failures.append({    # no retry (it is deterministic)
+                        "kind": "codegen_error", "tag": tag,
+                        "phase": "codegen",
+                        "detail": f"{type(e).__name__}: {e}"[:200],
+                        "attempt": attempt})
+                    return None
+            return None
+
+        ref = _measure_once(
+            lambda: _ref_source(scop, scalars),
+            f"tune_{scop.name}_orig")
+        if ref is None:
+            reasons.append("reference measurement failed twice: "
+                           "no checksum oracle, falling back to static "
+                           "ranking")
         triples: List[dict] = []
-        for _, _, tc, cost in measured_set:
+        for _, _, tc, cost in (measured_set if ref is not None else []):
+            if deadline is not None and deadline.expired():
+                reasons.append(
+                    f"measurement truncated at {tc.label!r}: deadline "
+                    f"({deadline.elapsed():.3f}s > {deadline.budget_s:.3f}s)")
+                break
             sched = scheds[tc.base]
-            try:
-                src = build_source(scop, tc, sched, scalars)
-                r = measure_source(src, tag=f"tune_{scop.name}_{tc.label}",
-                                   use_cache=use_cache)
-            except Exception:
-                continue                 # compile/codegen failure: skip
+            r = _measure_once(
+                lambda tc=tc, sched=sched:
+                    build_source(scop, tc, sched, scalars),
+                f"tune_{scop.name}_{tc.label}")
+            if r is None:
+                continue                 # recorded + retried above: exclude
             if not checksums_match(r.checksum, ref.checksum, checksum_rel):
-                continue                 # wrong answer: discard candidate
+                # wrong answer: deterministic, so no retry — record the
+                # mismatch as a typed failure row and discard
+                failures.append(MeasurementError(
+                    "checksum_mismatch", tag=f"tune_{scop.name}_{tc.label}",
+                    phase="validate",
+                    detail=f"got {r.checksum!r}, want {ref.checksum!r}"
+                ).row())
+                continue
             triples.append({
                 "kernel": scop.name, "label": tc.label,
                 "feats": feats_by_label[tc.label], "seconds": r.seconds,
@@ -558,7 +666,7 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
                                    "measured", ranked_labels, ranker_name)
         if use_cache:
             record_measurements(cache, triples)
-        if best is None:
+        if best is None and ref is not None:
             # every measured candidate was rejected (compile failure or
             # wrong checksum): return the original program order — the
             # reference we just measured and know is correct — and do
@@ -567,17 +675,24 @@ def autotune(scop: Scop, *, scalars: Optional[Dict[str, float]] = None,
             # kernel shape
             return TunedResult(TunedConfig("original"), seconds=ref.seconds,
                                checksum=ref.checksum, source="measured",
-                               ranked=ranked_labels, ranker=ranker_name)
+                               ranked=ranked_labels, ranker=ranker_name,
+                               degraded=bool(reasons), reasons=reasons,
+                               failures=failures)
     if best is None:
         _, _, tc, cost = scored[0]
         best = TunedResult(tc, cost, source="static", ranked=ranked_labels,
                            ranker=ranker_name)
-    if measure:
-        # only *measured* winners persist: a static winner can depend on
-        # the learned ranker's pool state, which the pool-independent
-        # autotune_key cannot encode — replaying it would go stale as
-        # the pool grows (static re-ranking is cheap anyway: schedules
-        # come from the cache and nothing compiles)
+    best.degraded = bool(reasons)
+    best.reasons = reasons
+    best.failures = failures
+    if measure and best.source == "measured" and not best.degraded \
+            and key is not None:
+        # only clean *measured* winners persist: a static winner can
+        # depend on the learned ranker's pool state, which the
+        # pool-independent autotune_key cannot encode, and a degraded
+        # winner reflects a truncated search — replaying either would
+        # serve a stale or unlucky answer to every future compile of
+        # this kernel shape
         cache.put(key, best.to_dict())
     return best
 
@@ -603,7 +718,8 @@ class PallasCandidate:
 def rank_pallas_plans(scop: Scop, *, top_k: int = 4,
                       cache: Optional[ScheduleCache] = None,
                       use_cache: bool = True,
-                      spec: Optional[CacheSpec] = None
+                      spec: Optional[CacheSpec] = None,
+                      deadline: Optional[Deadline] = None
                       ) -> List[PallasCandidate]:
     """Enumerate the schedule-determining bases (strategy × fusion ×
     cost mix, fingerprint-deduplicated like :func:`autotune`), rank them
@@ -619,7 +735,7 @@ def rank_pallas_plans(scop: Scop, *, top_k: int = 4,
     spec = spec or default_spec()
     cache = cache or global_cache()
     sched_cache = cache if use_cache else ScheduleCache(disk=False)
-    scheds = _schedules_for_space(scop, sched_cache)
+    scheds = _schedules_for_space(scop, sched_cache, deadline=deadline)
     bases = [tc for tc in candidate_space(scop, scheds)
              if tc.tile is None and not tc.wavefront]
     trips = {s.index: _stmt_trip(scop, s) for s in scop.statements}
@@ -632,8 +748,11 @@ def rank_pallas_plans(scop: Scop, *, top_k: int = 4,
     for cost, _, tc in scored:
         if len(out) >= top_k:
             break
+        if deadline is not None and deadline.expired():
+            break          # best-so-far: the list is already best-first
+        sched = scheds[tc.base]
         try:
-            plan = lower_to_kernel_plan(schedule_tree(scheds[tc.base]))
+            plan = lower_to_kernel_plan(schedule_tree(sched), sched=sched)
         except ValueError:
             continue       # non-invertible/unbounded schedule: not lowerable
         out.append(PallasCandidate(tc, plan, cost))

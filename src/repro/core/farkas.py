@@ -36,6 +36,7 @@ from typing import Dict, FrozenSet, List, Sequence, Tuple
 from .affine import Affine
 from .ilp import ILPProblem
 from .polyhedron import Constraint, _prune
+from .resilience import fault_point
 
 
 @dataclass
@@ -224,7 +225,8 @@ def project_farkas(
     """Constraint rows over the ILP variables alone enforcing
     f(z) ≥ 0 over ``poly`` — the Farkas expansion with every multiplier
     exactly eliminated.  Memoized process-wide."""
-    key = _memo_key(poly, coef_of_z, const_term)
+    fault_point("farkas.project")   # before the memo: armed faults must
+    key = _memo_key(poly, coef_of_z, const_term)   # fire on warm hits too
     hit = _PROJ_MEMO.get(key)
     if hit is None:
         hit = _PROJ_MEMO[key] = _project(

@@ -13,6 +13,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .affine import Affine, affine_scale, affine_sub
 from .ilp import ILPProblem, Unbounded
+from .resilience import fault_point
 
 Constraint = Tuple[Affine, str]
 
@@ -349,6 +350,7 @@ def bounds_of(cons: Sequence[Constraint], var: str, inner: Sequence[str],
     from exploding on tiled/wavefronted systems (``lp_prune=0``
     disables).
     """
+    fault_point("fm.bounds")
     sys = list(cons)
     for v in inner:
         sys = fm_eliminate(sys, v)

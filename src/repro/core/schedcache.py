@@ -17,7 +17,14 @@ over and over.  This module makes repeat scheduling a dictionary lookup:
 * **Two tiers** — a process-local dict, then an on-disk pickle pool
   (``$POLYTOPS_CACHE_DIR`` or ``~/.cache/polytops/sched``) so separate
   processes (benchmark sweeps, serving workers) share warm schedules.
-  Disk failures of any kind degrade silently to cache-miss behaviour.
+  Disk failures degrade to cache-miss behaviour, but never silently
+  anymore: every outcome is counted in :class:`CacheStats`
+  (hits/misses/disk_hits/corrupt/evicted) and a corrupt pickle is
+  *quarantined* — moved aside for inspection and recomputed, so one bad
+  file can't re-corrupt every future read.  Writes are atomic
+  (tmp+rename) and the measurement pool appends under an advisory lock.
+  The ``cache.read``/``cache.write`` fault sites let the chaos harness
+  inject disk failures deterministically.
 
 Cached ``Schedule`` objects carry their own ``Scop``/dependence objects;
 per-dependence compiled-LP state is stripped on pickling (see
@@ -30,17 +37,26 @@ import json
 import os
 import pickle
 import tempfile
+from dataclasses import asdict, dataclass
 from typing import Any, Dict, Optional
 
 from .config import SchedulerConfig
 from .ilp import SOLVER_TAG
+from .resilience import fault_point
 from .schedtree import TREE_VERSION
 from .scop import Scop
 
+try:
+    import fcntl
+except ImportError:          # non-POSIX: appends still line-atomic via O_APPEND
+    fcntl = None
+
 # bump when Schedule layout or scheduler semantics change incompatibly
 # (v2: exact lexsimplex backend became the default — canonical optima
-# differ from the HiGHS-era vertices, so v1 entries must not be reused)
-CACHE_VERSION = 2
+# differ from the HiGHS-era vertices, so v1 entries must not be reused;
+# v3: Schedule carries degradation-ladder provenance fields — pre-
+# resilience pickles lack them and must not be served)
+CACHE_VERSION = 3
 
 
 # ---------------------------------------------------------------------------
@@ -128,46 +144,117 @@ def default_cache_dir() -> Optional[str]:
     return os.path.join(home, ".cache", "polytops", "sched")
 
 
-class ScheduleCache:
-    """In-memory + on-disk schedule cache with silent disk degradation."""
+@dataclass
+class CacheStats:
+    """Every cache outcome, counted — nothing is swallowed untallied.
 
-    def __init__(self, cache_dir: Optional[str] = None, disk: bool = True):
+    ``corrupt`` counts quarantined on-disk entries (unpicklable payload,
+    injected read fault); ``evicted`` counts in-memory entries dropped
+    by the size cap.  Indexable like the historical stats dict
+    (``stats["hits"]``) so existing callers keep working.
+    """
+    hits: int = 0
+    misses: int = 0
+    disk_hits: int = 0
+    corrupt: int = 0
+    evicted: int = 0
+
+    def __getitem__(self, k: str) -> int:
+        return getattr(self, k)
+
+    def __setitem__(self, k: str, v: int) -> None:
+        setattr(self, k, v)
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)
+
+
+class ScheduleCache:
+    """In-memory + on-disk schedule cache.  Disk trouble degrades to a
+    miss; corrupt entries are quarantined and counted, never raised."""
+
+    def __init__(self, cache_dir: Optional[str] = None, disk: bool = True,
+                 mem_cap: int = 4096):
         self.mem: Dict[str, Any] = {}
         self.dir = cache_dir if cache_dir is not None else default_cache_dir()
         self.disk = disk and self.dir is not None
-        self.stats = {"hits": 0, "misses": 0, "disk_hits": 0}
+        self.mem_cap = mem_cap
+        self.stats = CacheStats()
 
     def _path(self, key: str) -> str:
         return os.path.join(self.dir, key[:2], key + ".pkl")
 
+    def _quarantine(self, path: str) -> None:
+        """Move a corrupt entry aside (bad file kept for inspection,
+        recomputed as a miss — never a crash, never re-read)."""
+        self.stats.corrupt += 1
+        try:
+            qdir = os.path.join(self.dir, "quarantine")
+            os.makedirs(qdir, exist_ok=True)
+            os.replace(path, os.path.join(qdir, os.path.basename(path)))
+        except OSError:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
     def get(self, key: Optional[str]):
         if key is None:
-            self.stats["misses"] += 1
+            self.stats.misses += 1
             return None
         hit = self.mem.get(key)
         if hit is not None:
-            self.stats["hits"] += 1
+            self.stats.hits += 1
             return hit
         if self.disk:
+            path = self._path(key)
             try:
-                with open(self._path(key), "rb") as f:
+                fault_point("cache.read")
+                with open(path, "rb") as f:
                     hit = pickle.load(f)
-                self.mem[key] = hit
-                self.stats["hits"] += 1
-                self.stats["disk_hits"] += 1
+                self._mem_put(key, hit)
+                self.stats.hits += 1
+                self.stats.disk_hits += 1
                 return hit
-            except Exception:
+            except FileNotFoundError:
                 pass
-        self.stats["misses"] += 1
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception:
+                # one retry distinguishes a transient IO/injected fault
+                # (passes the second time — serve it) from genuine
+                # corruption (fails again — quarantine, count, recompute)
+                try:
+                    with open(path, "rb") as f:
+                        hit = pickle.load(f)
+                    self._mem_put(key, hit)
+                    self.stats.hits += 1
+                    self.stats.disk_hits += 1
+                    return hit
+                except (KeyboardInterrupt, SystemExit):
+                    raise
+                except Exception:
+                    if os.path.exists(path):
+                        self._quarantine(path)
+        self.stats.misses += 1
         return None
+
+    def _mem_put(self, key: str, sched) -> None:
+        if key not in self.mem and len(self.mem) >= self.mem_cap:
+            # FIFO eviction: dicts preserve insertion order, and the
+            # disk tier still holds the entry for a later warm read
+            self.mem.pop(next(iter(self.mem)))
+            self.stats.evicted += 1
+        self.mem[key] = sched
 
     def put(self, key: Optional[str], sched) -> None:
         if key is None:
             return
-        self.mem[key] = sched
+        self._mem_put(key, sched)
         if not self.disk:
             return
         try:
+            fault_point("cache.write")
             d = os.path.dirname(self._path(key))
             os.makedirs(d, exist_ok=True)
             # atomic publish: temp file + rename, so concurrent workers
@@ -183,6 +270,8 @@ class ScheduleCache:
                 except OSError:
                     pass
                 raise
+        except (KeyboardInterrupt, SystemExit):
+            raise
         except Exception:
             pass
 
@@ -203,7 +292,7 @@ def global_cache() -> ScheduleCache:
 def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
                          engine: str = "lex",
                          cache: Optional[ScheduleCache] = None,
-                         with_tree: bool = False, **kwargs):
+                         with_tree: bool = False, deadline=None, **kwargs):
     """Drop-in cached variant of :func:`repro.core.scheduler.schedule_scop`.
 
     Uncacheable configs (strategy callbacks) schedule normally.  The
@@ -219,6 +308,13 @@ def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
     process skips both the scheduler *and* the bound computation.  The
     cache key includes the tree format version, so construction changes
     invalidate tree-carrying entries.
+
+    ``deadline`` (a :class:`repro.core.resilience.Deadline`) is
+    forwarded to the scheduler but deliberately excluded from the cache
+    key: a deadline that never fires doesn't change the schedule, and
+    one that fires raises before anything is published — a deadline-
+    truncated run can never poison the pool.  Degraded schedules (the
+    resilience ladder's rungs 1–3) are likewise never published here.
     """
     from .scheduler import schedule_scop
 
@@ -235,14 +331,16 @@ def cached_schedule_scop(scop: Scop, config: Optional[SchedulerConfig] = None,
             except Exception:
                 pass
         return hit
-    sched = schedule_scop(scop, config, engine=engine, **kwargs)
+    sched = schedule_scop(scop, config, engine=engine, deadline=deadline,
+                          **kwargs)
     if with_tree:
         try:
             from .schedtree import schedule_tree
             schedule_tree(sched)
         except Exception:
             pass                            # tree is an optimization only
-    cache.put(key, sched)
+    if not getattr(sched, "degraded", False):
+        cache.put(key, sched)
     return sched
 
 
@@ -305,15 +403,28 @@ MEASUREMENTS_FILE = "measurements.jsonl"
 
 def record_measurements(cache: ScheduleCache, rows) -> None:
     """Append measurement triples (plain dicts) to the cache's pool.
-    One ``write`` call per batch keeps concurrent writers line-atomic on
-    POSIX (O_APPEND)."""
+
+    Safe under concurrent writers: one ``write`` call per batch on an
+    O_APPEND descriptor keeps lines atomic on POSIX, and an advisory
+    ``flock`` (when available) serializes whole batches so readers
+    never interleave two tuners' rows.  Disk failures degrade to "rows
+    not recorded" — the search result is unaffected."""
     if not rows or not cache.disk:
         return
     try:
+        fault_point("cache.write")
         os.makedirs(cache.dir, exist_ok=True)
         blob = "".join(json.dumps(r, sort_keys=True) + "\n" for r in rows)
         with open(os.path.join(cache.dir, MEASUREMENTS_FILE), "a") as f:
+            if fcntl is not None:
+                try:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                except OSError:
+                    pass          # exotic fs without flock: O_APPEND only
             f.write(blob)
+            f.flush()
+    except (KeyboardInterrupt, SystemExit):
+        raise
     except Exception:
         pass
 
@@ -331,6 +442,7 @@ def load_measurements(cache: ScheduleCache, space_version: Optional[int] = None,
         return []
     out = []
     try:
+        fault_point("cache.read")
         with open(os.path.join(cache.dir, MEASUREMENTS_FILE), "rb") as f:
             f.seek(0, os.SEEK_END)
             size = f.tell()

@@ -75,6 +75,7 @@ from .deps import (Dependence, compiled_poly, compute_dependences,
 from .farkas import add_farkas_nonneg
 from .ilp import ILPProblem, Unbounded
 from .linalg_q import orth_complement_basis, orth_complement_rows, rank
+from .resilience import fault_point
 from .scop import Scop, Statement
 
 
@@ -102,6 +103,13 @@ class Schedule:
     fallback: bool = False
     deps: List[Dependence] = field(default_factory=list)
     stats: Dict[str, Any] = field(default_factory=dict)
+    # degradation-ladder provenance (repro.core.resilience): a clean
+    # schedule is level 0; faults/deadline breaches step the ladder down
+    # and record why.  Read through resilience.provenance() — cached
+    # pickles from older format versions may lack the fields.
+    degraded: bool = False
+    fallback_level: int = 0
+    degrade_reasons: List[str] = field(default_factory=list)
 
     @property
     def n_dims(self) -> int:
@@ -195,11 +203,16 @@ class PolyTOPSScheduler:
     def __init__(self, scop: Scop, config: Optional[SchedulerConfig] = None,
                  deps: Optional[List[Dependence]] = None, engine: str = "lex",
                  incremental: bool = True, decompose: bool = True,
-                 record_stage_values: bool = False):
+                 record_stage_values: bool = False,
+                 deadline: Optional["Deadline"] = None):
         self.scop = scop
         self.config = config or SchedulerConfig()
         self.deps = deps if deps is not None else compute_dependences(scop)
         self.engine = engine
+        # wall-clock budget (resilience.Deadline), checked at dimension
+        # boundaries and before every ILP solve; None → never expires
+        self.deadline = deadline
+        self._partial: Optional[Tuple] = None
         # incremental=False reproduces the seed pipeline end to end
         # (clone-per-lexmin dense ILPs, no Farkas memoization, no compiled
         # dependence polyhedra) — kept for benchmarking and differential
@@ -256,11 +269,18 @@ class PolyTOPSScheduler:
         seq_marked: Set[Tuple[int, int]] = set()
         max_dims = 2 * max((s.dim for s in stmts), default=1) + 3 + len(stmts)
         dim = 0
+        # live references for partial-prefix salvage: rows/bands/parallel
+        # are mutated in place only at completed-dimension boundaries, so
+        # the ladder can recover everything solved before a fault
+        self._partial = (rows, bands, parallel, seq_marked, vector_iter,
+                         dropped)
 
         def completed() -> Set[int]:
             return {s.index for s in stmts if len(H[s.index]) >= s.dim}
 
         while dim < max_dims:
+            if self.deadline is not None:
+                self.deadline.check(f"scheduler dim {dim}")
             comp = completed()
             unsat = [d for d in active if d.satisfied_at is None]
             if len(comp) == len(stmts):
@@ -725,6 +745,9 @@ class PolyTOPSScheduler:
 
             want = self._want_order(stmts)
 
+            if self.deadline is not None:
+                self.deadline.check("ilp.solve")
+            fault_point("ilp.solve")
             t0 = time.time()
             self.stats["ilp_solves"] += 1
             try:
@@ -883,6 +906,9 @@ class PolyTOPSScheduler:
         tail = [tp, ti, to, tc]
         want = self._want_order(stmts)
 
+        if self.deadline is not None:
+            self.deadline.check("ilp.solve")
+        fault_point("ilp.solve")
         t0 = time.time()
         self.stats["ilp_solves"] += 1
         try:
@@ -983,6 +1009,60 @@ class PolyTOPSScheduler:
         return flat
 
     # -- fallback + verification ----------------------------------------------
+    def partial_schedule(self) -> Optional[Schedule]:
+        """Degradation rung 1: salvage the legal prefix a failed
+        :meth:`schedule` run already solved.
+
+        Every completed dimension is legality-constrained (all active
+        dependences weakly satisfied), so any completed prefix followed
+        by the program-order suffix (beta scalars interleaved with
+        identity dims) is a legal schedule.  The per-dim ILPs decompose
+        per SCC, so the prefix carries every SCC result solved before
+        the fault.  Returns None when nothing was solved; the result is
+        point-wise verified (the salvage path must never publish an
+        illegal schedule — verification failure raises and the ladder
+        steps down instead)."""
+        st = self._partial
+        if st is None:
+            return None
+        rows, bands, parallel, seq_marked, _vec, dropped = st
+        n = min((len(rr) for rr in rows.values()), default=0)
+        if n == 0:
+            return None
+        prows = {i: list(rr[:n]) for i, rr in rows.items()}
+        pbands = list(bands[:n])
+        ppar = list(parallel[:n])
+        stmts = self.scop.statements
+        maxd = max((s.dim for s in stmts), default=0)
+        nb = (max(pbands) + 1) if pbands else 0
+        for level in range(maxd + 1):
+            for s in stmts:
+                b = s.beta[level] if level < len(s.beta) else 0
+                prows[s.index].append(
+                    ScheduleRow("scalar", {("cst",): Fraction(b)}))
+            pbands.append(nb)
+            ppar.append(False)
+            nb += 1
+            if level < maxd:
+                for s in stmts:
+                    coeffs = ({("it", level): Fraction(1)}
+                              if level < s.dim else {})
+                    prows[s.index].append(ScheduleRow("linear", coeffs))
+                pbands.append(nb)
+                ppar.append(False)
+                nb += 1
+        # conservative marks: directives may have been mid-application
+        # when the fault hit, so no vectorization claims survive salvage
+        sched = Schedule(self.scop, prows, pbands, ppar, set(seq_marked),
+                         {}, list(dropped), True, self.deps,
+                         dict(self.stats))
+        for dep in self.deps:
+            if dep.satisfied_at is not None and dep.satisfied_at >= n:
+                dep.satisfied_at = None
+        self._verify_remaining([d for d in self.deps
+                                if d.satisfied_at is None], sched)
+        return sched
+
     def _fallback_original(self) -> Schedule:
         scop = self.scop
         stmts = scop.statements

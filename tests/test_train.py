@@ -80,6 +80,64 @@ def test_straggler_monitor():
     assert mon.flagged == [2]
 
 
+def test_restart_storm_exhausts_budget():
+    """A persistent fault must exhaust max_restarts and surface as a
+    RuntimeError chained from the Preemption — not loop forever."""
+    calls = {"n": 0}
+
+    def doomed(step):
+        calls["n"] += 1
+        raise FAULT.Preemption(f"storm {calls['n']}")
+
+    policy = FAULT.FaultPolicy(max_restarts=3)
+    with pytest.raises(RuntimeError, match="exceeded max_restarts=3") as ei:
+        FAULT.run_resilient(doomed, 0, 10, restore_fn=lambda: 0,
+                            save_fn=lambda s: None, policy=policy,
+                            log_fn=lambda m: None)
+    assert isinstance(ei.value.__cause__, FAULT.Preemption)
+    # max_restarts restores + the final fatal attempt
+    assert calls["n"] == policy.max_restarts + 1
+
+
+def test_checkpoint_cadence_and_rewind():
+    """Checkpoints land at every multiple of checkpoint_every; a
+    preemption rewinds to the latest one and replays the gap."""
+    saved, executed = [], []
+
+    def step_fn(step):
+        executed.append(step)
+        if step == 7 and executed.count(7) == 1:
+            raise FAULT.Preemption("simulated")
+        return {"step": step}
+
+    policy = FAULT.FaultPolicy(max_restarts=2, checkpoint_every=3)
+    out = FAULT.run_resilient(step_fn, 0, 10,
+                              restore_fn=lambda: saved[-1],
+                              save_fn=saved.append, policy=policy,
+                              log_fn=lambda m: None)
+    # save_fn(step+1) fires when (step+1) % every == 0
+    assert saved == [3, 6, 9]
+    # steps 6..7 re-executed after restoring the step-6 checkpoint
+    assert executed == [0, 1, 2, 3, 4, 5, 6, 7, 6, 7, 8, 9]
+    assert out["restarts"] == 1 and out["final_step"] == 10
+    assert out["last_metrics"] == {"step": 9}
+
+
+def test_straggler_ewma_math():
+    """The EWMA recurrence itself: seed on first sample, then
+    (1-a)*ewma + a*dt, with the flag judged against the PRE-update mean."""
+    mon = FAULT.StragglerMonitor(alpha=0.5, threshold=2.0)
+    assert not mon.observe(0, 1.0)        # seeds, can never flag
+    assert mon.ewma == 1.0
+    assert not mon.observe(1, 2.0)        # 2.0 == 2.0*1.0, not strictly >
+    assert mon.ewma == pytest.approx(1.5)
+    assert mon.observe(2, 3.1)            # 3.1 > 2.0*1.5
+    assert mon.ewma == pytest.approx(2.3)
+    # the slow sample raised the mean, so the same reading passes now
+    assert not mon.observe(3, 3.1)
+    assert mon.flagged == [2]
+
+
 def test_data_determinism_and_sharding():
     cfg = DataConfig(vocab=100, seq_len=32, global_batch=4, seed=7)
     a = SyntheticLM(cfg).batch(3)
