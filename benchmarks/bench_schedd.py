@@ -1,0 +1,222 @@
+"""schedd load bench: coalescing, warm-hit latency, fallback behaviour.
+
+Launches a real daemon subprocess on a private socket with a private
+cache pool and drives it the way a compile farm would:
+
+* **coalescing** — N clients fire the *identical* schedule request
+  concurrently (the daemon holds the computation open briefly via the
+  chaos-only ``test_delay_s`` field so the requests genuinely overlap);
+  the daemon must run ONE computation and serve every other client from
+  the shared flight.
+
+* **warm-hit latency** — p50/p99 of a warm kernel-plan request through
+  the daemon (a pre-encoded frame-cache hit: socket + handshake +
+  unpickle) against the in-process disk-hit path (memo + memory tier
+  cleared each rep, so ``cached_schedule_scop`` re-reads the pickle and
+  the plan re-lowers).  tier1.sh gates the p50 ratio at 2x.
+
+* **fallback** — a client pointed at a socket that does not exist must
+  serve every plan in-process, counted in ``ClientStats``.
+
+Writes ``BENCH_schedd.json`` next to this file.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_schedd
+Env:   POLYTOPS_BENCH_REPS=N warm-latency repeat count (default 30)
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import akg
+from repro.core import schedcache
+from repro.core.schedclient import SchedClient, local_only
+from repro.core.scop import Scop
+
+HERE = Path(__file__).resolve().parent
+OUT = HERE / "BENCH_schedd.json"
+
+N_CLIENTS = 4
+PLAN_SHAPE = (96, 96, 96)
+
+
+def _bench_scop() -> Scop:
+    s = Scop("bench_schedd", params={"N": 48})
+    with s.loop("i", 0, "N"):
+        with s.loop("j", 0, "N"):
+            s.stmt("A[i,j] = A[i,j] + 1")
+    return s
+
+
+def start_daemon(sock: str, pool: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(HERE.parent / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.pop("POLYTOPS_SCHEDD_SOCK", None)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
+         "--cache-dir", pool, "--chaos"],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    client = SchedClient(sock, retries=0)
+    deadline = time.monotonic() + 20.0
+    while time.monotonic() < deadline:
+        try:
+            client.ping(timeout=1.0)
+            return proc
+        except Exception:
+            if proc.poll() is not None:
+                raise RuntimeError(f"daemon exited rc={proc.returncode}")
+            time.sleep(0.05)
+    proc.kill()
+    raise RuntimeError("daemon never answered ping within 20s")
+
+
+def stop_daemon(proc, sock: str) -> None:
+    try:
+        SchedClient(sock, retries=0).shutdown(timeout=2.0)
+    except Exception:
+        pass
+    try:
+        proc.wait(timeout=5.0)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        proc.wait(timeout=5.0)
+
+
+def bench_coalescing(sock: str) -> dict:
+    scop = _bench_scop()
+    stats0 = SchedClient(sock, retries=0).daemon_stats()
+    results, errors = [], []
+
+    def one_client():
+        try:
+            c = SchedClient(sock, retries=0, request_timeout=60.0)
+            # raw request: coalescing is a daemon property, keep the
+            # client's retry/fallback machinery out of the measurement
+            resp = c._request({"op": "schedule", "scop": scop,
+                               "test_delay_s": 0.4}, 60.0)
+            results.append(resp["meta"])
+        except Exception as e:          # noqa: BLE001 — tallied below
+            errors.append(f"{type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=one_client) for _ in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+        time.sleep(0.05)    # overlap inside the 0.4s compute window
+    for t in threads:
+        t.join(timeout=90.0)
+    stats1 = SchedClient(sock, retries=0).daemon_stats()
+    delta = {k: stats1["counters"][k] - stats0["counters"][k]
+             for k in ("computed", "coalesced", "frame_hits")}
+    return {"clients": N_CLIENTS, "answered": len(results),
+            "errors": errors, **delta}
+
+
+def bench_warm_latency(sock: str, pool: str, reps: int) -> dict:
+    m, n, k = PLAN_SHAPE
+    client = SchedClient(sock, retries=0, request_timeout=60.0)
+    client.remote_plan("matmul", m, n, k, "tensor")      # warm the frame
+    daemon_ms = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        client.remote_plan("matmul", m, n, k, "tensor")
+        daemon_ms.append((time.perf_counter() - t0) * 1e3)
+
+    # in-process disk-hit reference: same pool the daemon warmed, with
+    # the plan memo and the cache's memory tier cleared every rep so
+    # each call is a genuine pickle-from-disk + lower
+    prev = schedcache._GLOBAL
+    schedcache._GLOBAL = schedcache.ScheduleCache(cache_dir=pool)
+    local_ms = []
+    try:
+        with local_only():
+            akg.plan_matmul.cache_clear()
+            akg.plan_matmul(m, n, k)                     # warm the disk pool
+            for _ in range(reps):
+                akg.plan_matmul.cache_clear()
+                schedcache._GLOBAL.mem.clear()
+                t0 = time.perf_counter()
+                akg.plan_matmul(m, n, k)
+                local_ms.append((time.perf_counter() - t0) * 1e3)
+        disk_hits = schedcache._GLOBAL.stats.disk_hits
+    finally:
+        schedcache._GLOBAL = prev
+
+    def pct(xs, q):
+        return round(statistics.quantiles(xs, n=100)[q - 1], 4)
+
+    d50, d99 = pct(daemon_ms, 50), pct(daemon_ms, 99)
+    l50, l99 = pct(local_ms, 50), pct(local_ms, 99)
+    return {"reps": reps, "daemon_p50_ms": d50, "daemon_p99_ms": d99,
+            "inprocess_p50_ms": l50, "inprocess_p99_ms": l99,
+            "ratio_p50": round(d50 / l50, 3) if l50 else None,
+            "inprocess_disk_hits": disk_hits}
+
+
+def bench_fallback() -> dict:
+    c = SchedClient("/nonexistent/schedd.sock", retries=0,
+                    connect_timeout=0.2)
+    with tempfile.TemporaryDirectory() as tmp:
+        prev = schedcache._GLOBAL
+        schedcache._GLOBAL = schedcache.ScheduleCache(cache_dir=tmp)
+        try:
+            for _ in range(3):
+                plan = c.plan("matmul", 64, 64, 64)
+                assert plan is not None
+        finally:
+            schedcache._GLOBAL = prev
+    return {"requests": 3, **c.stats.as_dict()}
+
+
+def main() -> int:
+    reps = int(os.environ.get("POLYTOPS_BENCH_REPS", "30"))
+    tmp = tempfile.mkdtemp(prefix="bench_schedd_")
+    sock = os.path.join(tmp, "schedd.sock")
+    pool = os.path.join(tmp, "pool")
+    proc = start_daemon(sock, pool)
+    try:
+        coalescing = bench_coalescing(sock)
+        warm = bench_warm_latency(sock, pool, reps)
+        final = SchedClient(sock, retries=0).daemon_stats()
+    finally:
+        stop_daemon(proc, sock)
+    fallback = bench_fallback()
+
+    counters = final["counters"]
+    served = counters["requests"]
+    hits = counters["frame_hits"] + counters["coalesced"]
+    out = {
+        "coalescing": coalescing,
+        "warm_latency": warm,
+        "fallback": fallback,
+        "fallbacks": fallback["fallbacks"],
+        "daemon_counters": counters,
+        "daemon_cache": final["cache"],
+        "frame_hit_rate": round(hits / served, 3) if served else None,
+        "journal_recovered": final["journal_recovered"],
+    }
+    OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"coalescing: {coalescing['clients']} clients -> "
+          f"{coalescing['computed']} computed, "
+          f"{coalescing['coalesced']} coalesced, "
+          f"{coalescing['frame_hits']} frame hits "
+          f"({len(coalescing['errors'])} errors)")
+    print(f"warm plan latency: daemon p50 {warm['daemon_p50_ms']}ms "
+          f"p99 {warm['daemon_p99_ms']}ms | in-process disk-hit p50 "
+          f"{warm['inprocess_p50_ms']}ms p99 {warm['inprocess_p99_ms']}ms "
+          f"| ratio p50 {warm['ratio_p50']}x")
+    print(f"fallback (no daemon): {fallback['fallbacks']}/"
+          f"{fallback['requests']} served in-process")
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

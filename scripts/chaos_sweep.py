@@ -20,13 +20,19 @@ the hardened pipeline, and asserts the resilience contract:
   crunner result-cache JSON are quarantined and recomputed, counted in
   ``CacheStats``;
 * **deadlines** — an already-expired deadline degrades to the identity
-  rung, still legal, still deterministic.
+  rung, still legal, still deterministic;
+* **daemon** (``repro.launch.schedd``, real subprocesses) — every way a
+  peer or the daemon process can die mid-conversation (kill -9 during a
+  journalled autotune, garbage/truncated/oversized frames, a slow-loris
+  client, a stale-version peer, overload shedding, a missing socket)
+  ends in a typed error or a legal schedule via the client's in-process
+  fallback — never a hang, a crash, or a poisoned cache pool.
 
 Any escaped exception, illegal schedule, fingerprint mismatch between
 the two runs, or armed-but-never-fired site fails the sweep.  Results
-go to ``chaos_summary.json`` (``--out`` to change); exit status is
-nonzero on any failure.  Gated in ``scripts/tier1.sh`` under a 120 s
-budget.
+go to ``artifacts/chaos_summary.json`` (``--out`` to change); exit
+status is nonzero on any failure.  Gated in ``scripts/tier1.sh`` under
+a 120 s budget.
 """
 import argparse
 import json
@@ -328,9 +334,304 @@ def run_corrupt_schedcache(results):
     results.append(row)
 
 
+# ---------------------------------------------------------------------------
+# schedd daemon scenarios: every way a client or the daemon process can
+# die mid-conversation must end in a typed error or a legal schedule via
+# the client's in-process fallback — never a hang, crash, or poisoned
+# cache.  Real subprocess daemons (kill -9 has to be real); each gets a
+# private socket + cache pool under the sweep's _TMP.
+# ---------------------------------------------------------------------------
+
+def _spawn_daemon(sock, pool, *extra):
+    import subprocess
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    env.pop("POLYTOPS_SCHEDD_SOCK", None)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
+         "--cache-dir", pool, "--chaos", *extra],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    from repro.core.schedclient import SchedClient
+
+    stop = time.monotonic() + 20.0
+    while time.monotonic() < stop:
+        try:
+            SchedClient(sock, retries=0).ping(timeout=1.0)
+            return proc
+        except Exception:
+            if proc.poll() is not None:
+                raise RuntimeError(f"daemon exited rc={proc.returncode}")
+            time.sleep(0.05)
+    proc.kill()
+    raise RuntimeError("daemon never answered ping")
+
+
+def _kill_daemon(proc):
+    import subprocess
+
+    if proc.poll() is None:
+        proc.kill()
+    try:
+        proc.wait(timeout=5.0)
+    except subprocess.TimeoutExpired:
+        pass
+
+
+def _daemon_scenario(results, name, fn):
+    t0 = time.monotonic()
+    row = {"scenario": f"daemon/{name}", "site": None, "kernel": "daemon",
+           "mode": "daemon"}
+    try:
+        row.update(fn() or {})
+        row["ok"] = True
+    except Exception:
+        row.update(ok=False, error=traceback.format_exc())
+    row["seconds"] = round(time.monotonic() - t0, 3)
+    results.append(row)
+
+
+def run_daemon_scenarios(results):
+    import socket as socketlib
+    import threading
+
+    from repro.core.schedclient import (MAGIC, DaemonUnavailable, Overloaded,
+                                        SchedClient, SchedClientError,
+                                        VersionSkew, wire_versions)
+
+    scop_fn = FAST_KERNELS["gemm"]
+
+    def fallback_schedule(client):
+        """Schedule through the total client API, oracle-check the
+        result, and return its fingerprint + the client's tallies."""
+        scop = scop_fn()
+        sched = client.schedule(scop)
+        _oracle_check(scop, sched)
+        return schedule_fingerprint(sched), client.stats.as_dict()
+
+    # one shared hostile-input daemon: max-inflight 1 (overload is a
+    # one-extra-request affair) and a 1s recv timeout (slow-loris trips
+    # fast); requests in these scenarios never overlap except on purpose
+    sock = os.path.join(_TMP, "schedd.sock")
+    pool = os.path.join(_TMP, "schedd_pool")
+    daemon = _spawn_daemon(sock, pool, "--max-inflight", "1",
+                           "--conn-timeout", "1.0")
+
+    def garbage_frame():
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(b"GET / HTTP/1.1\r\n\r\n" * 4)
+        try:
+            reply = s.recv(1 << 16)     # typed bad_frame or clean close
+        except OSError:
+            reply = b""
+        s.close()
+        if reply and b"bad_frame" not in reply:
+            raise AssertionError(f"garbage got a non-typed reply: "
+                                 f"{reply[:80]!r}")
+        SchedClient(sock, retries=0).ping(timeout=2.0)   # daemon lives
+        return {"reply_bytes": len(reply)}
+
+    def truncated_frame():
+        import struct
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(MAGIC + struct.pack(">I", 4096) + b"only-a-few-bytes")
+        s.close()                        # EOF mid-frame
+        SchedClient(sock, retries=0).ping(timeout=2.0)
+        return {}
+
+    def oversized_frame():
+        import struct
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(MAGIC + struct.pack(">I", 0xFFFFFFFF))
+        try:
+            reply = s.recv(1 << 16)
+        except OSError:
+            reply = b""
+        s.close()
+        if reply and b"bad_frame" not in reply:
+            raise AssertionError(f"oversized length not rejected typed: "
+                                 f"{reply[:80]!r}")
+        SchedClient(sock, retries=0).ping(timeout=2.0)
+        return {}
+
+    def slow_loris():
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(MAGIC[:2])             # stall mid-header
+        t0 = time.monotonic()
+        try:
+            dropped = s.recv(1) == b""   # daemon must hang up on us
+        except OSError:
+            dropped = True
+        held = time.monotonic() - t0
+        s.close()
+        if not dropped:
+            raise AssertionError("daemon kept the stalled connection")
+        if held > 4.0:
+            raise AssertionError(f"stalled peer held {held:.1f}s "
+                                 f"(conn-timeout is 1s)")
+        SchedClient(sock, retries=0).ping(timeout=2.0)
+        return {"held_s": round(held, 2)}
+
+    def version_skew():
+        stale = dict(wire_versions(), cache=-1, tree=-1)
+        c = SchedClient(sock, retries=0, versions=stale)
+        try:
+            c.remote_plan("matmul", 32, 32, 32, "tensor")
+            raise AssertionError("stale peer was not rejected")
+        except VersionSkew:
+            pass
+        if c.breaker.state == "closed":
+            raise AssertionError("skew did not open the breaker")
+        # the total API still serves, in-process, without re-dialing
+        fp, stats = fallback_schedule(c)
+        if stats["fallbacks"] < 1 or stats["version_skew"] < 1:
+            raise AssertionError(f"skew fallback not tallied: {stats}")
+        clean = SchedClient(sock, retries=0)
+        counters = clean.daemon_stats()["counters"]
+        if counters["version_skew"] < 1:
+            raise AssertionError(f"daemon did not count the skewed peer: "
+                                 f"{counters}")
+        return {"fingerprint": fp[:16], "breaker": c.breaker.state}
+
+    def overload():
+        slow_err = []
+
+        def hold_the_flight():
+            try:
+                c = SchedClient(sock, retries=0, request_timeout=30.0)
+                c._request({"op": "schedule", "scop": FAST_KERNELS["mvt"](),
+                            "test_delay_s": 1.5}, 30.0)
+            except Exception as e:       # noqa: BLE001 — asserted below
+                slow_err.append(f"{type(e).__name__}: {e}")
+
+        t = threading.Thread(target=hold_the_flight)
+        t.start()
+        time.sleep(0.4)                  # let it own the only flight slot
+        c = SchedClient(sock, retries=0)
+        try:
+            c._request({"op": "schedule", "scop": scop_fn()}, 10.0)
+            raise AssertionError("second keyed request was not shed "
+                                 "(max-inflight is 1)")
+        except Overloaded:
+            pass
+        # the total API degrades to in-process while the daemon is busy
+        fp, stats = fallback_schedule(c)
+        if stats["fallbacks"] < 1 or stats["overloaded"] < 1:
+            raise AssertionError(f"overload fallback not tallied: {stats}")
+        t.join(timeout=30.0)
+        if slow_err:
+            raise AssertionError(f"the in-flight request died: {slow_err}")
+        return {"fingerprint": fp[:16]}
+
+    try:
+        _daemon_scenario(results, "garbage-frame", garbage_frame)
+        _daemon_scenario(results, "truncated-frame", truncated_frame)
+        _daemon_scenario(results, "oversized-frame", oversized_frame)
+        _daemon_scenario(results, "slow-loris", slow_loris)
+        _daemon_scenario(results, "stale-version-peer", version_skew)
+        _daemon_scenario(results, "overload-shed", overload)
+    finally:
+        try:
+            SchedClient(sock, retries=0).shutdown(timeout=2.0)
+        except Exception:
+            pass
+        _kill_daemon(daemon)
+
+    def socket_enoent():
+        c = SchedClient(os.path.join(_TMP, "no-such.sock"), retries=0,
+                        connect_timeout=0.2)
+        try:
+            c.remote_plan("matmul", 32, 32, 32, "tensor")
+            raise AssertionError("missing socket did not raise typed")
+        except DaemonUnavailable:
+            pass
+        fp1, _ = fallback_schedule(c)
+        fp2, stats = fallback_schedule(c)
+        if fp1 != fp2:
+            raise AssertionError("fallback schedule nondeterministic")
+        if stats["fallbacks"] < 2:
+            raise AssertionError(f"fallbacks not tallied: {stats}")
+        return {"fingerprint": fp1[:16]}
+
+    _daemon_scenario(results, "socket-enoent", socket_enoent)
+
+    def kill9_mid_request():
+        k_sock = os.path.join(_TMP, "schedd_kill.sock")
+        k_pool = os.path.join(_TMP, "schedd_kill_pool")
+        proc = _spawn_daemon(k_sock, k_pool)
+        victim_err = []
+
+        def victim():
+            try:
+                c = SchedClient(k_sock, retries=0, request_timeout=30.0)
+                c._request({"op": "autotune", "scop": scop_fn(),
+                            "kwargs": {"measure": False},
+                            "test_delay_s": 5.0}, 30.0)
+                victim_err.append("request SUCCEEDED across a kill -9")
+            except SchedClientError:
+                pass                     # typed: exactly the contract
+            except Exception as e:       # noqa: BLE001 — asserted below
+                victim_err.append(f"untyped: {type(e).__name__}: {e}")
+
+        t = threading.Thread(target=victim)
+        t.start()
+        time.sleep(1.0)                  # inside the journalled hold
+        proc.kill()                      # SIGKILL: no cleanup, no goodbye
+        proc.wait(timeout=5.0)
+        t.join(timeout=30.0)
+        if t.is_alive():
+            raise AssertionError("client hung across the daemon's death")
+        if victim_err:
+            raise AssertionError(victim_err[0])
+
+        # the orphaned socket file now points nowhere: the total API
+        # must fall back in-process and still produce a legal schedule
+        c = SchedClient(k_sock, retries=0, connect_timeout=0.5)
+        fp, stats = fallback_schedule(c)
+        if stats["fallbacks"] < 1:
+            raise AssertionError(f"post-kill fallback not tallied: {stats}")
+
+        # restart on the same pool: nothing is torn, and the journal
+        # names the autotune the kill orphaned
+        proc2 = _spawn_daemon(k_sock, k_pool)
+        try:
+            clean = SchedClient(k_sock, retries=0)
+            st = clean.daemon_stats()
+            if st["journal_recovered"] < 1:
+                raise AssertionError(
+                    f"journal did not witness the killed autotune: {st}")
+            sched = clean.schedule(scop_fn())
+            _oracle_check(scop_fn(), sched)
+            if clean.stats.fallbacks:
+                raise AssertionError("restarted daemon did not serve")
+            from repro.core.schedcache import (ScheduleCache,
+                                               load_measurements)
+            load_measurements(ScheduleCache(cache_dir=k_pool))
+        finally:
+            try:
+                SchedClient(k_sock, retries=0).shutdown(timeout=2.0)
+            except Exception:
+                pass
+            _kill_daemon(proc2)
+        return {"fingerprint": fp[:16],
+                "journal_recovered": st["journal_recovered"]}
+
+    _daemon_scenario(results, "kill9-mid-request", kill9_mid_request)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="chaos_summary.json")
+    ap.add_argument("--out", default="artifacts/chaos_summary.json")
     args = ap.parse_args(argv)
     t0 = time.monotonic()
     results = []
@@ -338,6 +639,7 @@ def main(argv=None) -> int:
     run_deadline_scenarios(results)
     run_measure_scenarios(results)
     run_corrupt_schedcache(results)
+    run_daemon_scenarios(results)
     failures = [r for r in results if not r.get("ok")]
     summary = {
         "ok": not failures,
@@ -346,6 +648,9 @@ def main(argv=None) -> int:
         "seconds": round(time.monotonic() - t0, 2),
         "scenarios": results,
     }
+    outdir = os.path.dirname(args.out)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)
     for r in results:

@@ -28,15 +28,24 @@
 #   * chaos      — seeded fault-injection sweep (scripts/chaos_sweep.py):
 #                  every fault site × the fast-set kernels must yield a
 #                  legal schedule (numpy-oracle differential) or a clean
-#                  typed error, bit-deterministically; writes
-#                  chaos_summary.json
+#                  typed error, bit-deterministically — including the
+#                  schedd daemon scenarios (kill -9 mid-request, garbage
+#                  frames, slow-loris, version skew, missing socket);
+#                  writes artifacts/chaos_summary.json
+#   * schedd     — scheduling-daemon load bench (benchmarks/bench_schedd.py):
+#                  concurrent identical requests must coalesce to one
+#                  computation, and warm-hit plan latency through the
+#                  daemon must stay within 2x of the in-process
+#                  disk-hit path; writes benchmarks/BENCH_schedd.json
 #
-# Every run writes tier1_summary.json (per-gate ok + metrics) for CI to
-# upload/consume, even when a gate fails.
+# Every run writes artifacts/tier1_summary.json (per-gate ok + metrics)
+# for CI to upload/consume, even when a gate fails.
 #
 # Usage:  scripts/tier1.sh
-# Env:    POLYTOPS_TIER1_BUDGET     scheduler smoke budget in s (default 240)
-#         POLYTOPS_TIER1_PB_BUDGET  polybench smoke budget in s (default 1200)
+# Env:    POLYTOPS_TIER1_BUDGET       scheduler smoke budget in s (default 240)
+#         POLYTOPS_TIER1_PB_BUDGET    polybench smoke budget in s (default 1200)
+#         POLYTOPS_TIER1_REQUIRE_COV  1 = fail (not skip) when pytest-cov
+#                                     is missing (CI sets this)
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,13 +53,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BUDGET="${POLYTOPS_TIER1_BUDGET:-240}"
 PB_BUDGET="${POLYTOPS_TIER1_PB_BUDGET:-1200}"
 RESULTS="$(mktemp)"
+mkdir -p artifacts
 
 record() {  # record <gate> <ok 0|1> <detail-json>
   printf '%s\t%s\t%s\n' "$1" "$2" "${3:-{\}}" >> "$RESULTS"
 }
 
 finish() {
-  python - "$RESULTS" <<'PY' > tier1_summary.json
+  python - "$RESULTS" <<'PY' > artifacts/tier1_summary.json
 import json, sys, pathlib
 gates = {}
 for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
@@ -61,12 +71,12 @@ for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
     except json.JSONDecodeError:
         pass
 expected = ["tests", "coverage", "golden", "sched_bench", "polybench",
-            "pallas", "chaos"]
+            "pallas", "chaos", "schedd"]
 ok = all(gates.get(g, {}).get("ok") for g in expected)
 print(json.dumps({"ok": ok, "gates": gates}, indent=2, sort_keys=True))
 PY
   rm -f "$RESULTS"
-  echo "== tier-1 summary written to tier1_summary.json =="
+  echo "== tier-1 summary written to artifacts/tier1_summary.json =="
 }
 trap finish EXIT
 
@@ -108,6 +118,12 @@ PY
     rm -f .tier1_cov_detail.json
     exit 1
   fi
+elif [ "${POLYTOPS_TIER1_REQUIRE_COV:-0}" = 1 ]; then
+  # a gate that silently records ok when its tool is missing is not a
+  # gate — CI requires coverage, so a missing pytest-cov is a failure
+  echo "COVERAGE REQUIRED but pytest-cov is not installed" >&2
+  record coverage 0 '{"error": "coverage required but pytest-cov not installed"}'
+  exit 1
 else
   echo "pytest-cov not installed: coverage gate skipped (CI installs it)"
   record coverage 1 '{"skipped": true, "reason": "pytest-cov not installed"}'
@@ -251,12 +267,12 @@ else
   exit 1
 fi
 
-echo "== chaos sweep (fault injection × fast set, 120s budget) =="
+echo "== chaos sweep (fault injection + daemon × fast set, 120s budget) =="
 T0=$SECONDS
-if timeout 120 python scripts/chaos_sweep.py --out chaos_summary.json; then
+if timeout 120 python scripts/chaos_sweep.py --out artifacts/chaos_summary.json; then
   CH_DETAIL="$(python - <<'PY'
 import json
-d = json.load(open("chaos_summary.json"))
+d = json.load(open("artifacts/chaos_summary.json"))
 print(json.dumps({"seconds": d["seconds"], "scenarios": d["n_scenarios"],
                   "failures": d["n_failures"]}))
 PY
@@ -264,8 +280,52 @@ PY
   record chaos 1 "$CH_DETAIL"
 else
   echo "CHAOS SWEEP FAILED (escaped exception, illegal degraded schedule," >&2
-  echo "nondeterministic fingerprint, or never-fired armed site)" >&2
+  echo "nondeterministic fingerprint, hung daemon, or never-fired armed site)" >&2
   record chaos 0 "{\"seconds\": $((SECONDS - T0))}"
+  exit 1
+fi
+
+echo "== schedd daemon bench (coalescing + warm-hit latency, 120s budget) =="
+T0=$SECONDS
+if ! timeout 120 python -m benchmarks.bench_schedd; then
+  echo "SCHEDD BENCH FAILED or exceeded 120s budget" >&2
+  record schedd 0 "{\"seconds\": $((SECONDS - T0))}"
+  exit 1
+fi
+if python - <<'PY'
+import json, pathlib, sys
+d = json.loads(pathlib.Path("benchmarks/BENCH_schedd.json").read_text())
+co = d["coalescing"]
+warm = d["warm_latency"]
+detail = {"computed": co["computed"], "coalesced": co["coalesced"],
+          "clients": co["clients"],
+          "daemon_warm_p50_ms": warm["daemon_p50_ms"],
+          "inprocess_disk_p50_ms": warm["inprocess_p50_ms"],
+          "warm_ratio": warm["ratio_p50"],
+          "fallbacks": d["fallbacks"]}
+pathlib.Path(".tier1_schedd_detail.json").write_text(json.dumps(detail))
+bad = []
+if co["computed"] != 1 or co["coalesced"] < 1:
+    bad.append(f"{co['clients']} identical concurrent requests -> "
+               f"{co['computed']} computations, {co['coalesced']} coalesced "
+               f"(want 1 computation, >=1 coalesced)")
+if warm["ratio_p50"] > 2.0:
+    bad.append(f"warm-hit p50 through daemon {warm['daemon_p50_ms']:.3f}ms is "
+               f"{warm['ratio_p50']:.2f}x the in-process disk hit "
+               f"{warm['inprocess_p50_ms']:.3f}ms (cap 2.0x)")
+if bad:
+    sys.exit("; ".join(bad))
+print(f"schedd OK: {co['clients']} clients -> {co['computed']} computation "
+      f"({co['coalesced']} coalesced); warm p50 {warm['daemon_p50_ms']:.2f}ms "
+      f"vs in-process {warm['inprocess_p50_ms']:.2f}ms "
+      f"({warm['ratio_p50']:.2f}x, cap 2.0x)")
+PY
+then
+  record schedd 1 "$(cat .tier1_schedd_detail.json)"
+  rm -f .tier1_schedd_detail.json
+else
+  record schedd 0 "$(cat .tier1_schedd_detail.json 2>/dev/null || echo '{}')"
+  rm -f .tier1_schedd_detail.json
   exit 1
 fi
 

@@ -185,6 +185,20 @@ def lower_to_kernel_plan(tree: ScheduleTree, stmt_idx: Optional[int] = None,
                       degrade_reasons=tuple(prov["reasons"]) if prov else ())
 
 
+def _remote_plan(kind: str, *args, **kwargs) -> Optional[KernelPlan]:
+    """Route a kernel plan through a running schedd daemon, if any.
+
+    Returns None (plan locally) unless ``POLYTOPS_SCHEDD_SOCK`` points
+    at a live daemon — and never from inside the daemon itself or a
+    client's fallback path (:mod:`schedclient` guards both).  Remote
+    failures of any kind also return None: the daemon is an amortizer,
+    never a point of failure for planning."""
+    from .schedclient import maybe_remote_plan
+
+    plan = maybe_remote_plan(kind, *args, **kwargs)
+    return plan if isinstance(plan, KernelPlan) else None
+
+
 def _plan_memo(maxsize: int):
     """Like ``functools.lru_cache`` but degraded plans are returned
     without being pinned: a plan lowered from a fault- or deadline-
@@ -217,6 +231,9 @@ def plan_matmul(m: int, n: int, k: int,
                 strategy: str = "tensor") -> KernelPlan:
     """PolyTOPS-planned matmul: tensor-style scheduling yields the
     cache/VMEM-friendly (i, k, j) order with j vectorized (lanes)."""
+    remote = _remote_plan("matmul", m, n, k, strategy)
+    if remote is not None:
+        return remote
     scop = _matmul_scop(m, n, k)
     cfg = tensor_style()
     cfg.auto_vectorize = True
@@ -235,6 +252,9 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
     """Schedule the S = Q·Kᵀ core (q, k, d loops): contiguity puts d
     innermost (lanes) and yields the q-block × k-block band that the
     flash kernel tiles over."""
+    remote = _remote_plan("attention", seq_q, seq_k, head_dim)
+    if remote is not None:
+        return remote
     s = Scop("attn_score", params={"Q": seq_q, "K": seq_k, "D": head_dim})
     with s.loop("q", 0, "Q"):
         with s.loop("kk", 0, "K"):
@@ -258,6 +278,9 @@ def plan_mamba_scan(seq: int, d_inner: int, state: int) -> KernelPlan:
     recurrence dependence) with the d/state dims parallel inside, and the
     lowering turns that into the kernel's chunked grid — chunk size from
     the t tile, d-block from the d tile."""
+    remote = _remote_plan("mamba_scan", seq, d_inner, state)
+    if remote is not None:
+        return remote
     s = Scop("mamba_scan", params={"T": seq, "D": d_inner, "S": state})
     with s.loop("t", 0, "T"):
         with s.loop("d", 0, "D"):

@@ -32,6 +32,7 @@ per-dependence compiled-LP state is stripped on pickling (see
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -400,29 +401,146 @@ def schedule_fingerprint(sched) -> str:
 
 MEASUREMENTS_FILE = "measurements.jsonl"
 
+#: size-triggered compaction threshold for the measurement pool — the
+#: file is bounded at roughly this size plus one writer's batch
+MEASUREMENTS_MAX_BYTES = 4 << 20
 
-def record_measurements(cache: ScheduleCache, rows) -> None:
+
+def _measurement_fingerprint(row) -> Optional[tuple]:
+    """What makes two measurement rows 'the same point': one kernel ×
+    candidate config under one search-space and feature version.
+    Compaction keeps the newest row per fingerprint — a re-measurement
+    supersedes its predecessor (machine state drifts; the ranker wants
+    the current truth)."""
+    try:
+        return (str(row["kernel"]), str(row["label"]),
+                row.get("v"), row.get("fv"))
+    except (KeyError, TypeError):
+        return None
+
+
+@contextlib.contextmanager
+def _pool_lock(cache_dir: str):
+    """Advisory exclusive lock for the measurement pool, taken on a
+    *sidecar* file (``measurements.jsonl.lock``) that is never
+    replaced.  Locking the data file itself is unsound once compaction
+    publishes via ``os.replace``: a waiter that finally acquires the
+    flock holds the orphaned pre-replace inode, and anything it does
+    there (append, rewrite) is silently lost or clobbers fresh
+    appends.  The sidecar's inode is stable for the pool's lifetime,
+    so one lock serializes appenders and compactors with no
+    identity-re-check/retry dance.  Degrades to unlocked on platforms
+    without ``fcntl`` (single ``write`` on O_APPEND still keeps
+    individual batches atomic)."""
+    f = open(os.path.join(cache_dir, MEASUREMENTS_FILE + ".lock"), "a")
+    try:
+        if fcntl is not None:
+            try:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            except OSError:
+                pass
+        yield
+    finally:
+        f.close()                     # closing drops the flock
+
+
+def compact_measurements(cache: ScheduleCache,
+                         max_bytes: int = MEASUREMENTS_MAX_BYTES,
+                         force: bool = False) -> bool:
+    """Rewrite the pool keeping the newest row per fingerprint.
+
+    No-op unless the file exceeds ``max_bytes`` (or ``force``).  The
+    rewrite holds the pool's sidecar lock (see :func:`_pool_lock`),
+    writes a temp file in the same directory, and publishes with
+    ``os.replace`` — readers see the old file or the new one, never a
+    partial state, and concurrent appenders (who take the same lock)
+    land either before the rewrite (and are carried into it) or after
+    it (into the fresh file); no append is ever stranded in the
+    orphaned pre-compaction inode.  Rows whose fingerprint cannot be
+    computed (foreign/corrupt) are preserved in order rather than
+    dropped.  Returns True when a rewrite was published; disk trouble
+    returns False and leaves the pool untouched."""
+    if not cache.disk:
+        return False
+    path = os.path.join(cache.dir, MEASUREMENTS_FILE)
+    try:
+        fault_point("cache.write")
+        with _pool_lock(cache.dir):
+            with open(path, "a+") as f:
+                size = os.fstat(f.fileno()).st_size
+                if size <= max_bytes and not force:
+                    return False
+                f.seek(0)
+                keep: Dict[Any, str] = {}
+                extras = []           # unfingerprintable rows, in order
+                for ln in f:
+                    ln = ln.strip()
+                    if not ln:
+                        continue
+                    try:
+                        row = json.loads(ln)
+                    except json.JSONDecodeError:
+                        continue      # torn tail line from a dying writer
+                    fp = _measurement_fingerprint(row)
+                    if fp is None:
+                        extras.append(ln)
+                        continue
+                    # del+reinsert keeps dict order = last-occurrence
+                    # order, so the compacted file preserves the pool's
+                    # recency ordering (load_measurements' tail window
+                    # still sees the newest rows last)
+                    keep.pop(fp, None)
+                    keep[fp] = ln
+            fd, tmp = tempfile.mkstemp(dir=cache.dir,
+                                       prefix=".measurements-",
+                                       suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as out:
+                    for ln in extras:
+                        out.write(ln + "\n")
+                    for ln in keep.values():
+                        out.write(ln + "\n")
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        return True
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception:
+        return False
+
+
+def record_measurements(cache: ScheduleCache, rows, *,
+                        max_bytes: int = MEASUREMENTS_MAX_BYTES) -> None:
     """Append measurement triples (plain dicts) to the cache's pool.
 
-    Safe under concurrent writers: one ``write`` call per batch on an
-    O_APPEND descriptor keeps lines atomic on POSIX, and an advisory
-    ``flock`` (when available) serializes whole batches so readers
-    never interleave two tuners' rows.  Disk failures degrade to "rows
-    not recorded" — the search result is unaffected."""
+    Safe under concurrent writers: batches append under the pool's
+    sidecar lock (see :func:`_pool_lock`), which also serializes them
+    against compaction's ``os.replace`` — a batch always lands in the
+    live file, never the orphaned pre-compaction inode.  One ``write``
+    call per batch on an O_APPEND descriptor additionally keeps lines
+    atomic on POSIX even where ``flock`` is unavailable.  When the
+    appended pool crosses ``max_bytes``, :func:`compact_measurements`
+    bounds it (newest row per fingerprint).  Disk failures degrade to
+    "rows not recorded" — the search result is unaffected."""
     if not rows or not cache.disk:
         return
     try:
         fault_point("cache.write")
         os.makedirs(cache.dir, exist_ok=True)
         blob = "".join(json.dumps(r, sort_keys=True) + "\n" for r in rows)
-        with open(os.path.join(cache.dir, MEASUREMENTS_FILE), "a") as f:
-            if fcntl is not None:
-                try:
-                    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
-                except OSError:
-                    pass          # exotic fs without flock: O_APPEND only
-            f.write(blob)
-            f.flush()
+        path = os.path.join(cache.dir, MEASUREMENTS_FILE)
+        with _pool_lock(cache.dir):
+            with open(path, "a") as f:
+                f.write(blob)
+                f.flush()
+                size = os.fstat(f.fileno()).st_size
+        if size > max_bytes:
+            compact_measurements(cache, max_bytes=max_bytes)
     except (KeyboardInterrupt, SystemExit):
         raise
     except Exception:

@@ -1,0 +1,553 @@
+"""Scheduling-service client: wire protocol + resilient fallback client.
+
+``repro.launch.schedd`` turns the hardened scheduling pipeline (PR 6's
+ladder, deadlines and crash-safe caches) into a long-lived Unix-socket
+*service* so concurrent compiles from many client processes amortize one
+scheduler instead of repeating it.  This module is everything a client
+(or the daemon itself) needs to speak to it:
+
+* **Wire protocol** — length-prefixed pickle frames
+  (``MAGIC | uint32 length | pickle``) over a Unix stream socket.  Each
+  connection opens with a version handshake carrying
+  ``PROTOCOL_VERSION`` plus the three cache-compatibility versions
+  (``schedcache.CACHE_VERSION``, ``schedtree.TREE_VERSION``,
+  ``autotune.SPACE_VERSION``) — a stale peer on either side is rejected
+  with a typed ``version_skew`` response before any request is served,
+  so a half-upgraded machine can never exchange incompatible Schedule
+  pickles.  Pickle over the wire is safe here for the same reason the
+  on-disk schedule cache is: the socket lives in a user-owned directory
+  (mode 0o600) and both ends are the same codebase on the same host.
+
+* **Typed errors** — every way a request can fail maps to one exception
+  class (:class:`Overloaded`, :class:`VersionSkew`,
+  :class:`ProtocolError`, :class:`DaemonUnavailable`,
+  :class:`RemoteError`), mirroring the daemon's wire-level error kinds.
+
+* **The resilient client** — :class:`SchedClient` wraps every request in
+  bounded retry-with-backoff and a circuit breaker, propagates the
+  caller's :class:`~repro.core.resilience.Deadline` onto the wire
+  (``deadline_s`` = remaining budget; the daemon resumes it server-side)
+  and clips the socket timeout to it, and **falls back in-process** when
+  the daemon is down (socket ENOENT / connection refused), overloaded
+  (typed ``Overloaded`` load-shedding responses), version-skewed, or
+  misbehaving: ``schedule`` falls back to the degradation ladder over
+  ``cached_schedule_scop``, ``autotune`` to the local tuner, ``plan`` to
+  the local ``akg`` planners.  The public API therefore *never* raises
+  for daemon trouble — the worst case is the same in-process behaviour
+  the codebase had before the daemon existed, with the fallback counted
+  in :class:`ClientStats`.
+
+The module-level :func:`maybe_client` / :func:`maybe_remote_plan`
+helpers are the integration seam: ``akg``'s plan functions and
+``launch/serve.py`` route through the daemon exactly when
+``$POLYTOPS_SCHEDD_SOCK`` names a socket, and never from inside the
+daemon's own process (:func:`mark_server_process` guards recursion).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import struct
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Optional
+
+from .resilience import Deadline
+
+#: bump on any incompatible change to the frame format or message shapes
+PROTOCOL_VERSION = 1
+MAGIC = b"PTSD"
+_HEADER = struct.Struct(">I")
+HEADER_LEN = len(MAGIC) + _HEADER.size
+#: hard cap on a single frame — a garbage length prefix must not make
+#: either side try to allocate gigabytes
+MAX_FRAME_BYTES = 64 << 20
+
+#: environment variable naming the daemon socket; unset → no daemon
+SOCKET_ENV = "POLYTOPS_SCHEDD_SOCK"
+
+
+def wire_versions() -> Dict[str, int]:
+    """The four versions exchanged in the handshake.  Imported lazily:
+    the client is reachable from ``akg`` and must stay cheap to load."""
+    from .autotune import SPACE_VERSION
+    from .schedcache import CACHE_VERSION
+    from .schedtree import TREE_VERSION
+
+    return {"proto": PROTOCOL_VERSION, "cache": CACHE_VERSION,
+            "tree": TREE_VERSION, "space": SPACE_VERSION}
+
+
+def version_skew(theirs: Dict[str, Any]) -> Optional[str]:
+    """Human-readable mismatch description, or None when compatible."""
+    ours = wire_versions()
+    bad = [f"{k}: ours={ours[k]} theirs={theirs.get(k)!r}"
+           for k in ours if theirs.get(k) != ours[k]]
+    return "; ".join(bad) or None
+
+
+# ---------------------------------------------------------------------------
+# typed errors
+# ---------------------------------------------------------------------------
+
+
+class SchedClientError(RuntimeError):
+    """Base of every typed daemon-communication error."""
+
+
+class DaemonUnavailable(SchedClientError):
+    """No daemon: socket missing, connection refused/reset, timeout."""
+
+
+class ProtocolError(SchedClientError):
+    """Malformed wire data: bad magic, truncated frame, unpicklable
+    payload, or a ``bad_frame``/``bad_request`` response."""
+
+
+class Overloaded(SchedClientError):
+    """The daemon load-shed this request (typed ``overloaded`` reply)."""
+
+
+class VersionSkew(SchedClientError):
+    """Handshake rejected: the peer runs incompatible cache/tree/space
+    versions.  Not transient — the breaker opens immediately."""
+
+
+class RemoteError(SchedClientError):
+    """The daemon failed serving the request (typed ``internal`` /
+    ``deadline`` reply); carries the wire error kind."""
+
+    def __init__(self, kind: str, detail: str = ""):
+        super().__init__(f"daemon error [{kind}]"
+                         + (f": {detail}" if detail else ""))
+        self.kind = kind
+        self.detail = detail
+
+
+def response_error(resp: Dict[str, Any]) -> SchedClientError:
+    """Map a ``{"ok": False, ...}`` response to its typed exception."""
+    kind = str(resp.get("error", "internal"))
+    detail = str(resp.get("detail", ""))
+    if kind == "overloaded":
+        return Overloaded(detail or "daemon load-shed the request")
+    if kind == "version_skew":
+        return VersionSkew(detail or "incompatible peer versions")
+    if kind in ("bad_frame", "bad_request"):
+        return ProtocolError(f"{kind}: {detail}")
+    return RemoteError(kind, detail)
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+
+def encode_frame(obj: Any) -> bytes:
+    body = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(body) > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame too large: {len(body)} B")
+    return MAGIC + _HEADER.pack(len(body)) + body
+
+
+def send_frame(sock: socket.socket, obj: Any) -> None:
+    sock.sendall(encode_frame(obj))
+
+
+def _recv_exact(sock: socket.socket, n: int, *, eof_ok: bool) -> Optional[bytes]:
+    """Exactly ``n`` bytes, or None on clean EOF at a frame boundary
+    (``eof_ok``).  EOF mid-read is always a truncated frame."""
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if not buf and eof_ok:
+                return None
+            raise ProtocolError(
+                f"truncated frame: got {len(buf)} of {n} bytes before EOF")
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock: socket.socket, *, eof_ok: bool = False,
+               max_bytes: int = MAX_FRAME_BYTES) -> Any:
+    """One decoded frame; None on clean EOF when ``eof_ok``.  Raises
+    :class:`ProtocolError` on garbage (bad magic, oversized length,
+    truncation, unpicklable body) — never anything untyped."""
+    head = _recv_exact(sock, HEADER_LEN, eof_ok=eof_ok)
+    if head is None:
+        return None
+    if head[:len(MAGIC)] != MAGIC:
+        raise ProtocolError(f"bad magic {head[:len(MAGIC)]!r}")
+    (length,) = _HEADER.unpack(head[len(MAGIC):])
+    if length > max_bytes:
+        raise ProtocolError(f"frame length {length} exceeds {max_bytes} cap")
+    body = _recv_exact(sock, length, eof_ok=False)
+    try:
+        return pickle.loads(body)
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception as e:
+        raise ProtocolError(f"unpicklable frame body: "
+                            f"{type(e).__name__}: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker with a single half-open probe.
+
+    ``threshold`` whole-call failures open the circuit for ``reset_s``;
+    after that one probe call is let through — success closes the
+    circuit, failure re-opens it for another ``reset_s``.  While open,
+    :meth:`allow` returns False and the client skips the daemon
+    entirely (straight to the in-process fallback) — a dead daemon
+    costs one failed ``connect`` per reset window, not per request."""
+
+    def __init__(self, threshold: int = 3, reset_s: float = 5.0,
+                 clock=time.monotonic):
+        self.threshold = threshold
+        self.reset_s = reset_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.failures = 0
+        self.opens = 0
+        self._opened_at: Optional[float] = None
+        self._probing = False
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            if self._opened_at is None:
+                return "closed"
+            return "half-open" if self._probing else "open"
+
+    def allow(self) -> bool:
+        with self._lock:
+            if self._opened_at is None:
+                return True
+            if self._probing:
+                return False
+            if self._clock() - self._opened_at >= self.reset_s:
+                self._probing = True    # one probe through
+                return True
+            return False
+
+    def success(self) -> None:
+        with self._lock:
+            self.failures = 0
+            self._opened_at = None
+            self._probing = False
+
+    def failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            if self._probing or self.failures >= self.threshold:
+                self._trip_locked()
+
+    def trip(self) -> None:
+        """Open immediately (version skew: retrying cannot help)."""
+        with self._lock:
+            self._trip_locked()
+
+    def _trip_locked(self) -> None:
+        if self._opened_at is None or self._probing:
+            self.opens += 1
+        self._opened_at = self._clock()
+        self._probing = False
+
+
+# ---------------------------------------------------------------------------
+# the client
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ClientStats:
+    """Every client-side outcome, counted (same spirit as CacheStats)."""
+    remote_ok: int = 0          # requests answered by the daemon
+    remote_errors: int = 0      # failed attempts (before retry/fallback)
+    retries: int = 0
+    fallbacks: int = 0          # requests served by the in-process path
+    overloaded: int = 0         # typed load-shed replies received
+    version_skew: int = 0
+    breaker_skips: int = 0      # requests that never tried the daemon
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)
+
+
+class SchedClient:
+    """Resilient client for the ``repro.launch.schedd`` daemon.
+
+    The public entry points (:meth:`schedule`, :meth:`autotune`,
+    :meth:`plan`) are *total*: any daemon trouble — down, overloaded,
+    version-skewed, garbage on the wire, deadline exhausted before the
+    request could even be sent — degrades to the in-process path and is
+    counted in :attr:`stats`.  :meth:`remote_plan`, :meth:`ping`,
+    :meth:`daemon_stats` and :meth:`shutdown` raise typed errors
+    instead, for callers that need to observe the daemon itself.
+
+    ``cache`` names the :class:`~repro.core.schedcache.ScheduleCache`
+    the fallback path uses (default: the process-global one), so tests
+    and the chaos harness can isolate fallback state from the daemon's
+    pool.  ``versions`` overrides the handshake versions (chaos: a
+    deliberately stale peer).
+    """
+
+    def __init__(self, sock_path: Optional[str] = None, *,
+                 connect_timeout: float = 1.0, request_timeout: float = 120.0,
+                 retries: int = 1, backoff_s: float = 0.05,
+                 breaker_threshold: int = 3, breaker_reset_s: float = 5.0,
+                 cache=None, versions: Optional[Dict[str, int]] = None):
+        self.sock_path = sock_path or daemon_socket_path()
+        self.connect_timeout = connect_timeout
+        self.request_timeout = request_timeout
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.cache = cache
+        self._versions = versions
+        self.breaker = CircuitBreaker(breaker_threshold, breaker_reset_s)
+        self.stats = ClientStats()
+
+    # -- low-level ---------------------------------------------------------
+
+    def _hello(self) -> Dict[str, Any]:
+        return {"op": "hello", **(self._versions or wire_versions())}
+
+    def _request(self, payload: Dict[str, Any],
+                 timeout: float) -> Dict[str, Any]:
+        """One connection, one handshake, one request/response."""
+        if not self.sock_path:
+            raise DaemonUnavailable("no daemon socket configured")
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        try:
+            sock.settimeout(min(self.connect_timeout, timeout))
+            try:
+                sock.connect(self.sock_path)
+            except OSError as e:
+                raise DaemonUnavailable(
+                    f"connect {self.sock_path!r}: {e}") from e
+            sock.settimeout(timeout)
+            try:
+                send_frame(sock, self._hello())
+                hello = recv_frame(sock)
+                if hello is None:
+                    raise ProtocolError("daemon closed during handshake")
+                if not hello.get("ok"):
+                    raise response_error(hello)
+                send_frame(sock, payload)
+                resp = recv_frame(sock)
+                if resp is None:
+                    raise ProtocolError("daemon closed mid-request")
+                if not resp.get("ok"):
+                    raise response_error(resp)
+                return resp
+            except socket.timeout as e:
+                raise DaemonUnavailable(
+                    f"daemon timed out after {timeout:.3f}s") from e
+            except (BrokenPipeError, ConnectionError) as e:
+                raise DaemonUnavailable(f"connection died: {e}") from e
+        finally:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _call(self, payload: Dict[str, Any],
+              deadline: Optional[Deadline] = None) -> Dict[str, Any]:
+        """Breaker + bounded retry-with-backoff around :meth:`_request`.
+        Raises the last typed error when the daemon could not serve the
+        request; the public API turns that into the local fallback."""
+        if not self.breaker.allow():
+            self.stats.breaker_skips += 1
+            raise DaemonUnavailable("circuit breaker open")
+        delay = self.backoff_s
+        last: Optional[SchedClientError] = None
+        for attempt in range(self.retries + 1):
+            timeout = self.request_timeout
+            if deadline is not None and deadline.budget_s is not None:
+                rem = deadline.remaining()
+                if rem <= 0:
+                    self.breaker.failure()
+                    raise DaemonUnavailable(
+                        "deadline exhausted before the request was sent")
+                timeout = min(timeout, max(rem, 1e-3))
+                payload = dict(payload, deadline_s=rem)
+            try:
+                resp = self._request(payload, timeout)
+                self.breaker.success()
+                self.stats.remote_ok += 1
+                return resp
+            except VersionSkew as e:
+                # not transient: no retry, breaker opens immediately so
+                # every later request goes straight to the fallback
+                self.stats.version_skew += 1
+                self.stats.remote_errors += 1
+                self.breaker.trip()
+                raise
+            except Overloaded as e:
+                self.stats.overloaded += 1
+                self.stats.remote_errors += 1
+                last = e
+            except (DaemonUnavailable, ProtocolError, RemoteError) as e:
+                self.stats.remote_errors += 1
+                last = e
+            if attempt < self.retries:
+                self.stats.retries += 1
+                nap = delay
+                if deadline is not None and deadline.budget_s is not None:
+                    nap = min(nap, max(deadline.remaining(), 0.0))
+                time.sleep(nap)
+                delay *= 2
+        self.breaker.failure()
+        assert last is not None
+        raise last
+
+    def _fallback_cache(self):
+        from .schedcache import global_cache
+        return self.cache if self.cache is not None else global_cache()
+
+    # -- public API --------------------------------------------------------
+
+    def schedule(self, scop, config=None, engine: str = "lex",
+                 with_tree: bool = False,
+                 deadline: Optional[Deadline] = None, **extra):
+        """Schedule ``scop`` through the daemon, falling back to the
+        in-process degradation ladder over ``cached_schedule_scop`` —
+        total, like everything the ladder serves."""
+        payload = {"op": "schedule", "scop": scop, "config": config,
+                   "engine": engine, "with_tree": bool(with_tree),
+                   "extra": dict(extra)}
+        try:
+            return self._call(payload, deadline)["result"]
+        except (SchedClientError, OSError):
+            self.stats.fallbacks += 1
+            from .resilience import schedule_with_ladder
+            return schedule_with_ladder(
+                scop, config, engine=engine, deadline=deadline,
+                cache=self._fallback_cache(), with_tree=with_tree, **extra)
+
+    def autotune(self, scop, *, deadline: Optional[Deadline] = None,
+                 **kwargs):
+        """Kernel-specific autotuning through the daemon (one shared
+        winner store + measurement pool), falling back to the local
+        tuner on daemon trouble."""
+        payload = {"op": "autotune", "scop": scop, "kwargs": dict(kwargs)}
+        try:
+            return self._call(payload, deadline)["result"]
+        except (SchedClientError, OSError):
+            self.stats.fallbacks += 1
+            from .autotune import autotune as local_autotune
+            return local_autotune(scop, deadline=deadline,
+                                  cache=self.cache, **kwargs)
+
+    def remote_plan(self, kind: str, *args,
+                    deadline: Optional[Deadline] = None, **kwargs):
+        """A kernel plan from the daemon, raising typed errors on any
+        failure — the ``akg`` hook treats a raise as 'plan locally'."""
+        payload = {"op": "plan", "kind": kind, "args": list(args),
+                   "kwargs": dict(kwargs)}
+        return self._call(payload, deadline)["result"]
+
+    def plan(self, kind: str, *args, **kwargs):
+        """A kernel plan, falling back to the local ``akg`` planners."""
+        try:
+            return self.remote_plan(kind, *args, **kwargs)
+        except (SchedClientError, OSError):
+            self.stats.fallbacks += 1
+            with local_only():
+                return _local_plan(kind, *args, **kwargs)
+
+    def ping(self, timeout: float = 2.0) -> Dict[str, Any]:
+        return self._request({"op": "ping"}, timeout)
+
+    def daemon_stats(self, timeout: float = 5.0) -> Dict[str, Any]:
+        return self._request({"op": "stats"}, timeout)["result"]
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        """Ask the daemon to exit cleanly (bench/test teardown)."""
+        try:
+            self._request({"op": "shutdown"}, timeout)
+        except (DaemonUnavailable, ProtocolError):
+            pass          # already gone / died while answering
+
+
+# ---------------------------------------------------------------------------
+# integration seam: env-configured singleton + the akg plan hook
+# ---------------------------------------------------------------------------
+
+_SERVER_PROCESS = False
+_LOCAL_ONLY = threading.local()
+_DEFAULT: Optional[SchedClient] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def mark_server_process() -> None:
+    """Called by the daemon at startup: its own plan/schedule work must
+    never route back through a client (recursion guard)."""
+    global _SERVER_PROCESS
+    _SERVER_PROCESS = True
+
+
+@contextmanager
+def local_only():
+    """Force in-process planning inside the block — used by the client's
+    own fallback so ``akg``'s remote hook cannot re-enter the daemon."""
+    prev = getattr(_LOCAL_ONLY, "active", False)
+    _LOCAL_ONLY.active = True
+    try:
+        yield
+    finally:
+        _LOCAL_ONLY.active = prev
+
+
+def daemon_socket_path() -> Optional[str]:
+    return os.environ.get(SOCKET_ENV) or None
+
+
+def maybe_client() -> Optional[SchedClient]:
+    """The process-wide client when ``$POLYTOPS_SCHEDD_SOCK`` is set,
+    else None.  Always None inside the daemon's own process."""
+    if _SERVER_PROCESS:
+        return None
+    path = daemon_socket_path()
+    if not path:
+        return None
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None or _DEFAULT.sock_path != path:
+            _DEFAULT = SchedClient(path)
+        return _DEFAULT
+
+
+def maybe_remote_plan(kind: str, *args, **kwargs):
+    """The ``akg`` hook: a daemon-planned kernel when one is configured
+    and reachable, else None (caller plans in-process).  Never raises —
+    the breaker makes repeated failures cost one check, not one
+    connect, per request."""
+    if getattr(_LOCAL_ONLY, "active", False):
+        return None
+    client = maybe_client()
+    if client is None:
+        return None
+    try:
+        return client.remote_plan(kind, *args, **kwargs)
+    except (SchedClientError, OSError):
+        return None
+
+
+def _local_plan(kind: str, *args, **kwargs):
+    from . import akg
+
+    planners = {"matmul": akg.plan_matmul, "attention": akg.plan_attention,
+                "mamba_scan": akg.plan_mamba_scan}
+    if kind not in planners:
+        raise ValueError(f"unknown plan kind {kind!r}; "
+                         f"known: {', '.join(sorted(planners))}")
+    return planners[kind](*args, **kwargs)

@@ -1,0 +1,612 @@
+"""schedd: the fault-tolerant Unix-socket scheduling daemon.
+
+    PYTHONPATH=src python -m repro.launch.schedd \
+        --sock /run/user/$UID/schedd.sock [--cache-dir DIR] [--chaos]
+
+The paper puts PolyTOPS *inside* a production compiler, where compiles
+arrive concurrently from many clients and must be amortized, not
+repeated.  ``schedd`` is that shape: a long-lived process owning one
+:class:`~repro.core.schedcache.ScheduleCache` pool, serving
+``schedule`` / ``autotune`` / ``plan`` requests over the wire protocol
+in :mod:`repro.core.schedclient`.  Guarantees:
+
+* **Request coalescing** — concurrent identical requests (same
+  ``schedule_key`` / autotune-space digest / plan signature) share ONE
+  in-flight computation: the first arrival computes, the rest block on
+  its flight and receive the identical encoded response.  Warm
+  non-degraded responses are additionally kept as pre-encoded frames,
+  so a warm hit is one ``sendall`` of cached bytes — no re-pickling.
+
+* **Deadline propagation** — a request's ``deadline_s`` (the client's
+  remaining budget) resumes as a server-side
+  :class:`~repro.core.resilience.Deadline` threaded into the ladder /
+  autotuner, so the end-to-end budget covers the wire hop too.
+
+* **Load shedding** — when ``max_inflight`` distinct computations are
+  already running, new *keyed work* is refused with a typed
+  ``overloaded`` response (the client's cue to fall back in-process);
+  coalescible requests, frame-cache hits, ping and stats are always
+  served — shedding protects the solver, not the socket.
+
+* **Version handshake** — every connection opens with the four-version
+  hello (:func:`repro.core.schedclient.wire_versions`); a skewed peer
+  is rejected with ``version_skew`` before any pickle of a Schedule is
+  exchanged.
+
+* **Crash recovery** — accepted autotune work is journalled
+  (begin/done rows, flock'd O_APPEND like the measurement pool) so a
+  ``kill -9`` mid-request loses at most the in-flight measurement:
+  every persistent store the daemon touches (schedule pickles, the
+  winner store, ``measurements.jsonl``) already publishes atomically
+  (PR 6), and on restart the journal's begin-without-done rows are
+  counted as ``journal_recovered`` and cleared.  Degraded results are
+  never persisted and never frame-cached — a transient fault cannot
+  poison future clients.
+
+* **Hostile-socket robustness** — per-connection recv timeouts drop
+  slow-loris peers; bad magic, truncated frames, oversized lengths and
+  unpicklable bodies get a best-effort typed ``bad_frame`` reply and a
+  closed connection; no client behaviour can crash the daemon.
+
+``--chaos`` enables the test-only ``test_delay_s`` request field (the
+chaos sweep and bench use it to hold a computation open long enough to
+race a second client or a ``kill -9`` against it).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import signal
+import socket
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core import schedclient as wire
+from ..core.resilience import Deadline, provenance, schedule_with_ladder
+from ..core.schedcache import ScheduleCache, schedule_key, scop_fingerprint
+
+try:
+    import fcntl
+except ImportError:            # non-POSIX: O_APPEND keeps lines atomic
+    fcntl = None
+
+JOURNAL_FILE = "schedd_journal.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# autotune journal
+# ---------------------------------------------------------------------------
+
+
+class AutotuneJournal:
+    """Append-only begin/done journal for accepted autotune work.
+
+    The journal exists for *observability after a crash*, not for
+    replay: every store autotune writes (winner pickles, the
+    measurement pool) publishes atomically, so a ``kill -9``
+    mid-request can only lose the in-flight measurement — the journal's
+    begin-without-done rows say exactly which work that was.  Appends
+    reuse the measurement pool's discipline (one ``write`` on an
+    O_APPEND handle under an advisory flock); torn tail lines from a
+    dying writer are tolerated on read.  Disk trouble degrades to
+    "not journalled" — it never fails the request."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def _append(self, row: Dict[str, Any]) -> None:
+        try:
+            os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            with open(self.path, "a") as f:
+                if fcntl is not None:
+                    try:
+                        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                    except OSError:
+                        pass
+                f.write(json.dumps(row, sort_keys=True) + "\n")
+                f.flush()
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception:
+            pass
+
+    def begin(self, key: str) -> None:
+        self._append({"ev": "begin", "key": key, "pid": os.getpid(),
+                      "t": time.time()})
+
+    def done(self, key: str) -> None:
+        self._append({"ev": "done", "key": key})
+
+    def recover(self) -> List[str]:
+        """Keys begun but never finished by a previous daemon (the work
+        a crash interrupted).  Clears the journal atomically; returns []
+        on any disk trouble."""
+        orphans: List[str] = []
+        try:
+            with open(self.path) as f:
+                begun: Dict[str, int] = {}
+                for ln in f:
+                    ln = ln.strip()
+                    if not ln:
+                        continue
+                    try:
+                        row = json.loads(ln)
+                    except json.JSONDecodeError:
+                        continue          # torn tail line from a kill -9
+                    key = str(row.get("key"))
+                    if row.get("ev") == "begin":
+                        begun[key] = begun.get(key, 0) + 1
+                    elif row.get("ev") == "done" and begun.get(key):
+                        begun[key] -= 1
+                orphans = sorted(k for k, n in begun.items() if n > 0)
+            import tempfile
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
+                                       suffix=".tmp")
+            os.close(fd)
+            os.replace(tmp, self.path)    # atomically truncate
+        except FileNotFoundError:
+            pass
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception:
+            return []
+        return orphans
+
+
+# ---------------------------------------------------------------------------
+# the daemon
+# ---------------------------------------------------------------------------
+
+
+class _Flight:
+    """One in-flight keyed computation; waiters block on the event and
+    read the identical encoded response frame."""
+
+    __slots__ = ("event", "frame")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.frame: Optional[bytes] = None
+
+
+class _Shutdown(Exception):
+    pass
+
+
+class SchedDaemon:
+    """See the module docstring.  Thread-per-connection; all shared
+    state (the flight table, the frame cache, counters) is mutated
+    under ``_lock``; the ScheduleCache itself relies on the GIL plus
+    atomic on-disk publishes, same as the multi-process case."""
+
+    def __init__(self, sock_path: str, cache_dir: Optional[str] = None, *,
+                 max_inflight: int = 8, conn_timeout: float = 10.0,
+                 frame_cache_cap: int = 256, chaos: bool = False):
+        self.sock_path = sock_path
+        self.cache = ScheduleCache(cache_dir=cache_dir)
+        self.max_inflight = max_inflight
+        self.conn_timeout = conn_timeout
+        self.frame_cache_cap = frame_cache_cap
+        self.chaos = chaos
+        self.journal = (AutotuneJournal(os.path.join(self.cache.dir,
+                                                     JOURNAL_FILE))
+                        if self.cache.disk else None)
+        self.recovered: List[str] = (self.journal.recover()
+                                     if self.journal else [])
+        self._lock = threading.Lock()
+        self._flights: Dict[Any, _Flight] = {}
+        self._frames: Dict[Any, bytes] = {}
+        self._listener: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.counters: Dict[str, int] = {
+            "requests": 0, "computed": 0, "coalesced": 0, "frame_hits": 0,
+            "shed": 0, "bad_frames": 0, "version_skew": 0, "slow_loris": 0,
+            "degraded": 0, "errors": 0,
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        d = os.path.dirname(self.sock_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        try:
+            os.unlink(self.sock_path)     # stale socket from a kill -9
+        except FileNotFoundError:
+            pass
+        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._listener.bind(self.sock_path)
+        os.chmod(self.sock_path, 0o600)   # same-user peers only
+        self._listener.listen(64)
+        self._listener.settimeout(0.2)
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="schedd-accept", daemon=True)
+        self._accept_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        try:
+            os.unlink(self.sock_path)
+        except OSError:
+            pass
+
+    def wait(self) -> None:
+        while not self._stop.wait(timeout=0.5):
+            pass
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            threading.Thread(target=self._handle_conn, args=(conn,),
+                             daemon=True).start()
+
+    # -- connection handling ----------------------------------------------
+
+    def _handle_conn(self, conn: socket.socket) -> None:
+        conn.settimeout(self.conn_timeout)
+        try:
+            hello = wire.recv_frame(conn, eof_ok=True)
+            if hello is None:
+                return
+            if not isinstance(hello, dict) or hello.get("op") != "hello":
+                self._count("bad_frames")
+                wire.send_frame(conn, {"ok": False, "error": "bad_frame",
+                                       "detail": "expected hello"})
+                return
+            skew = wire.version_skew(hello)
+            if skew:
+                self._count("version_skew")
+                wire.send_frame(conn, {"ok": False, "error": "version_skew",
+                                       "detail": skew})
+                return
+            wire.send_frame(conn, {"ok": True, "op": "hello",
+                                   "pid": os.getpid(),
+                                   **wire.wire_versions()})
+            while True:
+                req = wire.recv_frame(conn, eof_ok=True)
+                if req is None:
+                    return
+                self._count("requests")
+                if not isinstance(req, dict):
+                    self._count("bad_frames")
+                    wire.send_frame(conn, {
+                        "ok": False, "error": "bad_frame",
+                        "detail": f"request is {type(req).__name__}, "
+                                  f"not a dict"})
+                    continue
+                # local_only: the handlers call into akg, whose remote
+                # hook must never route the daemon's own work back to a
+                # daemon (ourselves, for the in-process test harness)
+                with wire.local_only():
+                    frame = self._dispatch(req)
+                conn.sendall(frame)
+        except _Shutdown as e:
+            try:
+                conn.sendall(e.args[0])    # the "bye" frame
+            except OSError:
+                pass
+            self._stop.set()
+        except wire.ProtocolError as e:
+            self._count("bad_frames")
+            try:          # best effort: the peer may already be gone
+                wire.send_frame(conn, {"ok": False, "error": "bad_frame",
+                                       "detail": str(e)})
+            except OSError:
+                pass
+        except socket.timeout:
+            self._count("slow_loris")     # stalled peer: drop it
+        except OSError:
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _count(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + n
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch(self, req: Dict[str, Any]) -> bytes:
+        op = req.get("op")
+        if op == "ping":
+            return wire.encode_frame({"ok": True, "op": "pong",
+                                      "pid": os.getpid()})
+        if op == "stats":
+            return wire.encode_frame({"ok": True, "result": self.stats()})
+        if op == "shutdown":
+            frame = wire.encode_frame({"ok": True, "op": "bye"})
+            raise _Shutdown(frame)        # _handle_conn sets the stop flag
+        handlers = {"schedule": self._handle_schedule,
+                    "autotune": self._handle_autotune,
+                    "plan": self._handle_plan}
+        if op not in handlers:
+            return wire.encode_frame({"ok": False, "error": "bad_request",
+                                      "detail": f"unknown op {op!r}"})
+        try:
+            return handlers[op](req)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:     # a handler bug must not kill the daemon
+            self._count("errors")
+            return wire.encode_frame({
+                "ok": False, "error": "internal",
+                "detail": f"{type(e).__name__}: {e}"})
+
+    def _deadline(self, req: Dict[str, Any]) -> Optional[Deadline]:
+        budget = req.get("deadline_s")
+        return Deadline(float(budget)) if budget is not None else None
+
+    def _test_delay(self, req: Dict[str, Any]) -> None:
+        """Chaos/bench-only hold: lets a harness keep a computation
+        in-flight long enough to race a second client or a kill -9."""
+        if self.chaos and req.get("test_delay_s"):
+            time.sleep(float(req["test_delay_s"]))
+
+    # -- coalescing core ---------------------------------------------------
+
+    def _serve_keyed(self, key: Optional[Any], compute,
+                     deadline: Optional[Deadline]) -> bytes:
+        """Coalesce + shed + frame-cache around one keyed computation.
+
+        ``compute()`` returns ``(response_dict, cacheable)``; the
+        encoded frame is shared with every coalesced waiter and, when
+        cacheable (non-degraded success), kept for warm hits."""
+        owner_flight: Optional[_Flight] = None
+        if key is not None:
+            with self._lock:
+                cached = self._frames.get(key)
+                if cached is not None:
+                    self.counters["frame_hits"] += 1
+                    return cached
+                existing = self._flights.get(key)
+                if existing is not None:
+                    self.counters["coalesced"] += 1
+                else:
+                    if len(self._flights) >= self.max_inflight:
+                        self.counters["shed"] += 1
+                        return wire.encode_frame({
+                            "ok": False, "error": "overloaded",
+                            "detail": f"{len(self._flights)} computations "
+                                      f"in flight (cap {self.max_inflight})"})
+                    owner_flight = _Flight()
+                    self._flights[key] = owner_flight
+            if owner_flight is None:
+                budget = None
+                if deadline is not None and deadline.budget_s is not None:
+                    budget = max(deadline.remaining(), 0.0)
+                if not existing.event.wait(
+                        timeout=budget if budget is not None else 600.0):
+                    return wire.encode_frame({
+                        "ok": False, "error": "deadline",
+                        "detail": "coalesced wait exceeded the budget"})
+                assert existing.frame is not None
+                return existing.frame
+        else:
+            with self._lock:
+                if len(self._flights) >= self.max_inflight:
+                    self.counters["shed"] += 1
+                    return wire.encode_frame({
+                        "ok": False, "error": "overloaded",
+                        "detail": f"{len(self._flights)} computations "
+                                  f"in flight (cap {self.max_inflight})"})
+
+        self._count("computed")
+        try:
+            resp, cacheable = compute()
+            # encode inside the try: an unencodable result must not
+            # leave coalesced waiters blocked on a never-set flight
+            frame = wire.encode_frame(resp)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            self._count("errors")
+            resp, cacheable = ({"ok": False, "error": "internal",
+                                "detail": f"{type(e).__name__}: {e}"}, False)
+            frame = wire.encode_frame(resp)
+        if owner_flight is not None:
+            with self._lock:
+                self._flights.pop(key, None)
+                if cacheable and resp.get("ok"):
+                    if len(self._frames) >= self.frame_cache_cap:
+                        self._frames.pop(next(iter(self._frames)))
+                    self._frames[key] = frame
+            owner_flight.frame = frame
+            owner_flight.event.set()
+        return frame
+
+    # -- handlers ----------------------------------------------------------
+
+    def _handle_schedule(self, req: Dict[str, Any]) -> bytes:
+        from ..core.config import SchedulerConfig
+
+        scop = req["scop"]
+        config = req.get("config") or SchedulerConfig()
+        engine = req.get("engine", "lex")
+        with_tree = bool(req.get("with_tree", False))
+        extra = dict(req.get("extra") or {})
+        deadline = self._deadline(req)
+        try:
+            skey = schedule_key(scop, config, engine, extra=extra)
+        except Exception:
+            skey = None
+        key = ("schedule", skey, with_tree) if skey is not None else None
+
+        def compute() -> Tuple[Dict[str, Any], bool]:
+            self._test_delay(req)
+            sched = schedule_with_ladder(
+                scop, config, engine=engine, deadline=deadline,
+                cache=self.cache, with_tree=with_tree, **extra)
+            prov = provenance(sched)
+            if prov["degraded"]:
+                self._count("degraded")
+            meta = {"degraded": prov["degraded"], "rung": prov["rung"],
+                    "pid": os.getpid()}
+            # degraded schedules are served (every rung is legal) but
+            # never frame-cached: the next request re-plans clean
+            return ({"ok": True, "result": sched, "meta": meta},
+                    not prov["degraded"])
+
+        return self._serve_keyed(key, compute, deadline)
+
+    def _handle_autotune(self, req: Dict[str, Any]) -> bytes:
+        from ..core.autotune import autotune
+
+        scop = req["scop"]
+        kwargs = dict(req.get("kwargs") or {})
+        deadline = self._deadline(req)
+        try:
+            digest = hashlib.sha256(json.dumps(
+                {"scop": scop_fingerprint(scop),
+                 "kwargs": {k: kwargs[k] for k in sorted(kwargs)}},
+                sort_keys=True, separators=(",", ":"),
+                default=str).encode()).hexdigest()
+            key: Optional[Any] = ("autotune", digest)
+        except Exception:
+            digest, key = None, None
+
+        def compute() -> Tuple[Dict[str, Any], bool]:
+            # journal BEFORE the chaos hold: the work is accepted the
+            # moment we own the flight, so a kill -9 during the hold is
+            # exactly the "crash mid-request" the journal must witness
+            if self.journal is not None and digest is not None:
+                self.journal.begin(digest)
+            self._test_delay(req)
+            try:
+                result = autotune(scop, deadline=deadline,
+                                  cache=self.cache, **kwargs)
+            finally:
+                # done even on failure: the work is over either way —
+                # only a crash leaves a begin-without-done orphan
+                if self.journal is not None and digest is not None:
+                    self.journal.done(digest)
+            if result.degraded:
+                self._count("degraded")
+            meta = {"degraded": result.degraded, "source": result.source,
+                    "pid": os.getpid()}
+            return ({"ok": True, "result": result, "meta": meta},
+                    not result.degraded)
+
+        return self._serve_keyed(key, compute, deadline)
+
+    def _handle_plan(self, req: Dict[str, Any]) -> bytes:
+        from ..core import akg
+
+        kind = req.get("kind")
+        args = tuple(req.get("args") or ())
+        kwargs = dict(req.get("kwargs") or {})
+        planners = {"matmul": akg.plan_matmul,
+                    "attention": akg.plan_attention,
+                    "mamba_scan": akg.plan_mamba_scan}
+        if kind not in planners:
+            return wire.encode_frame({
+                "ok": False, "error": "bad_request",
+                "detail": f"unknown plan kind {kind!r}"})
+        try:
+            key: Optional[Any] = ("plan", kind, args,
+                                  tuple(sorted(kwargs.items())))
+        except TypeError:
+            key = None
+        deadline = self._deadline(req)
+
+        def compute() -> Tuple[Dict[str, Any], bool]:
+            self._test_delay(req)
+            plan = planners[kind](*args, **kwargs)
+            if plan.degraded:
+                self._count("degraded")
+            meta = {"degraded": plan.degraded, "pid": os.getpid()}
+            return ({"ok": True, "result": plan, "meta": meta},
+                    not plan.degraded)
+
+        return self._serve_keyed(key, compute, deadline)
+
+    # -- introspection -----------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            counters = dict(self.counters)
+            inflight = len(self._flights)
+            frames = len(self._frames)
+        return {
+            "pid": os.getpid(),
+            "sock": self.sock_path,
+            "cache_dir": self.cache.dir,
+            "counters": counters,
+            "inflight": inflight,
+            "frame_cache": frames,
+            "cache": self.cache.stats.as_dict(),
+            "journal_recovered": len(self.recovered),
+            "journal_recovered_keys": list(self.recovered),
+            "versions": wire.wire_versions(),
+            "chaos": self.chaos,
+        }
+
+
+def default_socket_path() -> str:
+    env = os.environ.get(wire.SOCKET_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "polytops",
+                        "schedd.sock")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sock", default=default_socket_path(),
+                    help="Unix socket path (default $POLYTOPS_SCHEDD_SOCK "
+                         "or ~/.cache/polytops/schedd.sock)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="schedule-cache pool (default schedcache's)")
+    ap.add_argument("--max-inflight", type=int, default=8)
+    ap.add_argument("--conn-timeout", type=float, default=10.0,
+                    help="per-connection recv timeout (slow-loris guard)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="enable the test-only test_delay_s request field")
+    args = ap.parse_args(argv)
+
+    # the daemon's own scheduling work must never route back through a
+    # client pointed at ourselves
+    wire.mark_server_process()
+
+    daemon = SchedDaemon(args.sock, cache_dir=args.cache_dir,
+                         max_inflight=args.max_inflight,
+                         conn_timeout=args.conn_timeout, chaos=args.chaos)
+    daemon.start()
+    print(f"schedd: pid {os.getpid()} listening on {args.sock} "
+          f"(cache {daemon.cache.dir}, "
+          f"journal recovered {len(daemon.recovered)})", flush=True)
+
+    def _term(signum, frame):
+        daemon._stop.set()
+
+    signal.signal(signal.SIGTERM, _term)
+    signal.signal(signal.SIGINT, _term)
+    try:
+        daemon.wait()
+    finally:
+        daemon.stop()
+    print("schedd: stopped", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

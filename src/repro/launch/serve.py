@@ -84,6 +84,28 @@ class ServeEngine:
                 self.lengths[i] += 1
 
 
+def warm_kernel_plans(cfg, max_len: int) -> None:
+    """Plan the serving kernels up front, through a schedd daemon when
+    ``$POLYTOPS_SCHEDD_SOCK`` names one (so N serving processes
+    amortize one scheduler) and in-process otherwise — ``akg``'s remote
+    hook makes the same call total either way."""
+    from ..core import akg
+    from ..core.schedclient import maybe_client
+
+    client = maybe_client()
+    plans = [akg.plan_matmul(cfg.d_model, cfg.d_ff, cfg.d_model),
+             akg.plan_attention(max_len, max_len, cfg.hd)]
+    degraded = sum(1 for p in plans if p.degraded)
+    if client is not None:
+        st = client.stats.as_dict()
+        via = (f"via schedd ({client.sock_path}, "
+               f"remote_ok={st['remote_ok']} fallbacks={st['fallbacks']})")
+    else:
+        via = "in-process"
+    print(f"serve: {len(plans)} kernel plans warmed {via}"
+          + (f", {degraded} degraded" if degraded else ""))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite_3_2b")
@@ -96,6 +118,7 @@ def main():
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    warm_kernel_plans(cfg, args.prompt_len + args.gen + 1)
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
     eng = ServeEngine(cfg, params, args.batch,

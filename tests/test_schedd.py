@@ -1,0 +1,364 @@
+"""schedd daemon + schedclient: protocol, coalescing, shedding,
+deadlines, breaker, journal, fallback.
+
+The daemon here runs *in-process* (threads on a temp Unix socket) —
+fast, and the REGISTRY/caches are visible to assertions.  The real
+subprocess + kill -9 scenarios live in scripts/chaos_sweep.py.
+"""
+import os
+import socket as socketlib
+import struct
+import threading
+import time
+from contextlib import contextmanager
+
+import pytest
+
+from repro.core import schedclient as wire
+from repro.core.resilience import Deadline
+from repro.core.schedclient import (CircuitBreaker, DaemonUnavailable,
+                                    Overloaded, ProtocolError, SchedClient,
+                                    VersionSkew, local_only, wire_versions)
+from repro.core.schedcache import schedule_fingerprint
+from repro.core.scop import Scop
+from repro.launch.schedd import AutotuneJournal, SchedDaemon
+
+
+def tiny_scop(name="schedd_t", n=24):
+    s = Scop(name, params={"N": n})
+    with s.loop("i", 0, "N"):
+        with s.loop("j", 0, "N"):
+            s.stmt("A[i,j] = A[i,j] + B[j,i]")
+    return s
+
+
+def other_scop():
+    """Structurally distinct from tiny_scop: the cache key fingerprints
+    structure, not the scop's name."""
+    s = Scop("schedd_other", params={"M": 16})
+    with s.loop("i", 0, "M"):
+        s.stmt("X[i] = X[i] * 2.0")
+    return s
+
+
+@contextmanager
+def daemon(tmp_path, **kwargs):
+    sock = str(tmp_path / "schedd.sock")
+    kwargs.setdefault("cache_dir", str(tmp_path / "pool"))
+    kwargs.setdefault("chaos", True)
+    d = SchedDaemon(sock, **kwargs)
+    d.start()
+    try:
+        yield d, sock
+    finally:
+        d.stop()
+
+
+# ---------------------------------------------------------------------------
+# protocol + roundtrips
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_roundtrip_and_frame_cache(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        c = SchedClient(sock, retries=0)
+        scop = tiny_scop()
+        s1 = c.schedule(scop)
+        assert not s1.degraded
+        s2 = c.schedule(tiny_scop())
+        assert schedule_fingerprint(s1) == schedule_fingerprint(s2)
+        assert d.counters["computed"] == 1
+        assert d.counters["frame_hits"] == 1
+        assert c.stats.remote_ok == 2 and c.stats.fallbacks == 0
+
+
+def test_plan_roundtrip_matches_local(tmp_path):
+    with daemon(tmp_path) as (_, sock):
+        c = SchedClient(sock, retries=0)
+        remote = c.plan("matmul", 48, 48, 48, "tensor")
+        with local_only():
+            from repro.core import akg
+            akg.plan_matmul.cache_clear()
+            local = akg.plan_matmul(48, 48, 48)
+        assert remote == local
+        assert c.stats.fallbacks == 0
+
+
+def test_autotune_roundtrip(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        c = SchedClient(sock, retries=0)
+        r1 = c.autotune(tiny_scop("schedd_at"), measure=False)
+        assert r1.config.label
+        r2 = c.autotune(tiny_scop("schedd_at"), measure=False)
+        assert r2.config.label == r1.config.label
+        assert d.counters["computed"] == 1      # second was a frame hit
+
+
+def test_ping_stats_shutdown(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        c = SchedClient(sock, retries=0)
+        assert c.ping()["op"] == "pong"
+        st = c.daemon_stats()
+        assert st["counters"]["requests"] >= 1
+        assert st["versions"] == wire_versions()
+        c.shutdown()
+        assert d._stop.wait(timeout=5.0)
+
+
+def test_unknown_op_is_typed(tmp_path):
+    with daemon(tmp_path) as (_, sock):
+        c = SchedClient(sock, retries=0)
+        with pytest.raises(ProtocolError, match="unknown op"):
+            c._request({"op": "frobnicate"}, 5.0)
+
+
+def test_garbage_and_truncated_frames_are_survivable(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        # garbage magic -> typed bad_frame reply (or clean close)
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(b"NOPE" + b"\x00" * 64)
+        reply = s.recv(1 << 16)
+        s.close()
+        assert not reply or b"bad_frame" in reply
+        # truncated frame -> dropped connection, daemon survives
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(wire.MAGIC + struct.pack(">I", 1024) + b"short")
+        s.close()
+        time.sleep(0.1)
+        assert SchedClient(sock, retries=0).ping()["op"] == "pong"
+        assert d.counters["bad_frames"] >= 1
+
+
+def test_oversized_length_rejected(tmp_path):
+    with daemon(tmp_path) as (_, sock):
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(wire.MAGIC + struct.pack(">I", 0xFFFFFFF0))
+        reply = s.recv(1 << 16)
+        s.close()
+        assert not reply or b"bad_frame" in reply
+
+
+def test_slow_loris_dropped(tmp_path):
+    with daemon(tmp_path, conn_timeout=0.3) as (d, sock):
+        s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock)
+        s.sendall(wire.MAGIC[:2])        # stall mid-header
+        assert s.recv(1) == b""          # daemon hangs up
+        s.close()
+        assert d.counters["slow_loris"] >= 1
+        assert SchedClient(sock, retries=0).ping()["op"] == "pong"
+
+
+# ---------------------------------------------------------------------------
+# coalescing + shedding
+# ---------------------------------------------------------------------------
+
+
+def test_identical_concurrent_requests_coalesce(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        scop = tiny_scop("schedd_co")
+        metas = []
+
+        def go():
+            c = SchedClient(sock, retries=0, request_timeout=30.0)
+            resp = c._request({"op": "schedule", "scop": scop,
+                               "test_delay_s": 0.4}, 30.0)
+            metas.append(resp["meta"])
+
+        threads = [threading.Thread(target=go) for _ in range(3)]
+        for t in threads:
+            t.start()
+            time.sleep(0.05)
+        for t in threads:
+            t.join(timeout=30.0)
+        assert len(metas) == 3
+        assert d.counters["computed"] == 1
+        assert d.counters["coalesced"] == 2
+
+
+def test_overload_sheds_typed(tmp_path):
+    with daemon(tmp_path, max_inflight=1) as (d, sock):
+        done = threading.Event()
+
+        def hold():
+            c = SchedClient(sock, retries=0, request_timeout=30.0)
+            c._request({"op": "schedule", "scop": tiny_scop("schedd_h"),
+                        "test_delay_s": 1.0}, 30.0)
+            done.set()
+
+        t = threading.Thread(target=hold)
+        t.start()
+        time.sleep(0.3)
+        c = SchedClient(sock, retries=0)
+        with pytest.raises(Overloaded):
+            c._request({"op": "schedule", "scop": other_scop()}, 10.0)
+        # the total API serves in-process while the daemon is saturated
+        sched = c.schedule(other_scop())
+        assert sched is not None
+        assert c.stats.fallbacks == 1 and c.stats.overloaded >= 1
+        assert done.wait(timeout=30.0)
+        t.join(timeout=5.0)
+        assert d.counters["shed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines + degraded results
+# ---------------------------------------------------------------------------
+
+
+def test_expired_deadline_degrades_and_is_never_frame_cached(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        c = SchedClient(sock, retries=0)
+        scop = tiny_scop("schedd_dl")
+        r1 = c._request({"op": "schedule", "scop": scop,
+                         "deadline_s": 0.0}, 10.0)
+        assert r1["meta"]["degraded"]
+        r2 = c._request({"op": "schedule", "scop": scop,
+                         "deadline_s": 0.0}, 10.0)
+        assert r2["meta"]["degraded"]
+        # both computed: a degraded response must never be served warm
+        assert d.counters["computed"] == 2
+        assert d.counters["frame_hits"] == 0
+        assert d.counters["degraded"] == 2
+
+
+def test_client_exhausted_deadline_falls_back_without_dialing(tmp_path):
+    from repro.core.schedcache import ScheduleCache
+
+    with daemon(tmp_path) as (d, sock):
+        # isolated fallback cache: the key is structural, so a warm hit
+        # from the process-global pool would serve a clean schedule and
+        # mask the deadline degradation this test asserts
+        c = SchedClient(sock, retries=0,
+                        cache=ScheduleCache(cache_dir=str(tmp_path / "fb")))
+        dl = Deadline(0.0)
+        time.sleep(0.01)
+        sched = c.schedule(tiny_scop("schedd_dl2"), deadline=dl)
+        assert sched.degraded              # local ladder, identity rung
+        assert c.stats.fallbacks == 1
+        assert d.counters["requests"] == 0  # never reached the daemon
+
+
+# ---------------------------------------------------------------------------
+# version handshake + breaker + fallback
+# ---------------------------------------------------------------------------
+
+
+def test_version_skew_rejected_and_breaker_opens(tmp_path):
+    with daemon(tmp_path) as (d, sock):
+        stale = dict(wire_versions(), cache=-99)
+        c = SchedClient(sock, retries=2, versions=stale)
+        with pytest.raises(VersionSkew):
+            c.remote_plan("matmul", 32, 32, 32, "tensor")
+        assert c.stats.retries == 0        # skew is not transient
+        assert c.breaker.state != "closed"
+        sched = c.schedule(tiny_scop("schedd_vs"))
+        assert sched is not None
+        assert c.stats.fallbacks == 1
+        assert c.stats.breaker_skips == 1  # went straight to fallback
+        assert d.counters["version_skew"] >= 1
+
+
+def test_missing_socket_falls_back_and_breaker_trips(tmp_path):
+    c = SchedClient(str(tmp_path / "nope.sock"), retries=1,
+                    connect_timeout=0.2, breaker_threshold=2)
+    with pytest.raises(DaemonUnavailable):
+        c.remote_plan("matmul", 32, 32, 32, "tensor")
+    sched = c.schedule(tiny_scop("schedd_ms"))
+    assert sched is not None and not sched.degraded
+    assert c.stats.fallbacks == 1
+    assert c.breaker.state == "open"
+    before = c.stats.remote_errors
+    c.schedule(tiny_scop("schedd_ms"))
+    assert c.stats.breaker_skips >= 1
+    assert c.stats.remote_errors == before   # open breaker: no dialing
+
+
+def test_breaker_half_open_recovers():
+    t = [0.0]
+    b = CircuitBreaker(threshold=2, reset_s=5.0, clock=lambda: t[0])
+    assert b.state == "closed"
+    b.failure()
+    assert b.allow()
+    b.failure()
+    assert b.state == "open" and not b.allow()
+    t[0] = 6.0
+    assert b.allow()                   # the single half-open probe
+    assert b.state == "half-open" and not b.allow()
+    b.success()
+    assert b.state == "closed" and b.allow()
+    # a failing probe re-opens for another window
+    b.failure()
+    b.failure()
+    t[0] = 12.0
+    assert b.allow()
+    b.failure()
+    assert b.state == "open" and not b.allow()
+
+
+def test_maybe_client_respects_env_and_server_guard(tmp_path, monkeypatch):
+    monkeypatch.delenv(wire.SOCKET_ENV, raising=False)
+    assert wire.maybe_client() is None
+    monkeypatch.setenv(wire.SOCKET_ENV, str(tmp_path / "x.sock"))
+    wire._DEFAULT = None
+    assert wire.maybe_client() is not None
+    monkeypatch.setattr(wire, "_SERVER_PROCESS", True)
+    assert wire.maybe_client() is None
+    monkeypatch.setattr(wire, "_SERVER_PROCESS", False)
+    with local_only():
+        assert wire.maybe_remote_plan("matmul", 8, 8, 8, "tensor") is None
+    wire._DEFAULT = None
+
+
+def test_akg_routes_through_daemon(tmp_path, monkeypatch):
+    from repro.core import akg
+
+    with daemon(tmp_path) as (d, sock):
+        monkeypatch.setenv(wire.SOCKET_ENV, sock)
+        wire._DEFAULT = None
+        akg.plan_matmul.cache_clear()
+        try:
+            plan = akg.plan_matmul(40, 40, 40)
+            assert not plan.degraded
+            assert d.counters["requests"] >= 1
+            assert d.counters["computed"] == 1
+        finally:
+            akg.plan_matmul.cache_clear()
+            wire._DEFAULT = None
+
+
+# ---------------------------------------------------------------------------
+# journal
+# ---------------------------------------------------------------------------
+
+
+def test_journal_recover_counts_orphans(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    j = AutotuneJournal(path)
+    j.begin("aaa")
+    j.done("aaa")
+    j.begin("bbb")                      # orphan: a crash mid-request
+    j.begin("ccc")
+    with open(path, "a") as f:
+        f.write('{"ev": "beg')          # torn tail from a kill -9
+    assert AutotuneJournal(path).recover() == ["bbb", "ccc"]
+    # recovery truncates: a second recover sees a clean journal
+    assert AutotuneJournal(path).recover() == []
+
+
+def test_daemon_surfaces_recovered_journal(tmp_path):
+    pool = tmp_path / "pool"
+    pool.mkdir()
+    j = AutotuneJournal(str(pool / "schedd_journal.jsonl"))
+    j.begin("orphaned-by-kill9")
+    with daemon(tmp_path, cache_dir=str(pool)) as (d, sock):
+        st = SchedClient(sock, retries=0).daemon_stats()
+        assert st["journal_recovered"] == 1
+        assert st["journal_recovered_keys"] == ["orphaned-by-kill9"]
