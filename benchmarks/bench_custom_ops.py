@@ -11,7 +11,7 @@ Output CSV: case,shape,variant,us_per_call,speedup_vs_isl
 from __future__ import annotations
 
 import sys
-from typing import Dict, List
+from typing import List
 
 from repro.core.deps import compute_dependences
 from repro.core.scops_npu import (TABLE1_SIZES, autovec_config,

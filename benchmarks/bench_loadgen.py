@@ -1,0 +1,244 @@
+"""schedd multi-process load generator: throughput vs worker count.
+
+Launches a real daemon subprocess per ``--workers`` level on a private
+socket/pool and drives it with **M separate client processes**, the
+shape of a compile farm hitting one shared scheduling daemon.  Two
+request mixes per level:
+
+* **distinct** — every request carries a structurally distinct key
+  (the scop's param value varies, which feeds ``scop_fingerprint``), so
+  nothing coalesces and nothing is warm: every request is a real keyed
+  computation.  This is the mix the worker pool exists for — with one
+  worker the computations serialize behind the GIL-bound daemon, with N
+  workers up to N run concurrently.
+* **shared** — every client hammers the SAME key, pinning that the
+  pool did not break coalescing: the daemon must compute ONCE and serve
+  everyone else from the flight/frame cache.
+
+**Reading the numbers.**  Each computation carries a deterministic
+compute hold (the chaos-only ``test_delay_s`` field) and the reported
+throughput is requests/second over the mix's wall clock.  The hold
+makes the gated ratio a measurement of *dispatch concurrency* — how
+many computations the daemon genuinely keeps in flight at once — which
+is the property the pool adds and the one that is stable on the 1-2
+core CI runners this repo gates on (real solver work would serialize on
+the physical cores and measure the machine, not the daemon).  The
+tier-1 gate reads ``speedup_distinct_4v1`` (>= 3x: four workers keep at
+least 3 distinct-key computations in flight) and
+``p99_over_p50_at_max_workers`` (<= 2x: latency stays flat when the
+pool is wide enough for the offered load, i.e. no request starves).
+
+Writes ``BENCH_loadgen.json`` next to this file.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_loadgen
+Env:   POLYTOPS_LOADGEN_CLIENTS   client processes        (default 4)
+       POLYTOPS_LOADGEN_REQS      requests per client     (default 6)
+       POLYTOPS_LOADGEN_HOLD      compute hold seconds    (default 0.15)
+       POLYTOPS_LOADGEN_WORKERS   worker sweep, csv       (default 1,2,4)
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import statistics
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.schedclient import SchedClient
+from repro.core.scop import Scop
+
+HERE = Path(__file__).resolve().parent
+OUT = HERE / "BENCH_loadgen.json"
+
+
+def loadgen_scop(n: int) -> Scop:
+    """One structural family; the param value distinguishes cache keys
+    at identical compute cost."""
+    s = Scop("loadgen", params={"N": n})
+    with s.loop("i", 0, "N"):
+        with s.loop("j", 0, "N"):
+            s.stmt("A[i,j] = A[i,j] + B[j,i]")
+    return s
+
+
+def start_daemon(sock: str, pool: str, workers: int):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(HERE.parent / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.pop("POLYTOPS_SCHEDD_SOCK", None)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
+         "--cache-dir", pool, "--workers", str(workers),
+         "--max-inflight", "64", "--chaos"],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    client = SchedClient(sock, retries=0)
+    deadline = time.monotonic() + 30.0
+    while time.monotonic() < deadline:
+        try:
+            client.ping(timeout=1.0)
+            return proc
+        except Exception:
+            if proc.poll() is not None:
+                raise RuntimeError(f"daemon exited rc={proc.returncode}")
+            time.sleep(0.05)
+    proc.kill()
+    raise RuntimeError("daemon never answered ping within 30s")
+
+
+def stop_daemon(proc, sock: str) -> None:
+    try:
+        SchedClient(sock, retries=0).shutdown(timeout=2.0)
+    except Exception:
+        pass
+    try:
+        proc.wait(timeout=10.0)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        proc.wait(timeout=5.0)
+
+
+def _client_proc(sock: str, out_path: str, barrier, keys, hold_s: float):
+    """One load-generator client process: wait at the barrier so every
+    client fires into the same window, then send its requests
+    back-to-back, recording per-request wall latency."""
+    c = SchedClient(sock, retries=0, request_timeout=300.0)
+    lat_ms, errors = [], 0
+    barrier.wait(timeout=60.0)
+    for n in keys:
+        t0 = time.perf_counter()
+        try:
+            resp = c._request(
+                {"op": "schedule", "scop": loadgen_scop(n),
+                 "test_delay_s": hold_s}, 300.0)
+            if not resp.get("ok"):
+                errors += 1
+        except Exception:
+            errors += 1
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+    Path(out_path).write_text(json.dumps(
+        {"lat_ms": lat_ms, "errors": errors}))
+
+
+def run_mix(sock: str, tmp: str, mix: str, clients: int, reqs: int,
+            hold_s: float, key_base: int) -> dict:
+    """Drive one mix with ``clients`` processes; returns throughput and
+    latency percentiles plus the daemon-side counter deltas."""
+    before = SchedClient(sock, retries=0).daemon_stats()["counters"]
+    ctx = multiprocessing.get_context("fork")
+    barrier = ctx.Barrier(clients + 1)
+    procs, outs = [], []
+    for ci in range(clients):
+        if mix == "distinct":
+            keys = [key_base + ci * reqs + j for j in range(reqs)]
+        else:                             # shared: everyone, same key
+            keys = [key_base] * reqs
+        out = os.path.join(tmp, f"{mix}_{ci}.json")
+        outs.append(out)
+        p = ctx.Process(target=_client_proc,
+                        args=(sock, out, barrier, keys, hold_s))
+        p.start()
+        procs.append(p)
+    barrier.wait(timeout=60.0)            # release every client at once
+    t0 = time.perf_counter()
+    for p in procs:
+        p.join(timeout=600.0)
+    wall_s = time.perf_counter() - t0
+    lat_ms, errors = [], 0
+    for out in outs:
+        row = json.loads(Path(out).read_text())
+        lat_ms.extend(row["lat_ms"])
+        errors += row["errors"]
+    after = SchedClient(sock, retries=0).daemon_stats()["counters"]
+    delta = {k: after[k] - before[k]
+             for k in ("computed", "coalesced", "frame_hits", "shed",
+                       "worker_crashes")}
+    total = clients * reqs
+    lat_sorted = sorted(lat_ms)
+    p50 = statistics.median(lat_sorted) if lat_sorted else None
+    p99 = (lat_sorted[max(0, int(len(lat_sorted) * 0.99) - 1)]
+           if lat_sorted else None)
+    return {
+        "requests": total,
+        "errors": errors,
+        "wall_s": round(wall_s, 4),
+        "throughput_rps": round(total / wall_s, 3) if wall_s else None,
+        "p50_ms": round(p50, 3) if p50 is not None else None,
+        "p99_ms": round(p99, 3) if p99 is not None else None,
+        **delta,
+    }
+
+
+def main() -> int:
+    clients = int(os.environ.get("POLYTOPS_LOADGEN_CLIENTS", "4"))
+    reqs = int(os.environ.get("POLYTOPS_LOADGEN_REQS", "6"))
+    hold_s = float(os.environ.get("POLYTOPS_LOADGEN_HOLD", "0.15"))
+    sweep = [int(w) for w in os.environ.get(
+        "POLYTOPS_LOADGEN_WORKERS", "1,2,4").split(",")]
+
+    results: dict = {}
+    key_base = 100
+    for workers in sweep:
+        tmp = tempfile.mkdtemp(prefix=f"loadgen_w{workers}_")
+        sock = os.path.join(tmp, "s.sock")
+        pool = os.path.join(tmp, "pool")
+        proc = start_daemon(sock, pool, workers)
+        try:
+            # warmup: first job per worker pays one-time lazy init;
+            # throughput measures steady state
+            warm = run_mix(sock, tmp, "distinct", clients,
+                           1, 0.02, key_base)
+            key_base += clients
+            distinct = run_mix(sock, tmp, "distinct", clients, reqs,
+                               hold_s, key_base)
+            key_base += clients * reqs
+            shared = run_mix(sock, tmp, "shared", clients, reqs,
+                             hold_s, key_base)
+            key_base += 1
+            pool_stats = SchedClient(sock, retries=0).daemon_stats()["pool"]
+        finally:
+            stop_daemon(proc, sock)
+        results[str(workers)] = {"distinct": distinct, "shared": shared,
+                                 "warmup_errors": warm["errors"],
+                                 "pool": pool_stats}
+        print(f"workers {workers}: distinct "
+              f"{distinct['throughput_rps']} rps "
+              f"(p50 {distinct['p50_ms']}ms p99 {distinct['p99_ms']}ms, "
+              f"{distinct['errors']} errors) | shared "
+              f"{shared['throughput_rps']} rps, "
+              f"{shared['computed']} computed", flush=True)
+
+    lo, hi = str(min(sweep)), str(max(sweep))
+    t_lo = results[lo]["distinct"]["throughput_rps"]
+    t_hi = results[hi]["distinct"]["throughput_rps"]
+    p50 = results[hi]["distinct"]["p50_ms"]
+    p99 = results[hi]["distinct"]["p99_ms"]
+    out = {
+        "clients": clients,
+        "requests_per_client": reqs,
+        "hold_s": hold_s,
+        "workers_sweep": sweep,
+        "sweep": results,
+        "speedup_distinct_4v1": (round(t_hi / t_lo, 3)
+                                 if t_lo and t_hi else None),
+        "p99_over_p50_at_max_workers": (round(p99 / p50, 3)
+                                        if p50 and p99 else None),
+        "errors_total": sum(
+            r[m]["errors"] for r in results.values()
+            for m in ("distinct", "shared")),
+        "shared_computed_at_max_workers":
+            results[hi]["shared"]["computed"],
+    }
+    OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"distinct-key speedup {hi}w vs {lo}w: "
+          f"{out['speedup_distinct_4v1']}x | p99/p50 at {hi}w: "
+          f"{out['p99_over_p50_at_max_workers']}")
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

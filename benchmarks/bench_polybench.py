@@ -24,11 +24,9 @@ from typing import Dict, List
 
 from repro.core.autotune import autotune
 from repro.core.deps import compute_dependences
-from repro.core.scops_polybench import REGISTRY, SIZE
+from repro.core.scops_polybench import REGISTRY
 
-from .common import (FAST, NO_CACHE, SCALARS, Measurement, Variant,
-                     check_checksums, measure, standard_variants,
-                     tuned_variant)
+from .common import FAST, NO_CACHE, SCALARS, Measurement, check_checksums, measure, standard_variants, tuned_variant
 
 FAST_SET = ["gemm", "mvt", "jacobi1d", "jacobi2d", "trmm", "gesummv"]
 

@@ -11,16 +11,14 @@ import json
 import os
 import sys
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core import config as CFG
 from repro.core.cbackend import CCodeGenerator
-from repro.core.crunner import RunResult, compile_and_run
-from repro.core.deps import compute_dependences
 from repro.core.postproc import tile_schedule
-from repro.core.scheduler import PolyTOPSScheduler, Schedule, SchedulingError
+from repro.core.scheduler import PolyTOPSScheduler, Schedule
 from repro.core.scop import Scop
 
 SALT = "v8"  # bump to invalidate the source cache after codegen changes

@@ -628,6 +628,67 @@ def run_daemon_scenarios(results):
 
     _daemon_scenario(results, "kill9-mid-request", kill9_mid_request)
 
+    def kill9_pool_worker():
+        """A poison request SIGKILLs its pool worker twice (the daemon
+        retries once on a fresh fork).  Contract: typed error to the
+        client, the daemon survives and keeps serving, the crash is
+        journalled as *witnessed* — a restart on the same pool must NOT
+        count it as an unwitnessed kill -9 orphan."""
+        w_sock = os.path.join(_TMP, "schedd_worker.sock")
+        w_pool = os.path.join(_TMP, "schedd_worker_pool")
+        proc = _spawn_daemon(w_sock, w_pool, "--workers", "2")
+        try:
+            c = SchedClient(w_sock, retries=0, request_timeout=60.0)
+            try:
+                c._request({"op": "autotune", "scop": scop_fn(),
+                            "kwargs": {"measure": False},
+                            "test_kill_worker": True}, 60.0)
+                raise AssertionError("poison request SUCCEEDED across "
+                                     "two worker kills")
+            except SchedClientError as e:
+                kind = getattr(e, "kind", None)
+                if kind != "worker_crashed":
+                    raise AssertionError(
+                        f"poison surfaced as {type(e).__name__} "
+                        f"(kind={kind!r}), not worker_crashed")
+            clean = SchedClient(w_sock, retries=0)
+            st = clean.daemon_stats()
+            if st["counters"]["worker_crashes"] != 2:
+                raise AssertionError(
+                    f"poison should burn exactly 2 workers: "
+                    f"{st['counters']}")
+            # the pool respawned and the daemon still schedules
+            sched = clean.schedule(scop_fn())
+            _oracle_check(scop_fn(), sched)
+            if clean.stats.fallbacks:
+                raise AssertionError("daemon stopped serving after the "
+                                     "worker kills")
+        finally:
+            try:
+                SchedClient(w_sock, retries=0).shutdown(timeout=2.0)
+            except Exception:
+                pass
+            _kill_daemon(proc)
+
+        # restart on the same pool: the witnessed crash completed its
+        # journal begin, so recovery finds no orphans
+        proc2 = _spawn_daemon(w_sock, w_pool)
+        try:
+            st2 = SchedClient(w_sock, retries=0).daemon_stats()
+            if st2["journal_recovered"] != 0:
+                raise AssertionError(
+                    f"witnessed worker crash was re-counted as an "
+                    f"orphan: {st2['journal_recovered_keys']}")
+        finally:
+            try:
+                SchedClient(w_sock, retries=0).shutdown(timeout=2.0)
+            except Exception:
+                pass
+            _kill_daemon(proc2)
+        return {"worker_crashes": 2}
+
+    _daemon_scenario(results, "kill9-pool-worker", kill9_pool_worker)
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])

@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 gate: test suite + determinism + perf smoke, machine-readable.
 #
-# Gates (all must pass; any failure exits nonzero):
+# Gates (all selected gates must pass; any failure exits nonzero):
 #   * tests      — the full pytest suite (with line coverage when
 #                  pytest-cov is installed)
 #   * coverage   — line-coverage floor for src/repro/core (gated from
 #                  coverage.xml; skipped-but-ok when pytest-cov is not
-#                  installed — CI always installs it)
+#                  installed — CI always installs it).  Requires the
+#                  tests gate in the same run (it produces coverage.xml).
 #   * golden     — fresh schedules for all 74 combos (56 kernel×strategy
 #                  + fusion-variant extremes + static-autotune winners)
 #                  diff bit-exact against artifacts/golden_schedules/
@@ -29,19 +30,33 @@
 #                  every fault site × the fast-set kernels must yield a
 #                  legal schedule (numpy-oracle differential) or a clean
 #                  typed error, bit-deterministically — including the
-#                  schedd daemon scenarios (kill -9 mid-request, garbage
-#                  frames, slow-loris, version skew, missing socket);
-#                  writes artifacts/chaos_summary.json
+#                  schedd daemon scenarios (kill -9 mid-request and of a
+#                  pool worker, garbage frames, slow-loris, version
+#                  skew, missing socket); writes artifacts/chaos_summary.json
 #   * schedd     — scheduling-daemon load bench (benchmarks/bench_schedd.py):
 #                  concurrent identical requests must coalesce to one
 #                  computation, and warm-hit plan latency through the
 #                  daemon must stay within 2x of the in-process
 #                  disk-hit path; writes benchmarks/BENCH_schedd.json
+#   * loadgen    — multi-process load generator (benchmarks/bench_loadgen.py):
+#                  distinct-key throughput at --workers 4 must be >= 3x
+#                  the single-worker daemon with p99 <= 2x p50, zero
+#                  request errors, and the shared-key mix must still
+#                  coalesce to exactly one computation; writes
+#                  benchmarks/BENCH_loadgen.json
+#   * bench_compare — regression gate: fresh BENCH_*.json from this run
+#                  vs benchmarks/baselines/ with per-metric tolerances
+#                  (scripts/bench_compare.py); only host-portable ratio
+#                  and count metrics are compared; writes
+#                  artifacts/bench_delta.md
 #
 # Every run writes artifacts/tier1_summary.json (per-gate ok + metrics)
-# for CI to upload/consume, even when a gate fails.
+# for CI to upload/consume, even when a gate fails.  The summary's "ok"
+# covers exactly the gates selected for that run.
 #
-# Usage:  scripts/tier1.sh
+# Usage:  scripts/tier1.sh [gate ...]      # no args = every gate
+#   e.g.  scripts/tier1.sh tests coverage pallas
+#         scripts/tier1.sh chaos schedd loadgen bench_compare
 # Env:    POLYTOPS_TIER1_BUDGET       scheduler smoke budget in s (default 240)
 #         POLYTOPS_TIER1_PB_BUDGET    polybench smoke budget in s (default 1200)
 #         POLYTOPS_TIER1_REQUIRE_COV  1 = fail (not skip) when pytest-cov
@@ -49,6 +64,31 @@
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+ALL_GATES=(tests coverage golden sched_bench polybench pallas chaos schedd
+           loadgen bench_compare)
+if [ "$#" -gt 0 ]; then
+  GATES=("$@")
+  for g in "${GATES[@]}"; do
+    case " ${ALL_GATES[*]} " in
+      *" $g "*) ;;
+      *) echo "unknown gate '$g' (known: ${ALL_GATES[*]})" >&2; exit 2 ;;
+    esac
+  done
+else
+  GATES=("${ALL_GATES[@]}")
+fi
+export TIER1_GATES="${GATES[*]}"
+
+want() {  # want <gate> — is the gate selected for this run?
+  case " ${GATES[*]} " in *" $1 "*) return 0 ;; *) return 1 ;; esac
+}
+
+if want coverage && ! want tests; then
+  echo "the coverage gate reads coverage.xml produced by the tests gate;" >&2
+  echo "select both: scripts/tier1.sh tests coverage ..." >&2
+  exit 2
+fi
 
 BUDGET="${POLYTOPS_TIER1_BUDGET:-240}"
 PB_BUDGET="${POLYTOPS_TIER1_PB_BUDGET:-1200}"
@@ -61,7 +101,7 @@ record() {  # record <gate> <ok 0|1> <detail-json>
 
 finish() {
   python - "$RESULTS" <<'PY' > artifacts/tier1_summary.json
-import json, sys, pathlib
+import json, os, sys, pathlib
 gates = {}
 for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
     name, ok, detail = ln.split("\t", 2)
@@ -70,16 +110,17 @@ for ln in pathlib.Path(sys.argv[1]).read_text().splitlines():
         gates[name].update(json.loads(detail))
     except json.JSONDecodeError:
         pass
-expected = ["tests", "coverage", "golden", "sched_bench", "polybench",
-            "pallas", "chaos", "schedd"]
+expected = os.environ["TIER1_GATES"].split()
 ok = all(gates.get(g, {}).get("ok") for g in expected)
-print(json.dumps({"ok": ok, "gates": gates}, indent=2, sort_keys=True))
+print(json.dumps({"ok": ok, "selected": expected, "gates": gates},
+                 indent=2, sort_keys=True))
 PY
   rm -f "$RESULTS"
   echo "== tier-1 summary written to artifacts/tier1_summary.json =="
 }
 trap finish EXIT
 
+if want tests; then
 echo "== tier-1 tests =="
 T0=$SECONDS
 HAVE_COV=0
@@ -94,7 +135,9 @@ else
   record tests 0 "{\"seconds\": $((SECONDS - T0))}"
   exit 1
 fi
+fi
 
+if want coverage; then
 echo "== coverage floor for src/repro/core =="
 if [ "$HAVE_COV" = 1 ]; then
   if python - <<'PY'
@@ -128,7 +171,9 @@ else
   echo "pytest-cov not installed: coverage gate skipped (CI installs it)"
   record coverage 1 '{"skipped": true, "reason": "pytest-cov not installed"}'
 fi
+fi
 
+if want golden; then
 echo "== golden-schedule determinism gate (74 combos) =="
 T0=$SECONDS
 if python scripts/golden_schedules.py check; then
@@ -137,7 +182,9 @@ else
   record golden 0 "{\"seconds\": $((SECONDS - T0))}"
   exit 1
 fi
+fi
 
+if want sched_bench; then
 echo "== scheduler smoke bench (fast subset, ${BUDGET}s budget each engine) =="
 BENCH_OUT="$(mktemp)"
 # same-machine HiGHS-engine reference first (the PR-2 backend) ...
@@ -202,7 +249,9 @@ else
   rm -f .tier1_sched_detail.json
   exit 1
 fi
+fi
 
+if want polybench; then
 echo "== polybench smoke bench (fast set, ${PB_BUDGET}s budget) =="
 PB_OUT="$(mktemp)"
 if ! POLYTOPS_BENCH_FAST=1 \
@@ -250,7 +299,9 @@ else
   rm -f .tier1_pb_detail.json
   exit 1
 fi
+fi
 
+if want pallas; then
 echo "== pallas smoke (JAX CPU, interpret mode, tree lowering) =="
 T0=$SECONDS
 PALLAS_OUT="$(mktemp)"
@@ -266,7 +317,9 @@ else
   rm -f "$PALLAS_OUT"
   exit 1
 fi
+fi
 
+if want chaos; then
 echo "== chaos sweep (fault injection + daemon × fast set, 120s budget) =="
 T0=$SECONDS
 if timeout 120 python scripts/chaos_sweep.py --out artifacts/chaos_summary.json; then
@@ -284,7 +337,9 @@ else
   record chaos 0 "{\"seconds\": $((SECONDS - T0))}"
   exit 1
 fi
+fi
 
+if want schedd; then
 echo "== schedd daemon bench (coalescing + warm-hit latency, 120s budget) =="
 T0=$SECONDS
 if ! timeout 120 python -m benchmarks.bench_schedd; then
@@ -327,6 +382,69 @@ else
   record schedd 0 "$(cat .tier1_schedd_detail.json 2>/dev/null || echo '{}')"
   rm -f .tier1_schedd_detail.json
   exit 1
+fi
+fi
+
+if want loadgen; then
+echo "== schedd load generator (worker-pool scaling, 600s budget) =="
+T0=$SECONDS
+if ! timeout 600 python -m benchmarks.bench_loadgen; then
+  echo "LOADGEN BENCH FAILED or exceeded 600s budget" >&2
+  record loadgen 0 "{\"seconds\": $((SECONDS - T0))}"
+  exit 1
+fi
+if python - <<'PY'
+import json, pathlib, sys
+d = json.loads(pathlib.Path("benchmarks/BENCH_loadgen.json").read_text())
+speedup = d["speedup_distinct_4v1"]
+tail = d["p99_over_p50_at_max_workers"]
+errors = d["errors_total"]
+shared = d["shared_computed_at_max_workers"]
+detail = {"speedup_distinct_4v1": speedup,
+          "p99_over_p50_at_max_workers": tail,
+          "errors_total": errors,
+          "shared_computed_at_max_workers": shared,
+          "workers_sweep": d["workers_sweep"]}
+pathlib.Path(".tier1_loadgen_detail.json").write_text(json.dumps(detail))
+bad = []
+if speedup is None or speedup < 3.0:
+    bad.append(f"distinct-key speedup at max workers {speedup}x < 3.0x floor")
+if tail is None or tail > 2.0:
+    bad.append(f"p99/p50 at max workers {tail}x > 2.0x cap (starvation)")
+if errors:
+    bad.append(f"{errors} request error(s) under load (want 0)")
+if shared != 1:
+    bad.append(f"shared-key mix computed {shared} times (pool broke "
+               f"coalescing; want exactly 1)")
+if bad:
+    sys.exit("; ".join(bad))
+print(f"loadgen OK: {speedup}x distinct-key speedup (floor 3.0x), "
+      f"p99/p50 {tail}x (cap 2.0x), 0 errors, shared mix computed once")
+PY
+then
+  record loadgen 1 "$(cat .tier1_loadgen_detail.json)"
+  rm -f .tier1_loadgen_detail.json
+else
+  record loadgen 0 "$(cat .tier1_loadgen_detail.json 2>/dev/null || echo '{}')"
+  rm -f .tier1_loadgen_detail.json
+  exit 1
+fi
+fi
+
+if want bench_compare; then
+echo "== bench regression gate (fresh BENCH_*.json vs baselines) =="
+if python scripts/bench_compare.py; then
+  BC_DETAIL="$(python - <<'PY'
+import json
+rows = open("artifacts/bench_delta.md").read().count("| ok |")
+print(json.dumps({"metrics_ok": rows, "delta": "artifacts/bench_delta.md"}))
+PY
+)"
+  record bench_compare 1 "$BC_DETAIL"
+else
+  record bench_compare 0 '{"delta": "artifacts/bench_delta.md"}'
+  exit 1
+fi
 fi
 
 echo "== tier-1 gate passed =="

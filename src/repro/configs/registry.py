@@ -7,8 +7,8 @@ arch files). ``ArchConfig`` is consumed by ``repro.model`` builders and
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, List, Tuple
 
 
 @dataclass(frozen=True)

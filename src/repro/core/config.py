@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Union
 
 #: cost functions the ILP constructor understands (paper §III-A1);
 #: configs may additionally reference their own ``new_variables``

@@ -15,7 +15,7 @@ from __future__ import annotations
 from fractions import Fraction
 from typing import Dict, List, Sequence
 
-from .affine import Affine, affine_eval
+from .affine import Affine
 from .deps import Dependence
 from .farkas import add_farkas_nonneg, project_farkas
 from .ilp import ILPProblem
@@ -160,7 +160,6 @@ def contiguity_coeffs(stmt: Statement) -> List[int]:
 
 def bigloops_coeffs(stmt: Statement, scop: Scop) -> List[int]:
     """c_{S,i} prioritizing the largest iteration ranges (paper: BLF)."""
-    from .polyhedron import maximum, minimum
 
     env = {p: Fraction(v) for p, v in scop.params.items()}
     extents = []

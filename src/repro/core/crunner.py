@@ -21,7 +21,7 @@ import subprocess
 import tempfile
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Optional, Tuple
+from typing import Optional
 
 from .resilience import InjectedFault, MeasurementError, fault_point
 

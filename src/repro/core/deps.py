@@ -14,11 +14,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from .affine import Affine, affine_sub
 from .polyhedron import Constraint, feasible, maximum, minimum
-from .scop import Access, Scop, Statement
+from .scop import Scop, Statement
 
 
 @dataclass
@@ -83,7 +83,6 @@ def compute_dependences(scop: Scop) -> List[Dependence]:
     did = 0
     for s in stmts:
         for r in stmts:
-            order_exists = s is r or scop.textually_before(s, r) or scop.textually_before(r, s)
             # we only build deps s -> r where s executes before r; both
             # directions are covered because (s, r) iterates all pairs.
             for a in s.accesses:

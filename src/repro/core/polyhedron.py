@@ -11,7 +11,7 @@ from __future__ import annotations
 from fractions import Fraction
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
-from .affine import Affine, affine_scale, affine_sub
+from .affine import Affine, affine_scale
 from .ilp import ILPProblem, Unbounded
 from .resilience import fault_point
 
@@ -360,7 +360,6 @@ def bounds_of(cons: Sequence[Constraint], var: str, inner: Sequence[str],
         sys = prune_redundant(sys, context)
     lowers, uppers = [], []
     for expr, kind in sys:
-        c = expr.get(var, Fraction(0))
         kinds = [kind] if kind == ">=0" else [">=0", "<=0"]
         for kk in kinds:
             e = expr if kk == ">=0" else {k: -v for k, v in expr.items()}

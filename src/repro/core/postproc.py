@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .schedtree import DimSpec, ScanStmt, scan_from_schedule, yvar as _yvar
 from .scheduler import Schedule

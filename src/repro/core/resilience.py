@@ -53,8 +53,8 @@ from __future__ import annotations
 import random
 import time
 from contextlib import contextmanager
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
 
 #: every named fault site threaded through the pipeline.  Arming an
 #: unknown site is an error — a typo must not silently never fire.
@@ -67,6 +67,7 @@ FAULT_SITES = (
     "cc.compile",       # gcc invocation (crunner)
     "cc.run",           # compiled-binary execution (crunner)
     "measure",          # the measurement policy entry (crunner)
+    "pool.dispatch",    # schedd worker-pool job dispatch (launch/schedd)
 )
 
 #: the four-rung degradation ladder, best → worst

@@ -150,8 +150,12 @@ class CacheStats:
     """Every cache outcome, counted — nothing is swallowed untallied.
 
     ``corrupt`` counts quarantined on-disk entries (unpicklable payload,
-    injected read fault); ``evicted`` counts in-memory entries dropped
-    by the size cap.  Indexable like the historical stats dict
+    injected read fault); ``evicted`` counts entries dropped by a cap
+    (the ScheduleCache memory tier's FIFO cap, or a FrameCache's
+    entry/byte caps).  ``bytes`` and ``latency_saved_s`` are maintained
+    by :class:`FrameCache` only: the bytes currently retained, and the
+    cumulative measured compute-seconds that warm hits avoided
+    recomputing.  Indexable like the historical stats dict
     (``stats["hits"]``) so existing callers keep working.
     """
     hits: int = 0
@@ -159,15 +163,19 @@ class CacheStats:
     disk_hits: int = 0
     corrupt: int = 0
     evicted: int = 0
+    bytes: int = 0
+    latency_saved_s: float = 0.0
 
-    def __getitem__(self, k: str) -> int:
+    def __getitem__(self, k: str):
         return getattr(self, k)
 
-    def __setitem__(self, k: str, v: int) -> None:
+    def __setitem__(self, k: str, v) -> None:
         setattr(self, k, v)
 
-    def as_dict(self) -> Dict[str, int]:
-        return asdict(self)
+    def as_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["latency_saved_s"] = round(d["latency_saved_s"], 6)
+        return d
 
 
 class ScheduleCache:
@@ -278,6 +286,133 @@ class ScheduleCache:
 
     def clear(self) -> None:
         self.mem.clear()
+
+
+# ---------------------------------------------------------------------------
+# frame cache: pre-encoded response frames, retained by latency saved
+# ---------------------------------------------------------------------------
+
+
+class _Frame:
+    """One cached frame: the encoded bytes, the measured seconds the
+    original computation took (what a warm hit saves), and hit count."""
+
+    __slots__ = ("frame", "compute_s", "hits", "seq")
+
+    def __init__(self, frame: bytes, compute_s: float, seq: int):
+        self.frame = frame
+        self.compute_s = compute_s
+        self.hits = 0
+        self.seq = seq
+
+    @property
+    def score(self) -> float:
+        """Measured compute seconds saved per byte of cache spent."""
+        return self.compute_s / max(1, len(self.frame))
+
+
+class FrameCache:
+    """Latency-saved-weighted cache of pre-encoded response frames.
+
+    The schedd daemon keeps warm, non-degraded responses as encoded
+    frames so a repeat request is one ``sendall``.  FIFO eviction (the
+    PR-7 policy) treats a 2-second autotune the same as a 2-millisecond
+    plan; this cache instead scores every entry by the **measured
+    compute seconds a warm hit saves per byte of cache spent**
+    (``compute_s / len(frame)``, from the flight timings the daemon
+    already collects) and always evicts the lowest score first —
+    including the newcomer, so a cheap-to-recompute frame never
+    displaces an expensive one.
+
+    Retention is provably no worse than FIFO: every eviction discards
+    the minimum-score element of a full cache, so any key FIFO would
+    still hold was only dropped here in favour of keys scoring at least
+    as high (``tests/test_framecache.py`` replays random traces against
+    a FIFO baseline to pin this down).
+
+    ``stats`` is a :class:`CacheStats`: ``hits``/``misses`` per lookup,
+    ``evicted`` per cap-driven drop (newcomer rejections included),
+    ``bytes`` the currently retained total, and ``latency_saved_s`` the
+    cumulative compute seconds that hits avoided.  Not thread-safe —
+    the daemon serializes access under its own lock.
+    """
+
+    def __init__(self, cap_entries: int = 256, cap_bytes: int = 32 << 20,
+                 stats: Optional[CacheStats] = None):
+        self.cap_entries = cap_entries
+        self.cap_bytes = cap_bytes
+        self.stats = stats if stats is not None else CacheStats()
+        self._entries: Dict[Any, _Frame] = {}
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._entries
+
+    def get(self, key: Any) -> Optional[bytes]:
+        e = self._entries.get(key)
+        if e is None:
+            self.stats.misses += 1
+            return None
+        e.hits += 1
+        self.stats.hits += 1
+        self.stats.latency_saved_s += e.compute_s
+        return e.frame
+
+    def put(self, key: Any, frame: bytes, compute_s: float) -> bool:
+        """Admit ``frame`` (``compute_s`` = measured seconds the
+        computation took).  Returns True when the key is retained after
+        cap enforcement — a newcomer scoring below everything already
+        cached is dropped immediately (and counted as evicted)."""
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.stats.bytes -= len(old.frame)
+        e = _Frame(frame, max(0.0, float(compute_s)), self._seq)
+        self._seq += 1
+        if old is not None:
+            e.hits = old.hits
+        self._entries[key] = e
+        self.stats.bytes += len(frame)
+        self._enforce_caps()
+        return key in self._entries
+
+    def _enforce_caps(self) -> None:
+        while self._entries and (len(self._entries) > self.cap_entries
+                                 or self.stats.bytes > self.cap_bytes):
+            victim = min(self._entries,
+                         key=lambda k: (self._entries[k].score,
+                                        self._entries[k].seq))
+            dropped = self._entries.pop(victim)
+            self.stats.bytes -= len(dropped.frame)
+            self.stats.evicted += 1
+
+    def retained_latency_s(self) -> float:
+        """Total measured compute seconds the retained set would save if
+        every entry were hit once — the quantity the eviction policy
+        maximizes (per byte), and what the property test compares
+        against a FIFO baseline."""
+        return sum(e.compute_s for e in self._entries.values())
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats.bytes = 0
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Introspection row for daemon stats: caps, occupancy and the
+        score range of the retained set."""
+        scores = sorted(e.score for e in self._entries.values())
+        return {
+            "entries": len(self._entries),
+            "cap_entries": self.cap_entries,
+            "bytes": self.stats.bytes,
+            "cap_bytes": self.cap_bytes,
+            "retained_latency_s": round(self.retained_latency_s(), 6),
+            "min_score": scores[0] if scores else None,
+            "max_score": scores[-1] if scores else None,
+            "stats": self.stats.as_dict(),
+        }
 
 
 _GLOBAL: Optional[ScheduleCache] = None

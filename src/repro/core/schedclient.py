@@ -127,6 +127,17 @@ class RemoteError(SchedClientError):
         self.detail = detail
 
 
+class WorkerCrashed(RemoteError):
+    """A daemon pool worker died (or wedged) computing this request,
+    twice — the daemon already retried once on a fresh worker.  The
+    daemon itself is healthy; the request is the likely poison, so the
+    client falls back in-process rather than hammering the pool."""
+
+    def __init__(self, detail: str = ""):
+        super().__init__("worker_crashed",
+                         detail or "pool worker died computing the request")
+
+
 def response_error(resp: Dict[str, Any]) -> SchedClientError:
     """Map a ``{"ok": False, ...}`` response to its typed exception."""
     kind = str(resp.get("error", "internal"))
@@ -137,6 +148,8 @@ def response_error(resp: Dict[str, Any]) -> SchedClientError:
         return VersionSkew(detail or "incompatible peer versions")
     if kind in ("bad_frame", "bad_request"):
         return ProtocolError(f"{kind}: {detail}")
+    if kind == "worker_crashed":
+        return WorkerCrashed(detail)
     return RemoteError(kind, detail)
 
 
@@ -384,7 +397,7 @@ class SchedClient:
                 self.breaker.success()
                 self.stats.remote_ok += 1
                 return resp
-            except VersionSkew as e:
+            except VersionSkew:
                 # not transient: no retry, breaker opens immediately so
                 # every later request goes straight to the fallback
                 self.stats.version_skew += 1

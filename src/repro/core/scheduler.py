@@ -64,17 +64,15 @@ import re
 import time
 from dataclasses import dataclass, field
 from fractions import Fraction
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from . import costs as C
 from .affine import Affine, parse_constraint
-from .config import DimConfig, Directive, FusionSpec, SchedulerConfig
-from .deps import (Dependence, compiled_poly, compute_dependences,
-                   dep_distance_max, dep_distance_min, dep_distance_range,
-                   minimum, phi_difference)
+from .config import DimConfig, Directive, SchedulerConfig
+from .deps import Dependence, compiled_poly, compute_dependences, dep_distance_max, dep_distance_min, dep_distance_range, phi_difference
 from .farkas import add_farkas_nonneg
 from .ilp import ILPProblem, Unbounded
-from .linalg_q import orth_complement_basis, orth_complement_rows, rank
+from .linalg_q import orth_complement_basis
 from .resilience import fault_point
 from .scop import Scop, Statement
 
@@ -265,7 +263,6 @@ class PolyTOPSScheduler:
         directives = self._expand_directives()
         vector_iter = {d.stmts[0]: d.iterator for d in directives
                        if d.type == "vectorize" and d.iterator is not None}
-        parallel_directives = [d for d in directives if d.type == "parallel"]
         seq_marked: Set[Tuple[int, int]] = set()
         max_dims = 2 * max((s.dim for s in stmts), default=1) + 3 + len(stmts)
         dim = 0
@@ -282,7 +279,6 @@ class PolyTOPSScheduler:
             if self.deadline is not None:
                 self.deadline.check(f"scheduler dim {dim}")
             comp = completed()
-            unsat = [d for d in active if d.satisfied_at is None]
             if len(comp) == len(stmts):
                 # progression exhausted — remaining (equal-date) dependences
                 # are ordered by the final textual scalar dimension and
@@ -318,12 +314,10 @@ class PolyTOPSScheduler:
                 attempts.append((dc_fb, True))
             attempts.append((attempts[-1][0], False))  # drop directives
 
-            used_dc = None
             for cand, with_dirs in attempts:
                 sol = self._solve_dim(cand, active, comp, H, dim, directives,
                                       vector_iter, with_dirs, band_start)
                 if sol is not None:
-                    used_dc = cand
                     if not with_dirs:
                         dropped.extend(d for d in directives if d.type == "vectorize")
                         directives = [d for d in directives if d.type != "vectorize"]
@@ -1166,7 +1160,6 @@ class PolyTOPSScheduler:
 
 def _scc_groups(stmts: Sequence[Statement], deps: Sequence[Dependence]) -> List[List[int]]:
     """SCC condensation of the dependence graph, in topological order."""
-    n = len(stmts)
     adj: Dict[int, Set[int]] = {s.index: set() for s in stmts}
     for d in deps:
         if d.satisfied_at is None and d.source.index != d.target.index:

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-from .config import Directive, DimConfig, SchedulerConfig, isl_style, tensor_style
+from .config import Directive, DimConfig, SchedulerConfig, tensor_style
 from .scop import Scop
 
 V = 16  # vector-lane width of the paper's operators

@@ -14,7 +14,7 @@ Design goals (scaled-down versions of what a 1000-node fleet needs):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

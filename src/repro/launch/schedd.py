@@ -1,7 +1,8 @@
 """schedd: the fault-tolerant Unix-socket scheduling daemon.
 
     PYTHONPATH=src python -m repro.launch.schedd \
-        --sock /run/user/$UID/schedd.sock [--cache-dir DIR] [--chaos]
+        --sock /run/user/$UID/schedd.sock [--workers N] [--cache-dir DIR] \
+        [--chaos]
 
 The paper puts PolyTOPS *inside* a production compiler, where compiles
 arrive concurrently from many clients and must be amortized, not
@@ -17,10 +18,41 @@ in :mod:`repro.core.schedclient`.  Guarantees:
   non-degraded responses are additionally kept as pre-encoded frames,
   so a warm hit is one ``sendall`` of cached bytes — no re-pickling.
 
+* **Worker pool** — with ``--workers N`` the accept loop stays a thin
+  coalescing/shedding front and every non-coalesced keyed computation
+  is dispatched to one of N *forked* worker processes (each inheriting
+  the already-imported scheduling stack, so the fork is warm).  Distinct
+  keys genuinely schedule in parallel across cores instead of
+  serializing on one GIL.  The request's remaining deadline budget is
+  re-measured at dispatch and propagated into the worker; worker
+  failures come back as the same typed error dicts the inline path
+  produces.  A worker that dies mid-job (``kill -9``, OOM) is detected
+  through its pipe, counted, journalled as a witnessed crash, replaced,
+  and the job is retried once on a fresh worker — a poison request
+  burns exactly two workers and yields a typed ``worker_crashed``
+  response (the client's cue to fall back in-process).  ``--workers 0``
+  (the default) computes inline in the connection thread, the
+  single-process behaviour this daemon always had.
+
+* **Latency-saved frame cache** — warm frames are retained by a
+  :class:`~repro.core.schedcache.FrameCache` scored on *measured
+  compute seconds saved per byte* (each flight's wall time is recorded
+  when its frame is admitted), evicting the lowest score first — a
+  multi-second autotune frame is never displaced by a swarm of
+  millisecond plan frames.
+
+* **Winner-store push** — an autotune computation also returns its
+  winning configuration's *schedule* (already computed during the
+  search); the daemon pushes that frame into the frame cache **before**
+  waking coalesced followers, so a follow-up ``schedule`` request for
+  the tuned config is a warm one-``sendall`` hit even on its first
+  arrival.
+
 * **Deadline propagation** — a request's ``deadline_s`` (the client's
   remaining budget) resumes as a server-side
   :class:`~repro.core.resilience.Deadline` threaded into the ladder /
-  autotuner, so the end-to-end budget covers the wire hop too.
+  autotuner (re-measured at worker dispatch), so the end-to-end budget
+  covers the wire hop and the pool queue too.
 
 * **Load shedding** — when ``max_inflight`` distinct computations are
   already running, new *keyed work* is refused with a typed
@@ -39,9 +71,12 @@ in :mod:`repro.core.schedclient`.  Guarantees:
   every persistent store the daemon touches (schedule pickles, the
   winner store, ``measurements.jsonl``) already publishes atomically
   (PR 6), and on restart the journal's begin-without-done rows are
-  counted as ``journal_recovered`` and cleared.  Degraded results are
-  never persisted and never frame-cached — a transient fault cannot
-  poison future clients.
+  counted as ``journal_recovered`` and cleared.  A worker killed
+  mid-autotune is *witnessed*: the daemon appends a ``crashed`` row
+  (which completes the begin, so a witnessed crash is never
+  double-counted as an orphan on restart) and retries the job.
+  Degraded results are never persisted and never frame-cached — a
+  transient fault cannot poison future clients.
 
 * **Hostile-socket robustness** — per-connection recv timeouts drop
   slow-loris peers; bad magic, truncated frames, oversized lengths and
@@ -49,25 +84,31 @@ in :mod:`repro.core.schedclient`.  Guarantees:
   closed connection; no client behaviour can crash the daemon.
 
 ``--chaos`` enables the test-only ``test_delay_s`` request field (the
-chaos sweep and bench use it to hold a computation open long enough to
-race a second client or a ``kill -9`` against it).
+chaos sweep and benches use it to hold a computation open long enough
+to race a second client or a ``kill -9`` against it) and
+``test_kill_worker`` (a pool worker SIGKILLs itself mid-job — the
+worker-crash recovery drill).
 """
 from __future__ import annotations
 
 import argparse
 import hashlib
 import json
+import multiprocessing
 import os
+import queue
 import signal
 import socket
 import sys
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..core import schedclient as wire
-from ..core.resilience import Deadline, provenance, schedule_with_ladder
-from ..core.schedcache import ScheduleCache, schedule_key, scop_fingerprint
+from ..core.resilience import Deadline, fault_point, provenance, \
+    schedule_with_ladder
+from ..core.schedcache import FrameCache, ScheduleCache, schedule_key, \
+    scop_fingerprint
 
 try:
     import fcntl
@@ -76,6 +117,16 @@ except ImportError:            # non-POSIX: O_APPEND keeps lines atomic
 
 JOURNAL_FILE = "schedd_journal.jsonl"
 
+#: a frame pushed from an autotune winner is valued at this fraction of
+#: the autotune flight's wall time: a follower hitting it saves a
+#: schedule computation, not the whole search — but the push should
+#: still outrank millisecond plan frames under eviction pressure
+PUSH_COST_FRACTION = 0.1
+
+#: set in pool workers only — guards the chaos-only self-kill field so
+#: an inline daemon can never SIGKILL itself
+_IN_POOL_WORKER = False
+
 
 # ---------------------------------------------------------------------------
 # autotune journal
@@ -83,17 +134,20 @@ JOURNAL_FILE = "schedd_journal.jsonl"
 
 
 class AutotuneJournal:
-    """Append-only begin/done journal for accepted autotune work.
+    """Append-only begin/done/crashed journal for accepted autotune work.
 
     The journal exists for *observability after a crash*, not for
     replay: every store autotune writes (winner pickles, the
     measurement pool) publishes atomically, so a ``kill -9``
     mid-request can only lose the in-flight measurement — the journal's
-    begin-without-done rows say exactly which work that was.  Appends
-    reuse the measurement pool's discipline (one ``write`` on an
-    O_APPEND handle under an advisory flock); torn tail lines from a
-    dying writer are tolerated on read.  Disk trouble degrades to
-    "not journalled" — it never fails the request."""
+    begin-without-done rows say exactly which work that was.  A pool
+    worker's death is different: the daemon survives to witness it, so
+    it appends a ``crashed`` row — which completes the begin (the loss
+    is already accounted) instead of leaving a false orphan for the
+    next restart.  Appends reuse the measurement pool's discipline (one
+    ``write`` on an O_APPEND handle under an advisory flock); torn tail
+    lines from a dying writer are tolerated on read.  Disk trouble
+    degrades to "not journalled" — it never fails the request."""
 
     def __init__(self, path: str):
         self.path = path
@@ -121,10 +175,17 @@ class AutotuneJournal:
     def done(self, key: str) -> None:
         self._append({"ev": "done", "key": key})
 
+    def crashed(self, key: str, detail: str = "") -> None:
+        """A worker died computing ``key`` and the daemon witnessed it —
+        completes the begin so restart-time recovery doesn't re-count a
+        loss that was already observed and (once) retried."""
+        self._append({"ev": "crashed", "key": key, "detail": detail})
+
     def recover(self) -> List[str]:
         """Keys begun but never finished by a previous daemon (the work
-        a crash interrupted).  Clears the journal atomically; returns []
-        on any disk trouble."""
+        a crash interrupted).  ``done`` and witnessed ``crashed`` rows
+        both complete a begin.  Clears the journal atomically; returns
+        [] on any disk trouble."""
         orphans: List[str] = []
         try:
             with open(self.path) as f:
@@ -140,7 +201,8 @@ class AutotuneJournal:
                     key = str(row.get("key"))
                     if row.get("ev") == "begin":
                         begun[key] = begun.get(key, 0) + 1
-                    elif row.get("ev") == "done" and begun.get(key):
+                    elif (row.get("ev") in ("done", "crashed")
+                          and begun.get(key)):
                         begun[key] -= 1
                 orphans = sorted(k for k, n in begun.items() if n > 0)
             import tempfile
@@ -155,6 +217,378 @@ class AutotuneJournal:
         except Exception:
             return []
         return orphans
+
+
+# ---------------------------------------------------------------------------
+# the computation itself — shared by the inline path and pool workers
+# ---------------------------------------------------------------------------
+
+
+def compute_request(op: str, req: Dict[str, Any], cache: ScheduleCache, *,
+                    chaos: bool = False,
+                    deadline: Optional[Deadline] = None
+                    ) -> Tuple[Dict[str, Any], bool, List[Tuple[Any, Dict[str, Any]]]]:
+    """Run one keyed computation exactly as the daemon serves it.
+
+    Returns ``(response_dict, cacheable, pushes)``: the wire response,
+    whether its frame may be retained warm (non-degraded success), and
+    any *push* entries — ``(frame_key, response_dict)`` pairs for
+    sibling keys this computation warmed as a by-product (today: an
+    autotune winner's schedule).  Runs identically inline (``--workers
+    0``) and inside a forked pool worker; typed failures come back as
+    error dicts, anything else raises for the caller to marshal.
+    """
+    if chaos and req.get("test_kill_worker") and _IN_POOL_WORKER:
+        os.kill(os.getpid(), signal.SIGKILL)      # the kill -9 drill
+    if deadline is None:
+        budget = req.get("deadline_s")
+        deadline = Deadline(float(budget)) if budget is not None else None
+    if chaos and req.get("test_delay_s"):
+        time.sleep(float(req["test_delay_s"]))
+
+    if op == "schedule":
+        return _compute_schedule(req, cache, deadline)
+    if op == "autotune":
+        return _compute_autotune(req, cache, deadline)
+    if op == "plan":
+        return _compute_plan(req, cache, deadline)
+    return ({"ok": False, "error": "bad_request",
+             "detail": f"unknown op {op!r}"}, False, [])
+
+
+def _compute_schedule(req, cache, deadline):
+    from ..core.config import SchedulerConfig
+
+    scop = req["scop"]
+    config = req.get("config") or SchedulerConfig()
+    engine = req.get("engine", "lex")
+    with_tree = bool(req.get("with_tree", False))
+    extra = dict(req.get("extra") or {})
+    sched = schedule_with_ladder(
+        scop, config, engine=engine, deadline=deadline,
+        cache=cache, with_tree=with_tree, **extra)
+    prov = provenance(sched)
+    meta = {"degraded": prov["degraded"], "rung": prov["rung"],
+            "pid": os.getpid()}
+    # degraded schedules are served (every rung is legal) but never
+    # frame-cached: the next request re-plans clean
+    return ({"ok": True, "result": sched, "meta": meta},
+            not prov["degraded"], [])
+
+
+def _compute_autotune(req, cache, deadline):
+    from ..core.autotune import autotune
+
+    scop = req["scop"]
+    kwargs = dict(req.get("kwargs") or {})
+    result = autotune(scop, deadline=deadline, cache=cache, **kwargs)
+    meta = {"degraded": result.degraded, "source": result.source,
+            "pid": os.getpid()}
+    pushes: List[Tuple[Any, Dict[str, Any]]] = []
+    if not result.degraded:
+        # winner-store push: the search already scheduled the winning
+        # base through the cache, so its Schedule is warm here — hand
+        # it up so the daemon can pre-encode the frame a follower's
+        # plain `schedule` request for the tuned config would ask for
+        try:
+            wcfg = result.config.scheduler_config()
+            wkey = schedule_key(scop, wcfg, "lex")
+            sched = cache.get(wkey) if wkey is not None else None
+            if sched is not None and not getattr(sched, "degraded", False):
+                pushes.append((("schedule", wkey, False),
+                               {"ok": True, "result": sched,
+                                "meta": {"degraded": False, "rung": 0,
+                                         "pid": os.getpid(),
+                                         "pushed": True}}))
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception:
+            pass          # the push is an optimization, never a failure
+    return ({"ok": True, "result": result, "meta": meta},
+            not result.degraded, pushes)
+
+
+def _compute_plan(req, cache, deadline):
+    from ..core import akg
+
+    kind = req.get("kind")
+    planners = {"matmul": akg.plan_matmul,
+                "attention": akg.plan_attention,
+                "mamba_scan": akg.plan_mamba_scan}
+    if kind not in planners:
+        return ({"ok": False, "error": "bad_request",
+                 "detail": f"unknown plan kind {kind!r}"}, False, [])
+    args = tuple(req.get("args") or ())
+    kwargs = dict(req.get("kwargs") or {})
+    plan = planners[kind](*args, **kwargs)
+    meta = {"degraded": plan.degraded, "pid": os.getpid()}
+    return ({"ok": True, "result": plan, "meta": meta},
+            not plan.degraded, [])
+
+
+# ---------------------------------------------------------------------------
+# the worker pool
+# ---------------------------------------------------------------------------
+
+
+class WorkerCrash(Exception):
+    """A pool worker died (or wedged past its cap) computing a job.
+    Internal to the daemon — on the wire this becomes the typed
+    ``worker_crashed`` error kind."""
+
+
+def _worker_main(conn, cache_dir: Optional[str], disk: bool,
+                 chaos: bool) -> None:
+    """One pool worker: recv job → compute → send result, forever.
+
+    Forked from the daemon after the scheduling stack is imported, so
+    the fork inherits warm modules.  Marks itself a server process
+    (its own akg/plan work must never route back through a client),
+    opens its own ScheduleCache handle on the shared pool directory
+    (the disk tier's atomic publishes make cross-process sharing safe),
+    and exits via ``os._exit`` so inherited atexit machinery (pytest,
+    coverage) never runs in the child."""
+    global _IN_POOL_WORKER
+    _IN_POOL_WORKER = True
+    wire.mark_server_process()
+    try:
+        signal.signal(signal.SIGINT, signal.SIG_IGN)
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+    except (ValueError, OSError):
+        pass
+    cache = ScheduleCache(cache_dir=cache_dir, disk=disk)
+    code = 0
+    while True:
+        try:
+            job = conn.recv()
+        except (EOFError, OSError):
+            break
+        if job is None:                   # clean shutdown sentinel
+            break
+        op, req = job
+        t0 = time.perf_counter()
+        try:
+            resp, cacheable, pushes = compute_request(op, req, cache,
+                                                      chaos=chaos)
+        except (KeyboardInterrupt, SystemExit):
+            code = 1
+            break
+        except Exception as e:            # typed marshalling, never a crash
+            resp, cacheable, pushes = (
+                {"ok": False, "error": "internal",
+                 "detail": f"{type(e).__name__}: {e}"}, False, [])
+        payload = (resp, cacheable, pushes, time.perf_counter() - t0)
+        try:
+            conn.send(payload)
+        except (BrokenPipeError, OSError):
+            break
+        except Exception as e:            # unpicklable result: typed reply
+            try:
+                conn.send(({"ok": False, "error": "internal",
+                            "detail": f"unmarshallable result: "
+                                      f"{type(e).__name__}: {e}"},
+                           False, [], time.perf_counter() - t0))
+            except Exception:
+                break
+    os._exit(code)
+
+
+class _WorkerProc:
+    __slots__ = ("proc", "conn")
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+
+
+class WorkerPool:
+    """N forked worker processes, each serving one job at a time.
+
+    Dispatch is pull-based: a daemon connection thread takes an idle
+    worker off the queue, sends the job down its pipe, and waits for
+    the reply while watching liveness — so a ``kill -9`` of a worker is
+    detected within the poll interval, the corpse is replaced, and
+    :meth:`run` retries the job once on a fresh worker.  A worker that
+    exceeds the job cap (the request deadline plus grace, or
+    ``job_timeout_s``) is presumed wedged, killed and replaced the same
+    way.  Workers are forked *after* the scheduling stack is imported
+    into the daemon, so every worker starts warm and respawns never
+    race daemon threads through the import machinery."""
+
+    POLL_S = 0.1
+    GRACE_S = 10.0
+
+    def __init__(self, workers: int, cache_dir: Optional[str], *,
+                 disk: bool = True, chaos: bool = False,
+                 job_timeout_s: float = 600.0):
+        # warm the stack once in the parent; every fork inherits it
+        from ..core import akg              # noqa: F401
+        from ..core import autotune         # noqa: F401
+        from ..core import config           # noqa: F401
+        from ..core import scheduler        # noqa: F401
+
+        self.workers = workers
+        self.cache_dir = cache_dir
+        self.disk = disk
+        self.chaos = chaos
+        self.job_timeout_s = job_timeout_s
+        try:
+            self._ctx = multiprocessing.get_context("fork")
+        except ValueError:                  # non-POSIX: cold spawns
+            self._ctx = multiprocessing.get_context()
+        self._lock = threading.Lock()
+        self._idle: "queue.Queue[_WorkerProc]" = queue.Queue()
+        self._procs: List[_WorkerProc] = []
+        self.spawned = 0
+        self.crashes = 0
+        self.jobs = 0
+        self._closed = False
+        for _ in range(workers):
+            self._idle.put(self._spawn())
+
+    def _spawn(self) -> _WorkerProc:
+        parent, child = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(child, self.cache_dir, self.disk, self.chaos),
+            daemon=True, name="schedd-worker")
+        proc.start()
+        child.close()
+        w = _WorkerProc(proc, parent)
+        with self._lock:
+            self._procs.append(w)
+            self.spawned += 1
+        return w
+
+    def _retire(self, w: _WorkerProc) -> None:
+        with self._lock:
+            if w in self._procs:
+                self._procs.remove(w)
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        if w.proc.is_alive():
+            w.proc.kill()
+        w.proc.join(timeout=5.0)
+
+    def _acquire(self, deadline: Optional[Deadline]) -> _WorkerProc:
+        cap = self.job_timeout_s
+        if deadline is not None and deadline.budget_s is not None:
+            cap = min(cap, max(deadline.remaining(), 0.0) + self.GRACE_S)
+        end = time.monotonic() + cap
+        while True:
+            if self._closed:
+                raise WorkerCrash("pool closed")
+            try:
+                w = self._idle.get(timeout=self.POLL_S)
+            except queue.Empty:
+                if time.monotonic() >= end:
+                    raise WorkerCrash(
+                        f"no idle worker within {cap:.1f}s "
+                        f"({self.workers} workers all busy)")
+                continue
+            if w.proc.is_alive():
+                return w
+            # a corpse parked in the idle queue (killed between jobs)
+            with self._lock:
+                self.crashes += 1
+            self._retire(w)
+            self._idle.put(self._spawn())
+
+    def run_once(self, op: str, req: Dict[str, Any],
+                 deadline: Optional[Deadline]) -> Tuple:
+        """One job on one worker; raises :class:`WorkerCrash` when the
+        worker dies or wedges.  Returns the worker's
+        ``(resp, cacheable, pushes, compute_s)`` tuple."""
+        w = self._acquire(deadline)
+        with self._lock:
+            self.jobs += 1
+        lost = False
+        try:
+            # the budget is re-measured at dispatch: pool queue wait has
+            # already consumed part of the client's remaining time
+            if deadline is not None and deadline.budget_s is not None:
+                req = dict(req, deadline_s=max(deadline.remaining(), 0.0))
+            cap = self.job_timeout_s
+            if deadline is not None and deadline.budget_s is not None:
+                cap = min(cap, max(deadline.remaining(), 0.0) + self.GRACE_S)
+            try:
+                w.conn.send((op, req))
+                end = time.monotonic() + cap
+                while True:
+                    if w.conn.poll(self.POLL_S):
+                        return w.conn.recv()
+                    if not w.proc.is_alive():
+                        raise WorkerCrash(
+                            f"worker pid {w.proc.pid} died mid-job")
+                    if time.monotonic() >= end:
+                        raise WorkerCrash(
+                            f"worker pid {w.proc.pid} wedged past "
+                            f"{cap:.1f}s cap; killed")
+            except (EOFError, BrokenPipeError, OSError) as e:
+                raise WorkerCrash(f"worker pipe died: {e}") from e
+        except WorkerCrash:
+            lost = True
+            raise
+        finally:
+            if lost:
+                with self._lock:
+                    self.crashes += 1
+                self._retire(w)
+                if not self._closed:
+                    self._idle.put(self._spawn())
+            else:
+                self._idle.put(w)
+
+    def run(self, op: str, req: Dict[str, Any],
+            deadline: Optional[Deadline],
+            on_crash: Optional[Callable[[WorkerCrash], None]] = None
+            ) -> Tuple:
+        """:meth:`run_once` with one bounded retry on a fresh worker —
+        a random crash is recovered transparently; a poison request
+        burns exactly two workers, then surfaces as
+        :class:`WorkerCrash` for the daemon to marshal as the typed
+        ``worker_crashed`` response."""
+        try:
+            return self.run_once(op, req, deadline)
+        except WorkerCrash as e:
+            if on_crash is not None:
+                on_crash(e)
+            return self.run_once(op, req, deadline)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"workers": self.workers, "spawned": self.spawned,
+                    "crashes": self.crashes, "jobs": self.jobs,
+                    "idle": self._idle.qsize()}
+
+    def close(self) -> None:
+        self._closed = True
+        while True:                       # polite sentinel to idle workers
+            try:
+                w = self._idle.get_nowait()
+            except queue.Empty:
+                break
+            try:
+                w.conn.send(None)
+            except (BrokenPipeError, OSError):
+                pass
+        with self._lock:
+            procs = list(self._procs)
+            self._procs = []
+        for w in procs:
+            w.proc.join(timeout=1.0)
+            if w.proc.is_alive():
+                w.proc.terminate()
+                w.proc.join(timeout=2.0)
+            if w.proc.is_alive():
+                w.proc.kill()
+                w.proc.join(timeout=2.0)
+            try:
+                w.conn.close()
+            except OSError:
+                pass
 
 
 # ---------------------------------------------------------------------------
@@ -184,13 +618,14 @@ class SchedDaemon:
     atomic on-disk publishes, same as the multi-process case."""
 
     def __init__(self, sock_path: str, cache_dir: Optional[str] = None, *,
-                 max_inflight: int = 8, conn_timeout: float = 10.0,
-                 frame_cache_cap: int = 256, chaos: bool = False):
+                 workers: int = 0, max_inflight: int = 8,
+                 conn_timeout: float = 10.0, frame_cache_cap: int = 256,
+                 frame_cache_bytes: int = 32 << 20,
+                 job_timeout: float = 600.0, chaos: bool = False):
         self.sock_path = sock_path
         self.cache = ScheduleCache(cache_dir=cache_dir)
         self.max_inflight = max_inflight
         self.conn_timeout = conn_timeout
-        self.frame_cache_cap = frame_cache_cap
         self.chaos = chaos
         self.journal = (AutotuneJournal(os.path.join(self.cache.dir,
                                                      JOURNAL_FILE))
@@ -199,14 +634,20 @@ class SchedDaemon:
                                      if self.journal else [])
         self._lock = threading.Lock()
         self._flights: Dict[Any, _Flight] = {}
-        self._frames: Dict[Any, bytes] = {}
+        self._frames = FrameCache(cap_entries=frame_cache_cap,
+                                  cap_bytes=frame_cache_bytes)
+        self.pool: Optional[WorkerPool] = (
+            WorkerPool(workers, self.cache.dir, disk=self.cache.disk,
+                       chaos=chaos, job_timeout_s=job_timeout)
+            if workers > 0 else None)
         self._listener: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self.counters: Dict[str, int] = {
             "requests": 0, "computed": 0, "coalesced": 0, "frame_hits": 0,
             "shed": 0, "bad_frames": 0, "version_skew": 0, "slow_loris": 0,
-            "degraded": 0, "errors": 0,
+            "degraded": 0, "errors": 0, "pool_jobs": 0, "worker_crashes": 0,
+            "winner_pushes": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -237,6 +678,8 @@ class SchedDaemon:
                 self._listener.close()
             except OSError:
                 pass
+        if self.pool is not None:
+            self.pool.close()
         try:
             os.unlink(self.sock_path)
         except OSError:
@@ -291,9 +734,10 @@ class SchedDaemon:
                         "detail": f"request is {type(req).__name__}, "
                                   f"not a dict"})
                     continue
-                # local_only: the handlers call into akg, whose remote
-                # hook must never route the daemon's own work back to a
-                # daemon (ourselves, for the in-process test harness)
+                # local_only: the inline handlers call into akg, whose
+                # remote hook must never route the daemon's own work
+                # back to a daemon (ourselves, for the in-process test
+                # harness); pool workers carry the server mark instead
                 with wire.local_only():
                     frame = self._dispatch(req)
                 conn.sendall(frame)
@@ -356,22 +800,21 @@ class SchedDaemon:
         budget = req.get("deadline_s")
         return Deadline(float(budget)) if budget is not None else None
 
-    def _test_delay(self, req: Dict[str, Any]) -> None:
-        """Chaos/bench-only hold: lets a harness keep a computation
-        in-flight long enough to race a second client or a kill -9."""
-        if self.chaos and req.get("test_delay_s"):
-            time.sleep(float(req["test_delay_s"]))
+    # -- coalescing + compute core ----------------------------------------
 
-    # -- coalescing core ---------------------------------------------------
-
-    def _serve_keyed(self, key: Optional[Any], compute,
+    def _serve_keyed(self, key: Optional[Any], op: str,
+                     req: Dict[str, Any],
                      deadline: Optional[Deadline]) -> bytes:
         """Coalesce + shed + frame-cache around one keyed computation.
 
-        ``compute()`` returns ``(response_dict, cacheable)``; the
-        encoded frame is shared with every coalesced waiter and, when
-        cacheable (non-degraded success), kept for warm hits."""
+        The computation itself runs through :meth:`_compute_job`
+        (inline or on a pool worker).  The encoded frame is shared with
+        every coalesced waiter and, when cacheable (non-degraded
+        success), admitted to the latency-saved frame cache weighted by
+        the flight's measured wall time; winner pushes are admitted
+        *before* the flight event wakes the waiters."""
         owner_flight: Optional[_Flight] = None
+        existing: Optional[_Flight] = None
         if key is not None:
             with self._lock:
                 cached = self._frames.get(key)
@@ -412,27 +855,89 @@ class SchedDaemon:
 
         self._count("computed")
         try:
-            resp, cacheable = compute()
+            resp, cacheable, pushes, compute_s = self._compute_job(
+                key, op, req, deadline)
             # encode inside the try: an unencodable result must not
             # leave coalesced waiters blocked on a never-set flight
             frame = wire.encode_frame(resp)
         except (KeyboardInterrupt, SystemExit):
             raise
         except Exception as e:
-            self._count("errors")
-            resp, cacheable = ({"ok": False, "error": "internal",
-                                "detail": f"{type(e).__name__}: {e}"}, False)
+            resp, cacheable, pushes, compute_s = (
+                {"ok": False, "error": "internal",
+                 "detail": f"{type(e).__name__}: {e}"}, False, [], 0.0)
             frame = wire.encode_frame(resp)
+        meta = resp.get("meta") if isinstance(resp, dict) else None
+        if isinstance(meta, dict) and meta.get("degraded"):
+            self._count("degraded")
+        if not resp.get("ok") and resp.get("error") in ("internal",
+                                                        "worker_crashed"):
+            self._count("errors")
         if owner_flight is not None:
             with self._lock:
                 self._flights.pop(key, None)
                 if cacheable and resp.get("ok"):
-                    if len(self._frames) >= self.frame_cache_cap:
-                        self._frames.pop(next(iter(self._frames)))
-                    self._frames[key] = frame
+                    self._frames.put(key, frame, compute_s)
+                # winner-store push BEFORE event.set(): a follower woken
+                # by this flight already finds the pushed frame warm
+                for pkey, presp in pushes or ():
+                    if pkey in self._frames or pkey in self._flights:
+                        continue
+                    try:
+                        pframe = wire.encode_frame(presp)
+                    except Exception:
+                        continue
+                    if self._frames.put(pkey, pframe,
+                                        compute_s * PUSH_COST_FRACTION):
+                        self.counters["winner_pushes"] += 1
             owner_flight.frame = frame
             owner_flight.event.set()
         return frame
+
+    def _compute_job(self, key: Optional[Any], op: str,
+                     req: Dict[str, Any],
+                     deadline: Optional[Deadline]) -> Tuple:
+        """One computation: pool dispatch (with crash retry + journal
+        witnessing) when a pool exists, else inline.  Returns
+        ``(resp, cacheable, pushes, compute_s)``; only unexpected
+        daemon-side failures raise."""
+        fault_point("pool.dispatch")
+        jkey: Optional[str] = None
+        if (op == "autotune" and self.journal is not None
+                and isinstance(key, tuple) and len(key) == 2):
+            jkey = str(key[1])
+            # journal BEFORE the computation (including any chaos hold):
+            # the work is accepted the moment we own the flight, so a
+            # kill -9 during it is exactly the "crash mid-request" the
+            # journal must witness
+            self.journal.begin(jkey)
+        outcome = "done"
+        try:
+            if self.pool is not None:
+                self._count("pool_jobs")
+
+                def witness(crash: WorkerCrash) -> None:
+                    self._count("worker_crashes")
+                    if jkey is not None and self.journal is not None:
+                        self.journal.crashed(jkey, str(crash))
+
+                try:
+                    return self.pool.run(op, req, deadline, on_crash=witness)
+                except WorkerCrash as e:
+                    outcome = "crashed"
+                    witness(e)
+                    return ({"ok": False, "error": "worker_crashed",
+                             "detail": str(e)}, False, [], 0.0)
+            t0 = time.perf_counter()
+            resp, cacheable, pushes = compute_request(
+                op, req, self.cache, chaos=self.chaos, deadline=deadline)
+            return resp, cacheable, pushes, time.perf_counter() - t0
+        finally:
+            if jkey is not None and self.journal is not None \
+                    and outcome == "done":
+                # done even on typed failure: the work is over either
+                # way — only an unwitnessed crash leaves an orphan
+                self.journal.done(jkey)
 
     # -- handlers ----------------------------------------------------------
 
@@ -444,36 +949,16 @@ class SchedDaemon:
         engine = req.get("engine", "lex")
         with_tree = bool(req.get("with_tree", False))
         extra = dict(req.get("extra") or {})
-        deadline = self._deadline(req)
         try:
             skey = schedule_key(scop, config, engine, extra=extra)
         except Exception:
             skey = None
         key = ("schedule", skey, with_tree) if skey is not None else None
-
-        def compute() -> Tuple[Dict[str, Any], bool]:
-            self._test_delay(req)
-            sched = schedule_with_ladder(
-                scop, config, engine=engine, deadline=deadline,
-                cache=self.cache, with_tree=with_tree, **extra)
-            prov = provenance(sched)
-            if prov["degraded"]:
-                self._count("degraded")
-            meta = {"degraded": prov["degraded"], "rung": prov["rung"],
-                    "pid": os.getpid()}
-            # degraded schedules are served (every rung is legal) but
-            # never frame-cached: the next request re-plans clean
-            return ({"ok": True, "result": sched, "meta": meta},
-                    not prov["degraded"])
-
-        return self._serve_keyed(key, compute, deadline)
+        return self._serve_keyed(key, "schedule", req, self._deadline(req))
 
     def _handle_autotune(self, req: Dict[str, Any]) -> bytes:
-        from ..core.autotune import autotune
-
         scop = req["scop"]
         kwargs = dict(req.get("kwargs") or {})
-        deadline = self._deadline(req)
         try:
             digest = hashlib.sha256(json.dumps(
                 {"scop": scop_fingerprint(scop),
@@ -482,62 +967,24 @@ class SchedDaemon:
                 default=str).encode()).hexdigest()
             key: Optional[Any] = ("autotune", digest)
         except Exception:
-            digest, key = None, None
-
-        def compute() -> Tuple[Dict[str, Any], bool]:
-            # journal BEFORE the chaos hold: the work is accepted the
-            # moment we own the flight, so a kill -9 during the hold is
-            # exactly the "crash mid-request" the journal must witness
-            if self.journal is not None and digest is not None:
-                self.journal.begin(digest)
-            self._test_delay(req)
-            try:
-                result = autotune(scop, deadline=deadline,
-                                  cache=self.cache, **kwargs)
-            finally:
-                # done even on failure: the work is over either way —
-                # only a crash leaves a begin-without-done orphan
-                if self.journal is not None and digest is not None:
-                    self.journal.done(digest)
-            if result.degraded:
-                self._count("degraded")
-            meta = {"degraded": result.degraded, "source": result.source,
-                    "pid": os.getpid()}
-            return ({"ok": True, "result": result, "meta": meta},
-                    not result.degraded)
-
-        return self._serve_keyed(key, compute, deadline)
+            key = None
+        return self._serve_keyed(key, "autotune", req, self._deadline(req))
 
     def _handle_plan(self, req: Dict[str, Any]) -> bytes:
-        from ..core import akg
-
         kind = req.get("kind")
-        args = tuple(req.get("args") or ())
-        kwargs = dict(req.get("kwargs") or {})
-        planners = {"matmul": akg.plan_matmul,
-                    "attention": akg.plan_attention,
-                    "mamba_scan": akg.plan_mamba_scan}
-        if kind not in planners:
+        if kind not in ("matmul", "attention", "mamba_scan"):
+            # reject before burning a flight slot or a pool worker
             return wire.encode_frame({
                 "ok": False, "error": "bad_request",
                 "detail": f"unknown plan kind {kind!r}"})
+        args = tuple(req.get("args") or ())
+        kwargs = dict(req.get("kwargs") or {})
         try:
             key: Optional[Any] = ("plan", kind, args,
                                   tuple(sorted(kwargs.items())))
         except TypeError:
             key = None
-        deadline = self._deadline(req)
-
-        def compute() -> Tuple[Dict[str, Any], bool]:
-            self._test_delay(req)
-            plan = planners[kind](*args, **kwargs)
-            if plan.degraded:
-                self._count("degraded")
-            meta = {"degraded": plan.degraded, "pid": os.getpid()}
-            return ({"ok": True, "result": plan, "meta": meta},
-                    not plan.degraded)
-
-        return self._serve_keyed(key, compute, deadline)
+        return self._serve_keyed(key, "plan", req, self._deadline(req))
 
     # -- introspection -----------------------------------------------------
 
@@ -545,14 +992,17 @@ class SchedDaemon:
         with self._lock:
             counters = dict(self.counters)
             inflight = len(self._flights)
-            frames = len(self._frames)
+            frames = self._frames.snapshot()
         return {
             "pid": os.getpid(),
             "sock": self.sock_path,
             "cache_dir": self.cache.dir,
             "counters": counters,
             "inflight": inflight,
-            "frame_cache": frames,
+            "workers": self.pool.workers if self.pool is not None else 0,
+            "pool": self.pool.stats() if self.pool is not None else None,
+            "frame_cache": frames["entries"],
+            "frames": frames,
             "cache": self.cache.stats.as_dict(),
             "journal_recovered": len(self.recovered),
             "journal_recovered_keys": list(self.recovered),
@@ -576,11 +1026,19 @@ def main(argv=None) -> int:
                          "or ~/.cache/polytops/schedd.sock)")
     ap.add_argument("--cache-dir", default=None,
                     help="schedule-cache pool (default schedcache's)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="forked worker processes for keyed computations "
+                         "(0 = compute inline in the connection thread)")
     ap.add_argument("--max-inflight", type=int, default=8)
     ap.add_argument("--conn-timeout", type=float, default=10.0,
                     help="per-connection recv timeout (slow-loris guard)")
+    ap.add_argument("--job-timeout", type=float, default=600.0,
+                    help="hard cap on one worker job (wedge guard)")
+    ap.add_argument("--frame-cache-cap", type=int, default=256,
+                    help="frame-cache entry cap")
     ap.add_argument("--chaos", action="store_true",
-                    help="enable the test-only test_delay_s request field")
+                    help="enable the test-only test_delay_s / "
+                         "test_kill_worker request fields")
     args = ap.parse_args(argv)
 
     # the daemon's own scheduling work must never route back through a
@@ -588,11 +1046,14 @@ def main(argv=None) -> int:
     wire.mark_server_process()
 
     daemon = SchedDaemon(args.sock, cache_dir=args.cache_dir,
+                         workers=args.workers,
                          max_inflight=args.max_inflight,
-                         conn_timeout=args.conn_timeout, chaos=args.chaos)
+                         conn_timeout=args.conn_timeout,
+                         frame_cache_cap=args.frame_cache_cap,
+                         job_timeout=args.job_timeout, chaos=args.chaos)
     daemon.start()
     print(f"schedd: pid {os.getpid()} listening on {args.sock} "
-          f"(cache {daemon.cache.dir}, "
+          f"(cache {daemon.cache.dir}, workers {args.workers}, "
           f"journal recovered {len(daemon.recovered)})", flush=True)
 
     def _term(signum, frame):

@@ -7,7 +7,7 @@ the constraints are identity.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

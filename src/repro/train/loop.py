@@ -6,14 +6,11 @@ deliberately framework-shaped: config in, metrics out, restart-safe.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.registry import ArchConfig
 from ..data.pipeline import DataConfig, SyntheticLM

@@ -6,13 +6,12 @@ functions are pure — the launcher decides shardings.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.registry import ArchConfig, ShapeConfig
+from ..configs.registry import ArchConfig
 from ..model import transformer as T
 from ..optim import adamw
 

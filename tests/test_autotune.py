@@ -18,7 +18,7 @@ from repro.core.cachemodel import (CacheSpec, auto_tile_sizes,
                                    band_access_groups, select_tile_sizes,
                                    stmt_access_groups, working_set_bytes)
 from repro.core.schedtree import scan_from_schedule
-from repro.core.postproc import find_tilable_bands, tile_schedule
+from repro.core.postproc import find_tilable_bands
 from repro.core.schedcache import ScheduleCache
 from repro.core.scheduler import PolyTOPSScheduler, schedule_scop
 from repro.core.scops_polybench import (make_gemm, make_gesummv,

@@ -1,13 +1,9 @@
 """Affine parser + exact linear algebra properties."""
-from fractions import Fraction
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.affine import (affine_eval, parse_affine, parse_constraint)
-from repro.core.linalg_q import (eye, inverse, mat, matmul, nullspace,
-                                 orth_complement_basis, orth_complement_rows,
-                                 rank, rref, scale_to_int)
+from repro.core.linalg_q import eye, inverse, mat, matmul, nullspace, orth_complement_basis, orth_complement_rows, rank
 
 
 def test_parse_basic():

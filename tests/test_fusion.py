@@ -21,7 +21,7 @@ band vs one group per SCC).
 import random
 
 import pytest
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import config as CFG
 from repro.core.autotune import TunedConfig, base_configs

@@ -1,7 +1,5 @@
 """ILP layer: HiGHS engine vs the exact rational engine (cross-oracle)."""
-from fractions import Fraction
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.ilp import ILPProblem

@@ -24,7 +24,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import config as CFG
 from repro.core import costs as C
-from repro.core import lexsimplex as LS
 from repro.core.deps import compute_dependences
 from repro.core.farkas import farkas_expansion, project_farkas, replay_farkas
 from repro.core.ilp import ILPProblem, Unbounded

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCH_IDS, SHAPES, get_arch, runnable_cells
+from repro.configs.registry import ARCH_IDS, get_arch, runnable_cells
 from repro.model import transformer as T
 
 

@@ -16,7 +16,6 @@ at unit granularity:
 import json
 import multiprocessing
 import os
-import pickle
 import shutil
 
 import numpy as np
@@ -24,7 +23,7 @@ import pytest
 
 from repro.core.cbackend import array_extents
 from repro.core.codegen import CodeGenerator, interpret_scop
-from repro.core.config import SchedulerConfig, pluto_style, tensor_style
+from repro.core.config import pluto_style, tensor_style
 from repro.core.resilience import (FAULT_SITES, LADDER, REGISTRY, Deadline,
                                    DeadlineExceeded, FaultRegistry,
                                    InjectedFault, MeasurementError,
@@ -33,7 +32,7 @@ from repro.core.resilience import (FAULT_SITES, LADDER, REGISTRY, Deadline,
 from repro.core.schedcache import (ScheduleCache, cached_schedule_scop,
                                    global_cache, load_measurements,
                                    record_measurements, schedule_fingerprint)
-from repro.core.scheduler import PolyTOPSScheduler, schedule_scop
+from repro.core.scheduler import schedule_scop
 from repro.core.scop import Scop
 from repro.core.scops_polybench import make_gemm, make_mm2, make_mvt
 
@@ -138,7 +137,8 @@ def test_fault_sites_frozen():
     # un-covers its call site
     assert FAULT_SITES == (
         "ilp.solve", "farkas.project", "fm.bounds", "cache.read",
-        "cache.write", "cc.compile", "cc.run", "measure")
+        "cache.write", "cc.compile", "cc.run", "measure",
+        "pool.dispatch")
     assert LADDER == ("full", "partial", "pluto_default", "identity")
 
 
@@ -291,7 +291,8 @@ def test_cache_stats_roundtrip(tmp_path):
     _put_one(c2)
     assert c2.stats.disk_hits == 1 and c2.stats["disk_hits"] == 1
     assert set(c2.stats.as_dict()) == {"hits", "misses", "disk_hits",
-                                       "corrupt", "evicted"}
+                                       "corrupt", "evicted", "bytes",
+                                       "latency_saved_s"}
 
 
 def test_cache_corrupt_pickle_quarantined(tmp_path):

@@ -1,13 +1,27 @@
 """schedd daemon + schedclient: protocol, coalescing, shedding,
-deadlines, breaker, journal, fallback.
+deadlines, breaker, journal, worker pool, fallback.
 
 The daemon here runs *in-process* (threads on a temp Unix socket) —
 fast, and the REGISTRY/caches are visible to assertions.  The real
 subprocess + kill -9 scenarios live in scripts/chaos_sweep.py.
+
+Deflake rules for this file (2-core CI, xdist):
+
+* sockets live in a short per-test ``tempfile.mkdtemp`` under /tmp —
+  pytest's ``tmp_path`` can exceed the ~108-byte AF_UNIX path limit
+  under xdist worker nesting;
+* no fixed ``time.sleep`` to "let the daemon catch up" — every
+  ordering assumption waits on an observable daemon counter via
+  :func:`wait_until` (monotonic clock, generous cap);
+* tests exercising the keyed-computation path run at both worker
+  levels (``workers=0`` inline and ``workers=2`` pool) via
+  ``WORKER_LEVELS`` so the two dispatch paths can never drift apart.
 """
 import os
+import shutil
 import socket as socketlib
 import struct
+import tempfile
 import threading
 import time
 from contextlib import contextmanager
@@ -18,10 +32,25 @@ from repro.core import schedclient as wire
 from repro.core.resilience import Deadline
 from repro.core.schedclient import (CircuitBreaker, DaemonUnavailable,
                                     Overloaded, ProtocolError, SchedClient,
-                                    VersionSkew, local_only, wire_versions)
+                                    VersionSkew, WorkerCrashed, local_only,
+                                    wire_versions)
 from repro.core.schedcache import schedule_fingerprint
 from repro.core.scop import Scop
 from repro.launch.schedd import AutotuneJournal, SchedDaemon
+
+#: worker levels every keyed-path test runs at: inline and pooled
+WORKER_LEVELS = [0, 2]
+
+
+def wait_until(pred, timeout=15.0, interval=0.01, msg="condition"):
+    """Poll ``pred`` on the monotonic clock — the only sanctioned way
+    to wait for daemon-side state in this file."""
+    end = time.monotonic() + timeout
+    while time.monotonic() < end:
+        if pred():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out after {timeout}s waiting for {msg}")
 
 
 def tiny_scop(name="schedd_t", n=24):
@@ -43,7 +72,10 @@ def other_scop():
 
 @contextmanager
 def daemon(tmp_path, **kwargs):
-    sock = str(tmp_path / "schedd.sock")
+    # short unique socket dir: AF_UNIX paths cap at ~108 bytes and
+    # xdist-nested tmp_path can blow past that
+    sdir = tempfile.mkdtemp(prefix="sd-", dir="/tmp")
+    sock = os.path.join(sdir, "s.sock")
     kwargs.setdefault("cache_dir", str(tmp_path / "pool"))
     kwargs.setdefault("chaos", True)
     d = SchedDaemon(sock, **kwargs)
@@ -52,6 +84,7 @@ def daemon(tmp_path, **kwargs):
         yield d, sock
     finally:
         d.stop()
+        shutil.rmtree(sdir, ignore_errors=True)
 
 
 # ---------------------------------------------------------------------------
@@ -59,8 +92,9 @@ def daemon(tmp_path, **kwargs):
 # ---------------------------------------------------------------------------
 
 
-def test_schedule_roundtrip_and_frame_cache(tmp_path):
-    with daemon(tmp_path) as (d, sock):
+@pytest.mark.parametrize("workers", WORKER_LEVELS)
+def test_schedule_roundtrip_and_frame_cache(tmp_path, workers):
+    with daemon(tmp_path, workers=workers) as (d, sock):
         c = SchedClient(sock, retries=0)
         scop = tiny_scop()
         s1 = c.schedule(scop)
@@ -70,10 +104,13 @@ def test_schedule_roundtrip_and_frame_cache(tmp_path):
         assert d.counters["computed"] == 1
         assert d.counters["frame_hits"] == 1
         assert c.stats.remote_ok == 2 and c.stats.fallbacks == 0
+        if workers:
+            assert d.counters["pool_jobs"] == 1
 
 
-def test_plan_roundtrip_matches_local(tmp_path):
-    with daemon(tmp_path) as (_, sock):
+@pytest.mark.parametrize("workers", WORKER_LEVELS)
+def test_plan_roundtrip_matches_local(tmp_path, workers):
+    with daemon(tmp_path, workers=workers) as (_, sock):
         c = SchedClient(sock, retries=0)
         remote = c.plan("matmul", 48, 48, 48, "tensor")
         with local_only():
@@ -84,8 +121,9 @@ def test_plan_roundtrip_matches_local(tmp_path):
         assert c.stats.fallbacks == 0
 
 
-def test_autotune_roundtrip(tmp_path):
-    with daemon(tmp_path) as (d, sock):
+@pytest.mark.parametrize("workers", WORKER_LEVELS)
+def test_autotune_roundtrip(tmp_path, workers):
+    with daemon(tmp_path, workers=workers) as (d, sock):
         c = SchedClient(sock, retries=0)
         r1 = c.autotune(tiny_scop("schedd_at"), measure=False)
         assert r1.config.label
@@ -101,6 +139,8 @@ def test_ping_stats_shutdown(tmp_path):
         st = c.daemon_stats()
         assert st["counters"]["requests"] >= 1
         assert st["versions"] == wire_versions()
+        assert st["workers"] == 0 and st["pool"] is None
+        assert st["frames"]["entries"] == st["frame_cache"]
         c.shutdown()
         assert d._stop.wait(timeout=5.0)
 
@@ -128,9 +168,9 @@ def test_garbage_and_truncated_frames_are_survivable(tmp_path):
         s.connect(sock)
         s.sendall(wire.MAGIC + struct.pack(">I", 1024) + b"short")
         s.close()
-        time.sleep(0.1)
+        wait_until(lambda: d.counters["bad_frames"] >= 1,
+                   msg="bad_frames counted")
         assert SchedClient(sock, retries=0).ping()["op"] == "pong"
-        assert d.counters["bad_frames"] >= 1
 
 
 def test_oversized_length_rejected(tmp_path):
@@ -161,8 +201,9 @@ def test_slow_loris_dropped(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-def test_identical_concurrent_requests_coalesce(tmp_path):
-    with daemon(tmp_path) as (d, sock):
+@pytest.mark.parametrize("workers", WORKER_LEVELS)
+def test_identical_concurrent_requests_coalesce(tmp_path, workers):
+    with daemon(tmp_path, workers=workers) as (d, sock):
         scop = tiny_scop("schedd_co")
         metas = []
 
@@ -172,11 +213,15 @@ def test_identical_concurrent_requests_coalesce(tmp_path):
                                "test_delay_s": 0.4}, 30.0)
             metas.append(resp["meta"])
 
-        threads = [threading.Thread(target=go) for _ in range(3)]
-        for t in threads:
+        first = threading.Thread(target=go)
+        first.start()
+        # the rest must arrive while the first owns the flight
+        wait_until(lambda: d.counters["computed"] >= 1,
+                   msg="first request owns the flight")
+        rest = [threading.Thread(target=go) for _ in range(2)]
+        for t in rest:
             t.start()
-            time.sleep(0.05)
-        for t in threads:
+        for t in [first] + rest:
             t.join(timeout=30.0)
         assert len(metas) == 3
         assert d.counters["computed"] == 1
@@ -195,7 +240,8 @@ def test_overload_sheds_typed(tmp_path):
 
         t = threading.Thread(target=hold)
         t.start()
-        time.sleep(0.3)
+        wait_until(lambda: d.counters["computed"] >= 1,
+                   msg="holder occupies the flight table")
         c = SchedClient(sock, retries=0)
         with pytest.raises(Overloaded):
             c._request({"op": "schedule", "scop": other_scop()}, 10.0)
@@ -213,8 +259,10 @@ def test_overload_sheds_typed(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-def test_expired_deadline_degrades_and_is_never_frame_cached(tmp_path):
-    with daemon(tmp_path) as (d, sock):
+@pytest.mark.parametrize("workers", WORKER_LEVELS)
+def test_expired_deadline_degrades_and_is_never_frame_cached(tmp_path,
+                                                             workers):
+    with daemon(tmp_path, workers=workers) as (d, sock):
         c = SchedClient(sock, retries=0)
         scop = tiny_scop("schedd_dl")
         r1 = c._request({"op": "schedule", "scop": scop,
@@ -239,11 +287,143 @@ def test_client_exhausted_deadline_falls_back_without_dialing(tmp_path):
         c = SchedClient(sock, retries=0,
                         cache=ScheduleCache(cache_dir=str(tmp_path / "fb")))
         dl = Deadline(0.0)
-        time.sleep(0.01)
+        wait_until(lambda: dl.elapsed() > 0.0, msg="deadline clock ticks")
         sched = c.schedule(tiny_scop("schedd_dl2"), deadline=dl)
         assert sched.degraded              # local ladder, identity rung
         assert c.stats.fallbacks == 1
         assert d.counters["requests"] == 0  # never reached the daemon
+
+
+# ---------------------------------------------------------------------------
+# worker pool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_distinct_keys_overlap(tmp_path):
+    """Two distinct-key holds on two workers must overlap — the proof
+    the pool actually escapes the single-process serialization."""
+    with daemon(tmp_path, workers=2) as (d, sock):
+        results = []
+
+        def go(i, n, delay):
+            c = SchedClient(sock, retries=0, request_timeout=30.0)
+            results.append(c._request(
+                {"op": "schedule", "scop": tiny_scop(f"schedd_p{i}", n),
+                 "test_delay_s": delay}, 30.0))
+
+        def both(n0, delay):
+            # two *structurally distinct* scops (the key fingerprints
+            # structure, so the sizes must differ), one per worker
+            threads = [threading.Thread(target=go, args=(i, n0 + i, delay))
+                       for i in range(2)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+
+        # warmup: the first job on each worker pays one-time lazy-init
+        # cost; measuring it would only test fork latency
+        both(18, 0.2)
+        results.clear()
+        t0 = time.monotonic()
+        both(24, 0.8)
+        elapsed = time.monotonic() - t0
+        assert len(results) == 2 and all(r["ok"] for r in results)
+        # steady state measures ~0.83s; serialized would be >= 1.6s
+        assert elapsed < 1.5, f"holds serialized: {elapsed:.2f}s"
+        assert d.counters["pool_jobs"] == 4
+        # the holds ran in workers, not the daemon process
+        pids = {r["meta"]["pid"] for r in results}
+        assert os.getpid() not in pids
+
+
+def test_pool_poison_request_is_typed_and_bounded(tmp_path):
+    """A request that SIGKILLs its worker burns exactly two workers
+    (one retry on a fresh fork), then surfaces as WorkerCrashed; the
+    pool respawns and stays healthy."""
+    with daemon(tmp_path, workers=2) as (d, sock):
+        c = SchedClient(sock, retries=0, request_timeout=60.0)
+        with pytest.raises(WorkerCrashed):
+            c._request({"op": "schedule", "scop": tiny_scop("schedd_px"),
+                        "test_kill_worker": True}, 60.0)
+        assert d.counters["worker_crashes"] == 2
+        assert d.pool.stats()["crashes"] == 2
+        # respawn restored the pool size
+        wait_until(lambda: d.pool.stats()["idle"] == 2,
+                   msg="pool respawned to full strength")
+        # and it still serves
+        sched = c.schedule(tiny_scop("schedd_px2"))
+        assert not sched.degraded
+        # WorkerCrashed is a SchedClientError, so the client's total
+        # API (schedule/autotune) falls back in-process on it — same
+        # contract the breaker/fallback tests pin for the other kinds
+        from repro.core.schedclient import SchedClientError
+        assert issubclass(WorkerCrashed, SchedClientError)
+
+
+def test_pool_worker_kill9_between_jobs_is_respawned(tmp_path):
+    """kill -9 of an idle worker: the corpse is detected at the next
+    acquire, counted, replaced, and the job runs on the fresh fork."""
+    import signal as _signal
+
+    with daemon(tmp_path, workers=1) as (d, sock):
+        victim = d.pool._procs[0].proc
+        os.kill(victim.pid, _signal.SIGKILL)
+        victim.join(timeout=10.0)
+        assert not victim.is_alive()
+        c = SchedClient(sock, retries=0, request_timeout=30.0)
+        sched = c.schedule(tiny_scop("schedd_k9"))
+        assert not sched.degraded
+        assert d.pool.stats()["crashes"] == 1
+        assert d.pool.stats()["spawned"] == 2
+
+
+@pytest.mark.parametrize("workers", WORKER_LEVELS)
+def test_winner_push_warms_schedule_frame(tmp_path, workers):
+    """An autotune winner's schedule is pushed into the frame cache, so
+    the follow-up schedule request for the tuned config is a warm hit
+    that never touches the solver."""
+    with daemon(tmp_path, workers=workers) as (d, sock):
+        c = SchedClient(sock, retries=0, request_timeout=60.0)
+        r = c.autotune(tiny_scop("schedd_wp"), measure=False, top_k=2)
+        assert not r.degraded
+        assert d.counters["winner_pushes"] == 1
+        computed = d.counters["computed"]
+        sched = c.schedule(tiny_scop("schedd_wp"),
+                           config=r.config.scheduler_config())
+        assert not sched.degraded
+        assert d.counters["computed"] == computed      # no new flight
+        assert d.counters["frame_hits"] == 1
+
+
+def test_pool_crash_is_witnessed_not_orphaned(tmp_path):
+    """A worker kill -9 mid-autotune is journalled as `crashed` by the
+    surviving daemon — so a later restart does NOT re-count it as an
+    unwitnessed orphan."""
+    pool_dir = tmp_path / "pool"
+    with daemon(tmp_path, workers=1, cache_dir=str(pool_dir)) as (d, sock):
+        c = SchedClient(sock, retries=0, request_timeout=60.0)
+        with pytest.raises(WorkerCrashed):
+            c._request({"op": "autotune", "scop": tiny_scop("schedd_jw"),
+                        "kwargs": {"measure": False},
+                        "test_kill_worker": True}, 60.0)
+        assert d.counters["worker_crashes"] == 2
+    journal = AutotuneJournal(str(pool_dir / "schedd_journal.jsonl"))
+    assert journal.recover() == []         # witnessed, not orphaned
+
+
+def test_frames_snapshot_accounts_eviction(tmp_path):
+    """The daemon's stats surface the latency-saved frame cache: entry
+    cap enforced, evictions counted, retained latency tracked."""
+    with daemon(tmp_path, frame_cache_cap=2) as (d, sock):
+        c = SchedClient(sock, retries=0)
+        for i in range(4):
+            c.plan("matmul", 32 + 8 * i, 32, 32, "tensor")
+        st = c.daemon_stats()
+        assert st["frames"]["entries"] <= 2
+        assert st["frames"]["stats"]["evicted"] >= 2
+        assert st["frames"]["retained_latency_s"] >= 0.0
+        assert st["frame_cache"] == st["frames"]["entries"]
 
 
 # ---------------------------------------------------------------------------
@@ -351,6 +531,15 @@ def test_journal_recover_counts_orphans(tmp_path):
     assert AutotuneJournal(path).recover() == ["bbb", "ccc"]
     # recovery truncates: a second recover sees a clean journal
     assert AutotuneJournal(path).recover() == []
+
+
+def test_journal_crashed_completes_begin(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    j = AutotuneJournal(path)
+    j.begin("xx")
+    j.crashed("xx", "worker pid 123 died")   # witnessed: not an orphan
+    j.begin("yy")                            # unwitnessed: an orphan
+    assert AutotuneJournal(path).recover() == ["yy"]
 
 
 def test_daemon_surfaces_recovered_journal(tmp_path):

@@ -15,8 +15,7 @@ from repro.core import config as CFG
 from repro.core.cbackend import CCodeGenerator, array_extents
 from repro.core.codegen import CodeGenerator, interpret_scop
 from repro.core.postproc import tile_schedule
-from repro.core.schedtree import (BandNode, SequenceNode, build_tree,
-                                  schedule_tree, tree_from_json, tree_to_json)
+from repro.core.schedtree import build_tree, schedule_tree, tree_from_json, tree_to_json
 from repro.core.scheduler import schedule_scop
 from repro.core.scops_npu import make_lu16, make_trsml, make_trsmu
 from repro.core.scops_polybench import REGISTRY

@@ -2,8 +2,8 @@
 import pytest
 
 from repro.core import config as CFG
-from repro.core.deps import compute_dependences, tighten_equalities
-from repro.core.scheduler import PolyTOPSScheduler, SchedulingError, schedule_scop
+from repro.core.deps import tighten_equalities
+from repro.core.scheduler import SchedulingError, schedule_scop
 from repro.core.scop import Scop
 
 
