@@ -30,7 +30,16 @@ pool is wide enough for the offered load, i.e. no request starves).
 
 Writes ``BENCH_loadgen.json`` next to this file.
 
-Usage: PYTHONPATH=src python -m benchmarks.bench_loadgen
+**TCP compare** (``--tcp``): one daemon at the max worker level serving
+the SAME pool over both transports (``--sock`` + ``--listen``), driven
+with the distinct mix over Unix and then over authenticated TCP with
+fresh keys.  The gated ratio ``tcp_over_unix_distinct`` isolates the
+transport cost (handshake amortized by the client's connection pool,
+per-frame HMAC tags) against an identical compute profile; the shared
+mix over TCP re-pins coalescing through the authenticated path.
+Writes ``BENCH_loadgen_tcp.json``.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_loadgen [--tcp]
 Env:   POLYTOPS_LOADGEN_CLIENTS   client processes        (default 4)
        POLYTOPS_LOADGEN_REQS      requests per client     (default 6)
        POLYTOPS_LOADGEN_HOLD      compute hold seconds    (default 0.15)
@@ -50,9 +59,12 @@ from pathlib import Path
 
 from repro.core.schedclient import SchedClient
 from repro.core.scop import Scop
+from repro.core.wire import KEY_ENV
 
 HERE = Path(__file__).resolve().parent
 OUT = HERE / "BENCH_loadgen.json"
+TCP_OUT = HERE / "BENCH_loadgen_tcp.json"
+TCP_KEY = "loadgen-bench-shared-key"
 
 
 def loadgen_scop(n: int) -> Scop:
@@ -65,16 +77,19 @@ def loadgen_scop(n: int) -> Scop:
     return s
 
 
-def start_daemon(sock: str, pool: str, workers: int):
+def start_daemon(sock: str, pool: str, workers: int, listen: bool = False):
     env = dict(os.environ)
     env["PYTHONPATH"] = str(HERE.parent / "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     env.pop("POLYTOPS_SCHEDD_SOCK", None)
+    args = [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
+            "--cache-dir", pool, "--workers", str(workers),
+            "--max-inflight", "64", "--chaos"]
+    if listen:
+        env[KEY_ENV] = TCP_KEY
+        args += ["--listen", "127.0.0.1:0", "--port-file", sock + ".port"]
     proc = subprocess.Popen(
-        [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
-         "--cache-dir", pool, "--workers", str(workers),
-         "--max-inflight", "64", "--chaos"],
-        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+        args, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
     client = SchedClient(sock, retries=0)
     deadline = time.monotonic() + 30.0
     while time.monotonic() < deadline:
@@ -87,6 +102,20 @@ def start_daemon(sock: str, pool: str, workers: int):
             time.sleep(0.05)
     proc.kill()
     raise RuntimeError("daemon never answered ping within 30s")
+
+
+def tcp_address(sock: str, proc) -> str:
+    """The listening address of a ``listen=True`` daemon (the port file
+    is written just after the sockets come up — poll briefly)."""
+    port_file = sock + ".port"
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        if os.path.exists(port_file):
+            return "127.0.0.1:" + Path(port_file).read_text().strip()
+        if proc.poll() is not None:
+            raise RuntimeError(f"daemon exited rc={proc.returncode}")
+        time.sleep(0.05)
+    raise RuntimeError("daemon never wrote its port file")
 
 
 def stop_daemon(proc, sock: str) -> None:
@@ -172,7 +201,65 @@ def run_mix(sock: str, tmp: str, mix: str, clients: int, reqs: int,
     }
 
 
+def tcp_compare() -> int:
+    """Unix vs authenticated-TCP distinct-key throughput on one daemon
+    at the max worker level; writes ``BENCH_loadgen_tcp.json``."""
+    clients = int(os.environ.get("POLYTOPS_LOADGEN_CLIENTS", "4"))
+    reqs = int(os.environ.get("POLYTOPS_LOADGEN_REQS", "6"))
+    hold_s = float(os.environ.get("POLYTOPS_LOADGEN_HOLD", "0.15"))
+    workers = max(int(w) for w in os.environ.get(
+        "POLYTOPS_LOADGEN_WORKERS", "1,2,4").split(","))
+
+    tmp = tempfile.mkdtemp(prefix="loadgen_tcp_")
+    sock = os.path.join(tmp, "s.sock")
+    pool = os.path.join(tmp, "pool")
+    os.environ[KEY_ENV] = TCP_KEY        # forked clients inherit the key
+    proc = start_daemon(sock, pool, workers, listen=True)
+    try:
+        addr = tcp_address(sock, proc)
+        key_base = 100
+        warm = run_mix(sock, tmp, "distinct", clients, 1, 0.02, key_base)
+        key_base += clients
+        unix_distinct = run_mix(sock, tmp, "distinct", clients, reqs,
+                                hold_s, key_base)
+        key_base += clients * reqs
+        tcp_distinct = run_mix(addr, tmp, "distinct", clients, reqs,
+                               hold_s, key_base)
+        key_base += clients * reqs
+        tcp_shared = run_mix(addr, tmp, "shared", clients, reqs,
+                             hold_s, key_base)
+    finally:
+        stop_daemon(proc, sock)
+
+    t_unix = unix_distinct["throughput_rps"]
+    t_tcp = tcp_distinct["throughput_rps"]
+    out = {
+        "clients": clients,
+        "requests_per_client": reqs,
+        "hold_s": hold_s,
+        "workers": workers,
+        "unix_distinct": unix_distinct,
+        "tcp_distinct": tcp_distinct,
+        "tcp_shared": tcp_shared,
+        "warmup_errors": warm["errors"],
+        "tcp_over_unix_distinct": (round(t_tcp / t_unix, 3)
+                                   if t_unix and t_tcp else None),
+        "errors_total": (unix_distinct["errors"] + tcp_distinct["errors"]
+                         + tcp_shared["errors"]),
+        "shared_computed_tcp": tcp_shared["computed"],
+    }
+    TCP_OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"workers {workers}: unix distinct {t_unix} rps | tcp distinct "
+          f"{t_tcp} rps (ratio {out['tcp_over_unix_distinct']}) | tcp "
+          f"shared {tcp_shared['computed']} computed, "
+          f"{out['errors_total']} errors")
+    print(f"wrote {TCP_OUT}")
+    return 0
+
+
 def main() -> int:
+    if "--tcp" in sys.argv[1:]:
+        return tcp_compare()
     clients = int(os.environ.get("POLYTOPS_LOADGEN_CLIENTS", "4"))
     reqs = int(os.environ.get("POLYTOPS_LOADGEN_REQS", "6"))
     hold_s = float(os.environ.get("POLYTOPS_LOADGEN_HOLD", "0.15"))

@@ -18,6 +18,11 @@ cache pool and drives it the way a compile farm would:
 * **fallback** — a client pointed at a socket that does not exist must
   serve every plan in-process, counted in ``ClientStats``.
 
+* **TCP warm-hit latency** — the same warm frame-cache hit through the
+  authenticated localhost TCP transport (pooled connection, per-frame
+  HMAC tags).  ``tcp_over_unix_p50`` isolates what the transport adds
+  on the hot path; the daemon serves both listeners from one pool.
+
 Writes ``BENCH_schedd.json`` next to this file.
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_schedd
@@ -39,12 +44,14 @@ from repro.core import akg
 from repro.core import schedcache
 from repro.core.schedclient import SchedClient, local_only
 from repro.core.scop import Scop
+from repro.core.wire import KEY_ENV
 
 HERE = Path(__file__).resolve().parent
 OUT = HERE / "BENCH_schedd.json"
 
 N_CLIENTS = 4
 PLAN_SHAPE = (96, 96, 96)
+TCP_KEY = b"bench-schedd-shared-key"
 
 
 def _bench_scop() -> Scop:
@@ -60,9 +67,11 @@ def start_daemon(sock: str, pool: str):
     env["PYTHONPATH"] = str(HERE.parent / "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     env.pop("POLYTOPS_SCHEDD_SOCK", None)
+    env[KEY_ENV] = TCP_KEY.decode()
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
-         "--cache-dir", pool, "--chaos"],
+         "--cache-dir", pool, "--chaos", "--listen", "127.0.0.1:0",
+         "--port-file", sock + ".port"],
         env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
     client = SchedClient(sock, retries=0)
     deadline = time.monotonic() + 20.0
@@ -160,6 +169,43 @@ def bench_warm_latency(sock: str, pool: str, reps: int) -> dict:
             "inprocess_disk_hits": disk_hits}
 
 
+def tcp_address(sock: str, proc) -> str:
+    port_file = sock + ".port"
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        if os.path.exists(port_file):
+            return "127.0.0.1:" + Path(port_file).read_text().strip()
+        if proc.poll() is not None:
+            raise RuntimeError(f"daemon exited rc={proc.returncode}")
+        time.sleep(0.05)
+    raise RuntimeError("daemon never wrote its port file")
+
+
+def bench_warm_tcp(addr: str, reps: int, unix_p50: float) -> dict:
+    """The same warm frame-cache hit over authenticated localhost TCP:
+    one pooled connection (one handshake), per-frame MAC both ways."""
+    m, n, k = PLAN_SHAPE
+    client = SchedClient(addr, retries=0, request_timeout=60.0,
+                         key=TCP_KEY)
+    client.remote_plan("matmul", m, n, k, "tensor")      # frame is warm
+    tcp_ms = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        client.remote_plan("matmul", m, n, k, "tensor")
+        tcp_ms.append((time.perf_counter() - t0) * 1e3)
+    stats = client.stats.as_dict()
+    client.close()
+
+    def pct(xs, q):
+        return round(statistics.quantiles(xs, n=100)[q - 1], 4)
+
+    t50, t99 = pct(tcp_ms, 50), pct(tcp_ms, 99)
+    return {"reps": reps, "tcp_p50_ms": t50, "tcp_p99_ms": t99,
+            "tcp_over_unix_p50": (round(t50 / unix_p50, 3)
+                                  if unix_p50 else None),
+            "dials": stats["dials"], "reuses": stats["reuses"]}
+
+
 def bench_fallback() -> dict:
     c = SchedClient("/nonexistent/schedd.sock", retries=0,
                     connect_timeout=0.2)
@@ -184,6 +230,8 @@ def main() -> int:
     try:
         coalescing = bench_coalescing(sock)
         warm = bench_warm_latency(sock, pool, reps)
+        warm_tcp = bench_warm_tcp(tcp_address(sock, proc), reps,
+                                  warm["daemon_p50_ms"])
         final = SchedClient(sock, retries=0).daemon_stats()
     finally:
         stop_daemon(proc, sock)
@@ -195,6 +243,7 @@ def main() -> int:
     out = {
         "coalescing": coalescing,
         "warm_latency": warm,
+        "warm_latency_tcp": warm_tcp,
         "fallback": fallback,
         "fallbacks": fallback["fallbacks"],
         "daemon_counters": counters,
@@ -212,6 +261,10 @@ def main() -> int:
           f"p99 {warm['daemon_p99_ms']}ms | in-process disk-hit p50 "
           f"{warm['inprocess_p50_ms']}ms p99 {warm['inprocess_p99_ms']}ms "
           f"| ratio p50 {warm['ratio_p50']}x")
+    print(f"warm plan over TCP: p50 {warm_tcp['tcp_p50_ms']}ms "
+          f"p99 {warm_tcp['tcp_p99_ms']}ms "
+          f"({warm_tcp['tcp_over_unix_p50']}x unix, "
+          f"{warm_tcp['dials']} dial / {warm_tcp['reuses']} reuses)")
     print(f"fallback (no daemon): {fallback['fallbacks']}/"
           f"{fallback['requests']} served in-process")
     print(f"wrote {OUT}")

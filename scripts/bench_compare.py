@@ -53,6 +53,11 @@ SPEC: List[Tuple[str, str, str, float]] = [
     ("BENCH_loadgen.json", "p99_over_p50_at_max_workers", "lower", 0.50),
     ("BENCH_loadgen.json", "errors_total", "lower", 0.0),
     ("BENCH_loadgen.json", "shared_computed_at_max_workers", "lower", 0.0),
+    # TCP transport: authenticated localhost TCP vs Unix, same daemon,
+    # same run — the ratio isolates handshake/MAC cost from host speed
+    ("BENCH_loadgen_tcp.json", "tcp_over_unix_distinct", "higher", 0.15),
+    ("BENCH_loadgen_tcp.json", "errors_total", "lower", 0.0),
+    ("BENCH_loadgen_tcp.json", "shared_computed_tcp", "lower", 0.0),
 ]
 
 

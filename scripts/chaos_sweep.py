@@ -52,7 +52,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core.cbackend import array_extents  # noqa: E402
+from repro.core.cbackend import init_arrays  # noqa: E402
 from repro.core.codegen import CodeGenerator, interpret_scop  # noqa: E402
 from repro.core.config import tensor_style  # noqa: E402
 from repro.core.resilience import (REGISTRY, Deadline,  # noqa: E402
@@ -103,10 +103,7 @@ def _oracle_check(scop, sched) -> None:
     reproduce the program-order oracle exactly (faults must already be
     disarmed — this is harness-side verification)."""
     fn, src = CodeGenerator(sched).build()
-    ext = array_extents(scop)
-    r = np.random.default_rng(0)
-    a1 = {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
-          for a, dims in ext.items()}
+    a1 = init_arrays(scop)
     a2 = {k: v.copy() for k, v in a1.items()}
     sc = {k: SCALARS.get(k, 1.0) for k in scop.scalars}
     interpret_scop(scop, a1, sc)
@@ -690,6 +687,112 @@ def run_daemon_scenarios(results):
     _daemon_scenario(results, "kill9-pool-worker", kill9_pool_worker)
 
 
+# ---------------------------------------------------------------------------
+# TCP auth scenarios: the shared-key handshake is a hard gate.  A wrong
+# key gets a typed ``auth_failed`` and never reaches the pickle codec;
+# a tampered post-handshake frame is rejected on the MAC before decode.
+# Either way the daemon keeps serving correctly-keyed peers.
+# ---------------------------------------------------------------------------
+
+def run_tcp_auth_scenarios(results):
+    import socket as socketlib
+    import subprocess
+
+    from repro.core import wire
+    from repro.core.schedclient import AuthFailed, SchedClient
+
+    key = b"chaos-sweep-shared-key"
+    sock = os.path.join(_TMP, "schedd_tcp.sock")
+    pool = os.path.join(_TMP, "schedd_tcp_pool")
+    port_file = os.path.join(_TMP, "schedd_tcp.port")
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    env.pop("POLYTOPS_SCHEDD_SOCK", None)
+    env[wire.KEY_ENV] = key.decode()
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.schedd", "--sock", sock,
+         "--cache-dir", pool, "--chaos", "--listen", "127.0.0.1:0",
+         "--port-file", port_file],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    stop = time.monotonic() + 20.0
+    addr = None
+    while time.monotonic() < stop:
+        if os.path.exists(port_file):
+            addr = "127.0.0.1:" + open(port_file).read().strip()
+            try:
+                SchedClient(addr, retries=0, key=key).ping(timeout=1.0)
+                break
+            except Exception:
+                pass
+        if proc.poll() is not None:
+            raise RuntimeError(f"tcp daemon exited rc={proc.returncode}")
+        time.sleep(0.05)
+    else:
+        proc.kill()
+        raise RuntimeError("tcp daemon never answered ping")
+
+    def wrong_key():
+        bad = SchedClient(addr, retries=0, key=b"not-the-key")
+        try:
+            bad.ping(timeout=2.0)
+            raise AssertionError("wrong key was accepted")
+        except AuthFailed:
+            pass
+        finally:
+            bad.close()
+        # the daemon survives, counts it, and keeps serving good peers
+        good = SchedClient(addr, retries=0, key=key)
+        good.ping(timeout=2.0)
+        counters = good.daemon_stats()["counters"]
+        good.close()
+        if counters["auth_failed"] < 1:
+            raise AssertionError(
+                f"rejected handshake not counted: {counters}")
+        return {"auth_failed": counters["auth_failed"]}
+
+    def tampered_mac():
+        host, port = addr.rsplit(":", 1)
+        s = socketlib.socket(socketlib.AF_INET, socketlib.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect((host, int(port)))
+        hello = {"op": "hello", **wire.wire_versions()}
+        _, session = wire.client_handshake(s, hello, key=key)
+        if session is None:
+            raise AssertionError("TCP handshake produced no session")
+        frame = wire.encode_frame({"op": "ping"}, session=session)
+        frame = frame[:-1] + bytes([frame[-1] ^ 0xFF])   # flip a MAC bit
+        s.sendall(frame)
+        try:
+            reply = s.recv(1 << 16)      # typed auth_failed or clean close
+        except OSError:
+            reply = b""
+        s.close()
+        if reply and b"auth_failed" not in reply:
+            raise AssertionError(
+                f"tampered frame got a non-typed reply: {reply[:80]!r}")
+        good = SchedClient(addr, retries=0, key=key)
+        good.ping(timeout=2.0)           # daemon lives
+        counters = good.daemon_stats()["counters"]
+        good.close()
+        if counters["auth_failed"] < 2:  # wrong_key ran first
+            raise AssertionError(
+                f"tampered frame not counted: {counters}")
+        return {"reply_bytes": len(reply)}
+
+    try:
+        _daemon_scenario(results, "tcp-wrong-key", wrong_key)
+        _daemon_scenario(results, "tcp-tampered-mac", tampered_mac)
+    finally:
+        try:
+            SchedClient(sock, retries=0).shutdown(timeout=2.0)
+        except Exception:
+            pass
+        _kill_daemon(proc)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out", default="artifacts/chaos_summary.json")
@@ -701,6 +804,7 @@ def main(argv=None) -> int:
     run_measure_scenarios(results)
     run_corrupt_schedcache(results)
     run_daemon_scenarios(results)
+    run_tcp_auth_scenarios(results)
     failures = [r for r in results if not r.get("ok")]
     summary = {
         "ok": not failures,

@@ -44,6 +44,13 @@
 #                  request errors, and the shared-key mix must still
 #                  coalesce to exactly one computation; writes
 #                  benchmarks/BENCH_loadgen.json
+#   * loadgen_tcp — loadgen TCP compare (bench_loadgen --tcp): one
+#                  daemon at max workers serving the same pool over
+#                  Unix and authenticated TCP; distinct-key TCP
+#                  throughput must stay within ~10% of Unix, zero
+#                  errors, and shared keys must still coalesce to one
+#                  computation through the authenticated path; writes
+#                  benchmarks/BENCH_loadgen_tcp.json
 #   * bench_compare — regression gate: fresh BENCH_*.json from this run
 #                  vs benchmarks/baselines/ with per-metric tolerances
 #                  (scripts/bench_compare.py); only host-portable ratio
@@ -66,7 +73,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 ALL_GATES=(tests coverage golden sched_bench polybench pallas chaos schedd
-           loadgen bench_compare)
+           loadgen loadgen_tcp bench_compare)
 if [ "$#" -gt 0 ]; then
   GATES=("$@")
   for g in "${GATES[@]}"; do
@@ -427,6 +434,47 @@ then
 else
   record loadgen 0 "$(cat .tier1_loadgen_detail.json 2>/dev/null || echo '{}')"
   rm -f .tier1_loadgen_detail.json
+  exit 1
+fi
+fi
+
+if want loadgen_tcp; then
+echo "== schedd loadgen TCP compare (unix vs authenticated tcp, 600s budget) =="
+T0=$SECONDS
+if ! timeout 600 python -m benchmarks.bench_loadgen --tcp; then
+  echo "LOADGEN TCP BENCH FAILED or exceeded 600s budget" >&2
+  record loadgen_tcp 0 "{\"seconds\": $((SECONDS - T0))}"
+  exit 1
+fi
+if python - <<'PY'
+import json, pathlib, sys
+d = json.loads(pathlib.Path("benchmarks/BENCH_loadgen_tcp.json").read_text())
+ratio = d["tcp_over_unix_distinct"]
+errors = d["errors_total"]
+shared = d["shared_computed_tcp"]
+detail = {"tcp_over_unix_distinct": ratio, "errors_total": errors,
+          "shared_computed_tcp": shared, "workers": d["workers"]}
+pathlib.Path(".tier1_loadgen_tcp_detail.json").write_text(json.dumps(detail))
+bad = []
+if ratio is None or ratio < 0.9:
+    bad.append(f"TCP distinct-key throughput is {ratio}x the Unix-socket "
+               f"run (floor 0.9x — the transport may not cost >10%)")
+if errors:
+    bad.append(f"{errors} request error(s) over TCP (want 0)")
+if shared != 1:
+    bad.append(f"shared-key mix over TCP computed {shared} times "
+               f"(auth path broke coalescing; want exactly 1)")
+if bad:
+    sys.exit("; ".join(bad))
+print(f"loadgen_tcp OK: TCP/Unix distinct throughput {ratio}x "
+      f"(floor 0.9x), 0 errors, shared mix computed once over TCP")
+PY
+then
+  record loadgen_tcp 1 "$(cat .tier1_loadgen_tcp_detail.json)"
+  rm -f .tier1_loadgen_tcp_detail.json
+else
+  record loadgen_tcp 0 "$(cat .tier1_loadgen_tcp_detail.json 2>/dev/null || echo '{}')"
+  rm -f .tier1_loadgen_tcp_detail.json
   exit 1
 fi
 fi

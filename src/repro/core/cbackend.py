@@ -86,6 +86,35 @@ def array_extents(scop: Scop) -> Dict[str, List[int]]:
     return ext
 
 
+def init_arrays(scop: Scop, seed: int = 0) -> Dict[str, "object"]:
+    """Deterministic numpy inputs for the differential harnesses (the
+    oracle/test/chaos helpers all share this so they cannot drift).
+
+    Default: small positive noise.  Per-array ``scop.np_init``
+    overrides apply where the default is numerically unsound — e.g.
+    cholesky needs a symmetric positive-definite input or its oracle
+    takes ``sqrt`` of negative intermediates and fills the output with
+    NaNs (which ``assert_allclose`` happily matches NaN-to-NaN,
+    silently voiding the comparison)."""
+    import numpy as np
+
+    ext = array_extents(scop)
+    r = np.random.default_rng(seed)
+    out: Dict[str, "object"] = {}
+    for a, dims in ext.items():
+        shape = tuple(max(d, 1) for d in dims)
+        arr = r.standard_normal(shape) * 0.1 + 1.0
+        override = scop.np_init.get(a)
+        if override is not None:
+            arr = np.asarray(override(shape, r), dtype=float)
+            if arr.shape != shape:
+                raise ValueError(
+                    f"np_init[{a!r}] returned shape {arr.shape}, "
+                    f"wanted {shape}")
+        out[a] = arr
+    return out
+
+
 class CCodeGenerator(CodeGenerator):
     #: bake concrete parameter values into the FM bound-pruning context
     #: (they are #defines in the emitted program)

@@ -1,210 +1,109 @@
-"""Scheduling-service client: wire protocol + resilient fallback client.
+"""Scheduling-service client: resilient fallback client over the shared
+wire layer.
 
 ``repro.launch.schedd`` turns the hardened scheduling pipeline (PR 6's
-ladder, deadlines and crash-safe caches) into a long-lived Unix-socket
-*service* so concurrent compiles from many client processes amortize one
-scheduler instead of repeating it.  This module is everything a client
-(or the daemon itself) needs to speak to it:
+ladder, deadlines and crash-safe caches) into a long-lived *service* so
+concurrent compiles from many client processes amortize one scheduler
+instead of repeating it.  This module is the client side; the frame
+protocol, handshake, and typed error family live in
+:mod:`repro.core.wire` (shared with the daemon) and are re-exported
+here for compatibility.
 
-* **Wire protocol** — length-prefixed pickle frames
-  (``MAGIC | uint32 length | pickle``) over a Unix stream socket.  Each
-  connection opens with a version handshake carrying
-  ``PROTOCOL_VERSION`` plus the three cache-compatibility versions
-  (``schedcache.CACHE_VERSION``, ``schedtree.TREE_VERSION``,
-  ``autotune.SPACE_VERSION``) — a stale peer on either side is rejected
-  with a typed ``version_skew`` response before any request is served,
-  so a half-upgraded machine can never exchange incompatible Schedule
-  pickles.  Pickle over the wire is safe here for the same reason the
-  on-disk schedule cache is: the socket lives in a user-owned directory
-  (mode 0o600) and both ends are the same codebase on the same host.
+* **Wire protocol + trust boundary** — length-prefixed frames
+  (``MAGIC | uint32 length | body``), JSON for the handshake, pickle
+  for requests/responses.  Each connection opens with a version
+  handshake carrying ``PROTOCOL_VERSION`` plus the three
+  cache-compatibility versions — a stale peer on either side is
+  rejected with a typed ``version_skew`` before any request is served.
+  Pickle over the wire is only safe against peers who could already
+  run code as us, so each transport pins that down differently: the
+  **Unix socket** lives in a user-owned 0o600 directory, so any peer
+  that can connect can already write our cache files; the **TCP
+  transport** requires a shared key (``$POLYTOPS_SCHEDD_KEY`` /
+  ``--keyfile``) proven by an HMAC-SHA256 challenge–response inside
+  the hello, after which every frame carries a per-direction
+  sequence-numbered MAC that is verified *before* the body is
+  unpickled.  Handshake frames are JSON with a small pre-auth size
+  cap, so an unauthenticated TCP peer can never reach ``pickle.loads``
+  or make the daemon buffer a 64 MiB frame.
 
-* **Typed errors** — every way a request can fail maps to one exception
-  class (:class:`Overloaded`, :class:`VersionSkew`,
+* **Typed errors** — every way a request can fail maps to one
+  exception class (:class:`Overloaded`, :class:`VersionSkew`,
   :class:`ProtocolError`, :class:`DaemonUnavailable`,
-  :class:`RemoteError`), mirroring the daemon's wire-level error kinds.
+  :class:`AuthFailed`, :class:`RemoteError`), mirroring the daemon's
+  wire-level error kinds.
 
-* **The resilient client** — :class:`SchedClient` wraps every request in
-  bounded retry-with-backoff and a circuit breaker, propagates the
+* **The resilient client** — :class:`SchedClient` wraps every request
+  in bounded retry-with-backoff and a circuit breaker, propagates the
   caller's :class:`~repro.core.resilience.Deadline` onto the wire
-  (``deadline_s`` = remaining budget; the daemon resumes it server-side)
-  and clips the socket timeout to it, and **falls back in-process** when
-  the daemon is down (socket ENOENT / connection refused), overloaded
-  (typed ``Overloaded`` load-shedding responses), version-skewed, or
-  misbehaving: ``schedule`` falls back to the degradation ladder over
-  ``cached_schedule_scop``, ``autotune`` to the local tuner, ``plan`` to
-  the local ``akg`` planners.  The public API therefore *never* raises
-  for daemon trouble — the worst case is the same in-process behaviour
-  the codebase had before the daemon existed, with the fallback counted
-  in :class:`ClientStats`.
+  (``deadline_s`` = remaining budget; the daemon resumes it
+  server-side) and clips the socket timeout to it, **reuses pooled
+  connections** (the handshake runs once per connection, not once per
+  request — two round-trips saved per call over TCP; a stale pooled
+  connection is redialed transparently once), and **falls back
+  in-process** when the daemon is down, overloaded, version-skewed,
+  auth-rejected, or misbehaving: ``schedule`` falls back to the
+  degradation ladder over ``cached_schedule_scop``, ``autotune`` to
+  the local tuner, ``plan`` to the local ``akg`` planners.  The public
+  API therefore *never* raises for daemon trouble — the worst case is
+  the same in-process behaviour the codebase had before the daemon
+  existed, with the fallback counted in :class:`ClientStats`.
 
 The module-level :func:`maybe_client` / :func:`maybe_remote_plan`
 helpers are the integration seam: ``akg``'s plan functions and
 ``launch/serve.py`` route through the daemon exactly when
-``$POLYTOPS_SCHEDD_SOCK`` names a socket, and never from inside the
+``$POLYTOPS_SCHEDD_ADDR`` (a ``host:port`` or socket path) or
+``$POLYTOPS_SCHEDD_SOCK`` names one, and never from inside the
 daemon's own process (:func:`mark_server_process` guards recursion).
 """
 from __future__ import annotations
 
 import os
-import pickle
 import socket
-import struct
 import threading
 import time
 from contextlib import contextmanager
-from dataclasses import asdict, dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Union
 
 from .resilience import Deadline
+from .wire import (  # noqa: F401  (re-exported compatibility surface)
+    ADDR_ENV,
+    HEADER_LEN,
+    KEY_ENV,
+    MAC_LEN,
+    MAGIC,
+    MAX_FRAME_BYTES,
+    PRE_AUTH_MAX_FRAME_BYTES,
+    PROTOCOL_VERSION,
+    SOCKET_ENV,
+    AuthFailed,
+    DaemonUnavailable,
+    Overloaded,
+    ProtocolError,
+    RemoteError,
+    SchedClientError,
+    Session,
+    VersionSkew,
+    WorkerCrashed,
+    _HEADER,
+    client_handshake,
+    encode_frame,
+    is_tcp_address,
+    load_key,
+    normalize_key,
+    parse_address,
+    recv_frame,
+    response_error,
+    send_frame,
+    version_skew,
+    wire_versions,
+)
+from .wire import _recv_exact  # noqa: F401  (test surface)
 
-#: bump on any incompatible change to the frame format or message shapes
-PROTOCOL_VERSION = 1
-MAGIC = b"PTSD"
-_HEADER = struct.Struct(">I")
-HEADER_LEN = len(MAGIC) + _HEADER.size
-#: hard cap on a single frame — a garbage length prefix must not make
-#: either side try to allocate gigabytes
-MAX_FRAME_BYTES = 64 << 20
-
-#: environment variable naming the daemon socket; unset → no daemon
-SOCKET_ENV = "POLYTOPS_SCHEDD_SOCK"
-
-
-def wire_versions() -> Dict[str, int]:
-    """The four versions exchanged in the handshake.  Imported lazily:
-    the client is reachable from ``akg`` and must stay cheap to load."""
-    from .autotune import SPACE_VERSION
-    from .schedcache import CACHE_VERSION
-    from .schedtree import TREE_VERSION
-
-    return {"proto": PROTOCOL_VERSION, "cache": CACHE_VERSION,
-            "tree": TREE_VERSION, "space": SPACE_VERSION}
-
-
-def version_skew(theirs: Dict[str, Any]) -> Optional[str]:
-    """Human-readable mismatch description, or None when compatible."""
-    ours = wire_versions()
-    bad = [f"{k}: ours={ours[k]} theirs={theirs.get(k)!r}"
-           for k in ours if theirs.get(k) != ours[k]]
-    return "; ".join(bad) or None
-
-
-# ---------------------------------------------------------------------------
-# typed errors
-# ---------------------------------------------------------------------------
-
-
-class SchedClientError(RuntimeError):
-    """Base of every typed daemon-communication error."""
-
-
-class DaemonUnavailable(SchedClientError):
-    """No daemon: socket missing, connection refused/reset, timeout."""
-
-
-class ProtocolError(SchedClientError):
-    """Malformed wire data: bad magic, truncated frame, unpicklable
-    payload, or a ``bad_frame``/``bad_request`` response."""
-
-
-class Overloaded(SchedClientError):
-    """The daemon load-shed this request (typed ``overloaded`` reply)."""
-
-
-class VersionSkew(SchedClientError):
-    """Handshake rejected: the peer runs incompatible cache/tree/space
-    versions.  Not transient — the breaker opens immediately."""
-
-
-class RemoteError(SchedClientError):
-    """The daemon failed serving the request (typed ``internal`` /
-    ``deadline`` reply); carries the wire error kind."""
-
-    def __init__(self, kind: str, detail: str = ""):
-        super().__init__(f"daemon error [{kind}]"
-                         + (f": {detail}" if detail else ""))
-        self.kind = kind
-        self.detail = detail
-
-
-class WorkerCrashed(RemoteError):
-    """A daemon pool worker died (or wedged) computing this request,
-    twice — the daemon already retried once on a fresh worker.  The
-    daemon itself is healthy; the request is the likely poison, so the
-    client falls back in-process rather than hammering the pool."""
-
-    def __init__(self, detail: str = ""):
-        super().__init__("worker_crashed",
-                         detail or "pool worker died computing the request")
-
-
-def response_error(resp: Dict[str, Any]) -> SchedClientError:
-    """Map a ``{"ok": False, ...}`` response to its typed exception."""
-    kind = str(resp.get("error", "internal"))
-    detail = str(resp.get("detail", ""))
-    if kind == "overloaded":
-        return Overloaded(detail or "daemon load-shed the request")
-    if kind == "version_skew":
-        return VersionSkew(detail or "incompatible peer versions")
-    if kind in ("bad_frame", "bad_request"):
-        return ProtocolError(f"{kind}: {detail}")
-    if kind == "worker_crashed":
-        return WorkerCrashed(detail)
-    return RemoteError(kind, detail)
-
-
-# ---------------------------------------------------------------------------
-# framing
-# ---------------------------------------------------------------------------
-
-
-def encode_frame(obj: Any) -> bytes:
-    body = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    if len(body) > MAX_FRAME_BYTES:
-        raise ProtocolError(f"frame too large: {len(body)} B")
-    return MAGIC + _HEADER.pack(len(body)) + body
-
-
-def send_frame(sock: socket.socket, obj: Any) -> None:
-    sock.sendall(encode_frame(obj))
-
-
-def _recv_exact(sock: socket.socket, n: int, *, eof_ok: bool) -> Optional[bytes]:
-    """Exactly ``n`` bytes, or None on clean EOF at a frame boundary
-    (``eof_ok``).  EOF mid-read is always a truncated frame."""
-    buf = b""
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            if not buf and eof_ok:
-                return None
-            raise ProtocolError(
-                f"truncated frame: got {len(buf)} of {n} bytes before EOF")
-        buf += chunk
-    return buf
-
-
-def recv_frame(sock: socket.socket, *, eof_ok: bool = False,
-               max_bytes: int = MAX_FRAME_BYTES) -> Any:
-    """One decoded frame; None on clean EOF when ``eof_ok``.  Raises
-    :class:`ProtocolError` on garbage (bad magic, oversized length,
-    truncation, unpicklable body) — never anything untyped."""
-    head = _recv_exact(sock, HEADER_LEN, eof_ok=eof_ok)
-    if head is None:
-        return None
-    if head[:len(MAGIC)] != MAGIC:
-        raise ProtocolError(f"bad magic {head[:len(MAGIC)]!r}")
-    (length,) = _HEADER.unpack(head[len(MAGIC):])
-    if length > max_bytes:
-        raise ProtocolError(f"frame length {length} exceeds {max_bytes} cap")
-    body = _recv_exact(sock, length, eof_ok=False)
-    try:
-        return pickle.loads(body)
-    except (KeyboardInterrupt, SystemExit):
-        raise
-    except Exception as e:
-        raise ProtocolError(f"unpicklable frame body: "
-                            f"{type(e).__name__}: {e}") from e
+#: retrying is pointless unless at least this much deadline budget
+#: remains *after* the backoff nap — below it, the retried request
+#: would be dead on arrival
+MIN_RETRY_BUDGET_S = 0.05
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +163,7 @@ class CircuitBreaker:
                 self._trip_locked()
 
     def trip(self) -> None:
-        """Open immediately (version skew: retrying cannot help)."""
+        """Open immediately (version skew / auth: retrying cannot help)."""
         with self._lock:
             self._trip_locked()
 
@@ -280,19 +179,57 @@ class CircuitBreaker:
 # ---------------------------------------------------------------------------
 
 
-@dataclass
 class ClientStats:
-    """Every client-side outcome, counted (same spirit as CacheStats)."""
-    remote_ok: int = 0          # requests answered by the daemon
-    remote_errors: int = 0      # failed attempts (before retry/fallback)
-    retries: int = 0
-    fallbacks: int = 0          # requests served by the in-process path
-    overloaded: int = 0         # typed load-shed replies received
-    version_skew: int = 0
-    breaker_skips: int = 0      # requests that never tried the daemon
+    """Every client-side outcome, counted (same spirit as CacheStats).
+
+    A :class:`SchedClient` is shared across daemon/connection threads,
+    so increments go through :meth:`incr` under a lock — a plain
+    ``+=`` on a shared counter loses updates under contention."""
+
+    FIELDS = ("remote_ok", "remote_errors", "retries", "fallbacks",
+              "overloaded", "version_skew", "auth_failed",
+              "breaker_skips", "dials", "reuses")
+
+    remote_ok: int          # requests answered by the daemon
+    remote_errors: int      # failed attempts (before retry/fallback)
+    retries: int
+    fallbacks: int          # requests served by the in-process path
+    overloaded: int         # typed load-shed replies received
+    version_skew: int
+    auth_failed: int        # typed auth rejections (TCP)
+    breaker_skips: int      # requests that never tried the daemon
+    dials: int              # fresh connections opened (handshakes run)
+    reuses: int             # requests served over a pooled connection
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        for f in self.FIELDS:
+            setattr(self, f, 0)
+
+    def incr(self, field: str, n: int = 1) -> None:
+        assert field in self.FIELDS, field
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
 
     def as_dict(self) -> Dict[str, int]:
-        return asdict(self)
+        with self._lock:
+            return {f: getattr(self, f) for f in self.FIELDS}
+
+
+class _PooledConn:
+    """A live, handshaken connection parked for reuse."""
+
+    __slots__ = ("sock", "session")
+
+    def __init__(self, sock: socket.socket, session: Optional[Session]):
+        self.sock = sock
+        self.session = session
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
 
 
 class SchedClient:
@@ -300,11 +237,18 @@ class SchedClient:
 
     The public entry points (:meth:`schedule`, :meth:`autotune`,
     :meth:`plan`) are *total*: any daemon trouble — down, overloaded,
-    version-skewed, garbage on the wire, deadline exhausted before the
-    request could even be sent — degrades to the in-process path and is
-    counted in :attr:`stats`.  :meth:`remote_plan`, :meth:`ping`,
-    :meth:`daemon_stats` and :meth:`shutdown` raise typed errors
-    instead, for callers that need to observe the daemon itself.
+    version-skewed, auth-rejected, garbage on the wire, deadline
+    exhausted before the request could even be sent — degrades to the
+    in-process path and is counted in :attr:`stats`.
+    :meth:`remote_plan`, :meth:`ping`, :meth:`daemon_stats` and
+    :meth:`shutdown` raise typed errors instead, for callers that need
+    to observe the daemon itself.
+
+    ``address`` is either a Unix socket path or ``host:port``; a TCP
+    address requires the shared key (``key=`` or
+    ``$POLYTOPS_SCHEDD_KEY``).  Connections are pooled per client: the
+    version/auth handshake runs once per connection and requests reuse
+    it until EOF/timeout, when the next request redials.
 
     ``cache`` names the :class:`~repro.core.schedcache.ScheduleCache`
     the fallback path uses (default: the process-global one), so tests
@@ -313,64 +257,141 @@ class SchedClient:
     deliberately stale peer).
     """
 
+    #: pooled idle connections kept per client
+    POOL_SIZE = 4
+
     def __init__(self, sock_path: Optional[str] = None, *,
                  connect_timeout: float = 1.0, request_timeout: float = 120.0,
                  retries: int = 1, backoff_s: float = 0.05,
                  breaker_threshold: int = 3, breaker_reset_s: float = 5.0,
-                 cache=None, versions: Optional[Dict[str, int]] = None):
-        self.sock_path = sock_path or daemon_socket_path()
+                 cache=None, versions: Optional[Dict[str, int]] = None,
+                 key: Union[str, bytes, None] = None):
+        self.sock_path = sock_path or daemon_address()
         self.connect_timeout = connect_timeout
         self.request_timeout = request_timeout
         self.retries = retries
         self.backoff_s = backoff_s
         self.cache = cache
         self._versions = versions
+        self.key = normalize_key(key) if key is not None else load_key()
         self.breaker = CircuitBreaker(breaker_threshold, breaker_reset_s)
         self.stats = ClientStats()
+        self._pool_lock = threading.Lock()
+        self._idle: List[_PooledConn] = []
 
-    # -- low-level ---------------------------------------------------------
+    # -- connection pool ---------------------------------------------------
 
-    def _hello(self) -> Dict[str, Any]:
-        return {"op": "hello", **(self._versions or wire_versions())}
-
-    def _request(self, payload: Dict[str, Any],
-                 timeout: float) -> Dict[str, Any]:
-        """One connection, one handshake, one request/response."""
-        if not self.sock_path:
-            raise DaemonUnavailable("no daemon socket configured")
-        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    def _dial(self, timeout: float) -> _PooledConn:
+        """A fresh connected + handshaken connection."""
+        assert self.sock_path
+        kind, target = parse_address(self.sock_path)
+        if kind == "tcp":
+            sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        else:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         try:
             sock.settimeout(min(self.connect_timeout, timeout))
             try:
-                sock.connect(self.sock_path)
+                sock.connect(target)
             except OSError as e:
                 raise DaemonUnavailable(
                     f"connect {self.sock_path!r}: {e}") from e
             sock.settimeout(timeout)
             try:
-                send_frame(sock, self._hello())
-                hello = recv_frame(sock)
-                if hello is None:
-                    raise ProtocolError("daemon closed during handshake")
-                if not hello.get("ok"):
-                    raise response_error(hello)
-                send_frame(sock, payload)
-                resp = recv_frame(sock)
-                if resp is None:
-                    raise ProtocolError("daemon closed mid-request")
-                if not resp.get("ok"):
-                    raise response_error(resp)
-                return resp
+                hello = {"op": "hello",
+                         **(self._versions or wire_versions())}
+                _, session = client_handshake(sock, hello, key=self.key)
             except socket.timeout as e:
                 raise DaemonUnavailable(
                     f"daemon timed out after {timeout:.3f}s") from e
             except (BrokenPipeError, ConnectionError) as e:
                 raise DaemonUnavailable(f"connection died: {e}") from e
-        finally:
+            self.stats.incr("dials")
+            return _PooledConn(sock, session)
+        except BaseException:
             try:
                 sock.close()
             except OSError:
                 pass
+            raise
+
+    def _checkout(self) -> Optional[_PooledConn]:
+        with self._pool_lock:
+            return self._idle.pop() if self._idle else None
+
+    def _checkin(self, conn: _PooledConn) -> None:
+        with self._pool_lock:
+            if len(self._idle) < self.POOL_SIZE:
+                self._idle.append(conn)
+                return
+        conn.close()
+
+    def close(self) -> None:
+        """Drop every pooled connection (test/bench teardown)."""
+        with self._pool_lock:
+            idle, self._idle = self._idle, []
+        for c in idle:
+            c.close()
+
+    # -- low-level ---------------------------------------------------------
+
+    def _roundtrip(self, conn: _PooledConn, payload: Dict[str, Any],
+                   timeout: float) -> Dict[str, Any]:
+        conn.sock.settimeout(timeout)
+        send_frame(conn.sock, payload, session=conn.session)
+        resp = recv_frame(conn.sock, session=conn.session)
+        if resp is None:
+            raise ProtocolError("daemon closed mid-request")
+        if not resp.get("ok"):
+            raise response_error(resp)
+        return resp
+
+    def _request(self, payload: Dict[str, Any],
+                 timeout: float) -> Dict[str, Any]:
+        """One request/response over a pooled connection.
+
+        A pooled connection may have been closed by the daemon while
+        idle (conn-timeout, restart) — since requests are idempotent,
+        a *reused* connection that dies before yielding a response is
+        retried once on a fresh dial; errors on a fresh connection
+        propagate (the daemon is actually unhealthy)."""
+        if not self.sock_path:
+            raise DaemonUnavailable("no daemon socket configured")
+        conn = self._checkout()
+        reused = conn is not None
+        if conn is None:
+            conn = self._dial(timeout)
+        else:
+            self.stats.incr("reuses")
+        try:
+            resp = self._roundtrip(conn, payload, timeout)
+        except (socket.timeout, OSError, ProtocolError, AuthFailed) as e:
+            conn.close()
+            if not reused:
+                raise self._typed_transport_error(e) from e
+            # stale pooled connection — one transparent redial
+            conn = self._dial(timeout)
+            try:
+                resp = self._roundtrip(conn, payload, timeout)
+            except (socket.timeout, OSError, ProtocolError,
+                    AuthFailed) as e2:
+                conn.close()
+                raise self._typed_transport_error(e2) from e2
+        except BaseException:
+            conn.close()      # typed daemon reply — connection is fine,
+            raise             # but don't pool mid-error state
+        self._checkin(conn)
+        return resp
+
+    @staticmethod
+    def _typed_transport_error(e: BaseException) -> SchedClientError:
+        """Map a transport-layer exception to the typed error family."""
+        if isinstance(e, SchedClientError):
+            return e
+        if isinstance(e, socket.timeout):
+            return DaemonUnavailable(f"daemon timed out: {e}")
+        return DaemonUnavailable(f"connection died: {e}")
 
     def _call(self, payload: Dict[str, Any],
               deadline: Optional[Deadline] = None) -> Dict[str, Any]:
@@ -378,7 +399,7 @@ class SchedClient:
         Raises the last typed error when the daemon could not serve the
         request; the public API turns that into the local fallback."""
         if not self.breaker.allow():
-            self.stats.breaker_skips += 1
+            self.stats.incr("breaker_skips")
             raise DaemonUnavailable("circuit breaker open")
         delay = self.backoff_s
         last: Optional[SchedClientError] = None
@@ -395,27 +416,38 @@ class SchedClient:
             try:
                 resp = self._request(payload, timeout)
                 self.breaker.success()
-                self.stats.remote_ok += 1
+                self.stats.incr("remote_ok")
                 return resp
             except VersionSkew:
                 # not transient: no retry, breaker opens immediately so
                 # every later request goes straight to the fallback
-                self.stats.version_skew += 1
-                self.stats.remote_errors += 1
+                self.stats.incr("version_skew")
+                self.stats.incr("remote_errors")
+                self.breaker.trip()
+                raise
+            except AuthFailed:
+                # wrong/missing key cannot fix itself between retries
+                self.stats.incr("auth_failed")
+                self.stats.incr("remote_errors")
                 self.breaker.trip()
                 raise
             except Overloaded as e:
-                self.stats.overloaded += 1
-                self.stats.remote_errors += 1
+                self.stats.incr("overloaded")
+                self.stats.incr("remote_errors")
                 last = e
             except (DaemonUnavailable, ProtocolError, RemoteError) as e:
-                self.stats.remote_errors += 1
+                self.stats.incr("remote_errors")
                 last = e
             if attempt < self.retries:
-                self.stats.retries += 1
                 nap = delay
                 if deadline is not None and deadline.budget_s is not None:
-                    nap = min(nap, max(deadline.remaining(), 0.0))
+                    # a retry is only worth napping for if enough budget
+                    # remains to actually serve it afterwards — otherwise
+                    # the retried request would be DOA and we'd just be
+                    # double-counting a breaker failure
+                    if deadline.remaining() <= nap + MIN_RETRY_BUDGET_S:
+                        break
+                self.stats.incr("retries")
                 time.sleep(nap)
                 delay *= 2
         self.breaker.failure()
@@ -440,7 +472,7 @@ class SchedClient:
         try:
             return self._call(payload, deadline)["result"]
         except (SchedClientError, OSError):
-            self.stats.fallbacks += 1
+            self.stats.incr("fallbacks")
             from .resilience import schedule_with_ladder
             return schedule_with_ladder(
                 scop, config, engine=engine, deadline=deadline,
@@ -455,7 +487,7 @@ class SchedClient:
         try:
             return self._call(payload, deadline)["result"]
         except (SchedClientError, OSError):
-            self.stats.fallbacks += 1
+            self.stats.incr("fallbacks")
             from .autotune import autotune as local_autotune
             return local_autotune(scop, deadline=deadline,
                                   cache=self.cache, **kwargs)
@@ -473,7 +505,7 @@ class SchedClient:
         try:
             return self.remote_plan(kind, *args, **kwargs)
         except (SchedClientError, OSError):
-            self.stats.fallbacks += 1
+            self.stats.incr("fallbacks")
             with local_only():
                 return _local_plan(kind, *args, **kwargs)
 
@@ -489,6 +521,8 @@ class SchedClient:
             self._request({"op": "shutdown"}, timeout)
         except (DaemonUnavailable, ProtocolError):
             pass          # already gone / died while answering
+        finally:
+            self.close()
 
 
 # ---------------------------------------------------------------------------
@@ -524,12 +558,19 @@ def daemon_socket_path() -> Optional[str]:
     return os.environ.get(SOCKET_ENV) or None
 
 
+def daemon_address() -> Optional[str]:
+    """The configured daemon address: ``$POLYTOPS_SCHEDD_ADDR`` (socket
+    path or ``host:port``) wins over ``$POLYTOPS_SCHEDD_SOCK``."""
+    return os.environ.get(ADDR_ENV) or daemon_socket_path()
+
+
 def maybe_client() -> Optional[SchedClient]:
-    """The process-wide client when ``$POLYTOPS_SCHEDD_SOCK`` is set,
-    else None.  Always None inside the daemon's own process."""
+    """The process-wide client when ``$POLYTOPS_SCHEDD_ADDR`` or
+    ``$POLYTOPS_SCHEDD_SOCK`` is set, else None.  Always None inside
+    the daemon's own process."""
     if _SERVER_PROCESS:
         return None
-    path = daemon_socket_path()
+    path = daemon_address()
     if not path:
         return None
     global _DEFAULT
@@ -564,3 +605,17 @@ def _local_plan(kind: str, *args, **kwargs):
         raise ValueError(f"unknown plan kind {kind!r}; "
                          f"known: {', '.join(sorted(planners))}")
     return planners[kind](*args, **kwargs)
+
+
+__all__ = [  # the compatibility surface tests and the daemon import
+    "ADDR_ENV", "KEY_ENV", "MAGIC", "MAX_FRAME_BYTES", "HEADER_LEN",
+    "MAC_LEN", "PRE_AUTH_MAX_FRAME_BYTES", "PROTOCOL_VERSION",
+    "SOCKET_ENV", "AuthFailed", "CircuitBreaker", "ClientStats",
+    "DaemonUnavailable", "Overloaded", "ProtocolError", "RemoteError",
+    "SchedClient", "SchedClientError", "Session", "VersionSkew",
+    "WorkerCrashed", "client_handshake", "daemon_address",
+    "daemon_socket_path", "encode_frame", "is_tcp_address", "load_key",
+    "local_only", "mark_server_process", "maybe_client",
+    "maybe_remote_plan", "normalize_key", "parse_address", "recv_frame",
+    "response_error", "send_frame", "version_skew", "wire_versions",
+]

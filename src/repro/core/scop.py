@@ -25,7 +25,7 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .affine import Affine, affine_sub, parse_affine
 
@@ -95,6 +95,10 @@ class Scop:
         # optional per-array init override for harnesses: C expression over
         # indices i0, i1, ... (e.g. diagonally-dominant input for cholesky)
         self.c_init: Dict[str, str] = {}
+        # numpy-side counterpart for the differential oracles: array name
+        # -> callable(shape, rng) -> ndarray (this module stays numpy-free;
+        # cbackend.init_arrays consults it)
+        self.np_init: Dict[str, Callable] = {}
         self._stack: List[Loop] = []
         self._counters: List[int] = [0]    # textual position counters per depth
         self._next_loop_id = 0

@@ -246,7 +246,22 @@ def make_cholesky(n: Optional[int] = None) -> Scop:
         "((i0 == i1) ? (2.0 * N) : 0.0)"
         " + ((double)((i0*7 + i1*13 + 3) % 251)) / 251.0"
     )
+    k.np_init["A"] = _spd_init
     return k
+
+
+def _spd_init(shape, rng):
+    """Symmetric diagonally-dominant (hence positive-definite) matrix —
+    the numpy oracle's counterpart of the cholesky ``c_init`` above;
+    with the default noise init the factorization hits ``sqrt`` of
+    negative intermediates and fills A with NaNs."""
+    import numpy as np
+
+    n = shape[0]
+    a = rng.standard_normal(shape) * 0.1 + 1.0
+    a = (a + a.T) / 2.0
+    a[np.diag_indices(n)] = 2.0 * n
+    return a
 
 
 @register

@@ -1,7 +1,8 @@
-"""schedd: the fault-tolerant Unix-socket scheduling daemon.
+"""schedd: the fault-tolerant scheduling daemon (Unix socket + TCP).
 
     PYTHONPATH=src python -m repro.launch.schedd \
         --sock /run/user/$UID/schedd.sock [--workers N] [--cache-dir DIR] \
+        [--listen host:port --keyfile FILE] [--peers host:port,...] \
         [--chaos]
 
 The paper puts PolyTOPS *inside* a production compiler, where compiles
@@ -9,7 +10,7 @@ arrive concurrently from many clients and must be amortized, not
 repeated.  ``schedd`` is that shape: a long-lived process owning one
 :class:`~repro.core.schedcache.ScheduleCache` pool, serving
 ``schedule`` / ``autotune`` / ``plan`` requests over the wire protocol
-in :mod:`repro.core.schedclient`.  Guarantees:
+in :mod:`repro.core.wire`.  Guarantees:
 
 * **Request coalescing** — concurrent identical requests (same
   ``schedule_key`` / autotune-space digest / plan signature) share ONE
@@ -60,10 +61,29 @@ in :mod:`repro.core.schedclient`.  Guarantees:
   coalescible requests, frame-cache hits, ping and stats are always
   served — shedding protects the solver, not the socket.
 
-* **Version handshake** — every connection opens with the four-version
-  hello (:func:`repro.core.schedclient.wire_versions`); a skewed peer
-  is rejected with ``version_skew`` before any pickle of a Schedule is
-  exchanged.
+* **Version handshake** — every connection opens with a JSON
+  four-version hello (:func:`repro.core.wire.wire_versions`); a skewed
+  peer is rejected with ``version_skew`` before any pickle of a
+  Schedule is exchanged.
+
+* **Authenticated TCP transport** — ``--listen host:port`` serves the
+  same protocol to remote hosts, gated by an HMAC-SHA256
+  challenge–response woven into the hello (shared key from
+  ``--keyfile`` / ``$POLYTOPS_SCHEDD_KEY``; the daemon *refuses to
+  listen* without one).  Handshake frames are JSON and capped at
+  ``PRE_AUTH_MAX_FRAME_BYTES``, so an unauthenticated peer can neither
+  reach ``pickle.loads`` nor make the daemon buffer a 64 MiB frame;
+  after auth every frame carries a sequence-numbered MAC verified
+  before its body is unpickled.  Bad credentials get a typed
+  ``auth_failed`` reply and a closed connection — never a crash.
+
+* **Peer winner push** — ``--peers host:port,...`` names sibling
+  daemons; an autotune winner's pre-encoded schedule frame is pushed
+  to every peer (async, best-effort, authenticated like any client) so
+  a fleet shares tuned schedules without re-searching.  Reception
+  reuses the local winner-push admission path: never displacing a
+  hotter frame, never admitted over an in-flight computation, and
+  pushed frames are never re-forwarded (no push loops).
 
 * **Crash recovery** — accepted autotune work is journalled
   (begin/done rows, flock'd O_APPEND like the measurement pool) so a
@@ -104,7 +124,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from ..core import schedclient as wire
+from ..core import schedclient, wire
 from ..core.resilience import Deadline, fault_point, provenance, \
     schedule_with_ladder
 from ..core.schedcache import FrameCache, ScheduleCache, schedule_key, \
@@ -350,7 +370,7 @@ def _worker_main(conn, cache_dir: Optional[str], disk: bool,
     coverage) never runs in the child."""
     global _IN_POOL_WORKER
     _IN_POOL_WORKER = True
-    wire.mark_server_process()
+    schedclient.mark_server_process()
     try:
         signal.signal(signal.SIGINT, signal.SIG_IGN)
         signal.signal(signal.SIGTERM, signal.SIG_DFL)
@@ -617,12 +637,27 @@ class SchedDaemon:
     under ``_lock``; the ScheduleCache itself relies on the GIL plus
     atomic on-disk publishes, same as the multi-process case."""
 
-    def __init__(self, sock_path: str, cache_dir: Optional[str] = None, *,
+    def __init__(self, sock_path: Optional[str],
+                 cache_dir: Optional[str] = None, *,
                  workers: int = 0, max_inflight: int = 8,
                  conn_timeout: float = 10.0, frame_cache_cap: int = 256,
                  frame_cache_bytes: int = 32 << 20,
-                 job_timeout: float = 600.0, chaos: bool = False):
+                 job_timeout: float = 600.0, chaos: bool = False,
+                 listen: Optional[str] = None,
+                 auth_key: Optional[bytes] = None,
+                 peers: Tuple[str, ...] = ()):
         self.sock_path = sock_path
+        self.listen = listen
+        self.auth_key = auth_key
+        self.peers = tuple(peers)
+        if listen is not None and auth_key is None:
+            raise ValueError(
+                "refusing to listen on TCP without a shared key: pickle "
+                "from an unauthenticated network peer is code execution "
+                f"(set ${wire.KEY_ENV} or pass --keyfile)")
+        if sock_path is None and listen is None:
+            raise ValueError("daemon needs --sock and/or --listen")
+        self.tcp_port: Optional[int] = None   # set by start() (port 0 ok)
         self.cache = ScheduleCache(cache_dir=cache_dir)
         self.max_inflight = max_inflight
         self.conn_timeout = conn_timeout
@@ -641,89 +676,143 @@ class SchedDaemon:
                        chaos=chaos, job_timeout_s=job_timeout)
             if workers > 0 else None)
         self._listener: Optional[socket.socket] = None
-        self._accept_thread: Optional[threading.Thread] = None
+        self._tcp_listener: Optional[socket.socket] = None
+        self._accept_threads: List[threading.Thread] = []
         self._stop = threading.Event()
+        self._peer_clients: Dict[str, Any] = {}
         self.counters: Dict[str, int] = {
             "requests": 0, "computed": 0, "coalesced": 0, "frame_hits": 0,
             "shed": 0, "bad_frames": 0, "version_skew": 0, "slow_loris": 0,
             "degraded": 0, "errors": 0, "pool_jobs": 0, "worker_crashes": 0,
-            "winner_pushes": 0,
+            "winner_pushes": 0, "auth_failed": 0, "idle_closed": 0,
+            "peer_pushes_sent": 0, "peer_pushes_recv": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> None:
-        d = os.path.dirname(self.sock_path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        try:
-            os.unlink(self.sock_path)     # stale socket from a kill -9
-        except FileNotFoundError:
-            pass
-        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        self._listener.bind(self.sock_path)
-        os.chmod(self.sock_path, 0o600)   # same-user peers only
-        self._listener.listen(64)
-        self._listener.settimeout(0.2)
-        self._accept_thread = threading.Thread(
-            target=self._accept_loop, name="schedd-accept", daemon=True)
-        self._accept_thread.start()
+        if self.sock_path is not None:
+            d = os.path.dirname(self.sock_path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            try:
+                os.unlink(self.sock_path)  # stale socket from a kill -9
+            except FileNotFoundError:
+                pass
+            self._listener = socket.socket(socket.AF_UNIX,
+                                           socket.SOCK_STREAM)
+            self._listener.bind(self.sock_path)
+            os.chmod(self.sock_path, 0o600)   # same-user peers only
+            self._start_listener(self._listener, tcp=False)
+        if self.listen is not None:
+            kind, target = wire.parse_address(self.listen)
+            if kind != "tcp":
+                raise ValueError(f"--listen wants host:port, got "
+                                 f"{self.listen!r}")
+            tl = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            tl.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            tl.bind(target)
+            self.tcp_port = tl.getsockname()[1]   # resolves port 0
+            self._tcp_listener = tl
+            self._start_listener(tl, tcp=True)
+
+    def _start_listener(self, listener: socket.socket, *,
+                        tcp: bool) -> None:
+        listener.listen(64)
+        listener.settimeout(0.2)
+        t = threading.Thread(
+            target=self._accept_loop, args=(listener, tcp),
+            name=f"schedd-accept-{'tcp' if tcp else 'unix'}", daemon=True)
+        t.start()
+        self._accept_threads.append(t)
 
     def stop(self) -> None:
         self._stop.set()
-        if self._accept_thread is not None:
-            self._accept_thread.join(timeout=5.0)
-        if self._listener is not None:
-            try:
-                self._listener.close()
-            except OSError:
-                pass
+        for t in self._accept_threads:
+            t.join(timeout=5.0)
+        for listener in (self._listener, self._tcp_listener):
+            if listener is not None:
+                try:
+                    listener.close()
+                except OSError:
+                    pass
         if self.pool is not None:
             self.pool.close()
-        try:
-            os.unlink(self.sock_path)
-        except OSError:
-            pass
+        for c in self._peer_clients.values():
+            c.close()
+        if self.sock_path is not None:
+            try:
+                os.unlink(self.sock_path)
+            except OSError:
+                pass
 
     def wait(self) -> None:
         while not self._stop.wait(timeout=0.5):
             pass
 
-    def _accept_loop(self) -> None:
+    def _accept_loop(self, listener: socket.socket, tcp: bool) -> None:
         while not self._stop.is_set():
             try:
-                conn, _ = self._listener.accept()
+                conn, _ = listener.accept()
             except socket.timeout:
                 continue
             except OSError:
                 break
-            threading.Thread(target=self._handle_conn, args=(conn,),
+            if tcp:
+                try:
+                    conn.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                except OSError:
+                    pass
+            threading.Thread(target=self._handle_conn, args=(conn, tcp),
                              daemon=True).start()
 
     # -- connection handling ----------------------------------------------
 
-    def _handle_conn(self, conn: socket.socket) -> None:
+    def _handle_conn(self, conn: socket.socket, tcp: bool = False) -> None:
         conn.settimeout(self.conn_timeout)
+        session: Optional[wire.Session] = None
+        handshaken = False
         try:
-            hello = wire.recv_frame(conn, eof_ok=True)
+            # the hello (and the whole handshake) is JSON under the
+            # pre-auth cap: nothing a yet-unauthenticated peer sends is
+            # ever unpickled or buffered beyond a few KiB
+            hello = wire.recv_frame(conn, eof_ok=True, json_codec=True,
+                                    max_bytes=wire.PRE_AUTH_MAX_FRAME_BYTES)
             if hello is None:
                 return
-            if not isinstance(hello, dict) or hello.get("op") != "hello":
+            if hello.get("op") != "hello":
                 self._count("bad_frames")
                 wire.send_frame(conn, {"ok": False, "error": "bad_frame",
-                                       "detail": "expected hello"})
+                                       "detail": "expected hello"},
+                                json_codec=True)
                 return
             skew = wire.version_skew(hello)
             if skew:
                 self._count("version_skew")
                 wire.send_frame(conn, {"ok": False, "error": "version_skew",
-                                       "detail": skew})
+                                       "detail": skew}, json_codec=True)
                 return
-            wire.send_frame(conn, {"ok": True, "op": "hello",
-                                   "pid": os.getpid(),
-                                   **wire.wire_versions()})
+            hello_ok = {"ok": True, "op": "hello", "pid": os.getpid(),
+                        **wire.wire_versions()}
+            try:
+                session = wire.server_handshake(
+                    conn, hello, key=self.auth_key, require_auth=tcp,
+                    hello_ok=hello_ok)
+            except wire.AuthFailed:
+                self._count("auth_failed")   # typed reply already sent
+                return
+            handshaken = True
             while True:
-                req = wire.recv_frame(conn, eof_ok=True)
+                try:
+                    req = wire.recv_frame(conn, eof_ok=True,
+                                          session=session, idle_ok=True)
+                except wire.IdleTimeout:
+                    # a pooled keep-alive connection went quiet at a
+                    # frame boundary — that's reuse working, not a
+                    # stalled peer
+                    self._count("idle_closed")
+                    return
                 if req is None:
                     return
                 self._count("requests")
@@ -732,26 +821,36 @@ class SchedDaemon:
                     wire.send_frame(conn, {
                         "ok": False, "error": "bad_frame",
                         "detail": f"request is {type(req).__name__}, "
-                                  f"not a dict"})
+                                  f"not a dict"}, session=session)
                     continue
                 # local_only: the inline handlers call into akg, whose
                 # remote hook must never route the daemon's own work
                 # back to a daemon (ourselves, for the in-process test
                 # harness); pool workers carry the server mark instead
-                with wire.local_only():
+                with schedclient.local_only():
                     frame = self._dispatch(req)
-                conn.sendall(frame)
+                self._send_prepared(conn, session, frame)
         except _Shutdown as e:
             try:
-                conn.sendall(e.args[0])    # the "bye" frame
+                self._send_prepared(conn, session, e.args[0])  # "bye"
             except OSError:
                 pass
             self._stop.set()
+        except wire.AuthFailed as e:
+            # a post-handshake MAC mismatch: typed reply, drop the conn
+            self._count("auth_failed")
+            try:
+                wire.send_frame(conn, {"ok": False, "error": "auth_failed",
+                                       "detail": str(e)}, session=session)
+            except OSError:
+                pass
         except wire.ProtocolError as e:
             self._count("bad_frames")
             try:          # best effort: the peer may already be gone
                 wire.send_frame(conn, {"ok": False, "error": "bad_frame",
-                                       "detail": str(e)})
+                                       "detail": str(e)},
+                                json_codec=not handshaken,
+                                session=session)
             except OSError:
                 pass
         except socket.timeout:
@@ -763,6 +862,19 @@ class SchedDaemon:
                 conn.close()
             except OSError:
                 pass
+
+    @staticmethod
+    def _send_prepared(conn: socket.socket,
+                       session: Optional["wire.Session"],
+                       frame: bytes) -> None:
+        """Send a pre-encoded (possibly frame-cached) response frame,
+        appending this connection's MAC tag when authenticated — cached
+        bytes are shared across connections, tags never are."""
+        if session is None:
+            conn.sendall(frame)
+        else:
+            body = frame[wire.HEADER_LEN:]
+            conn.sendall(frame + session.sign(body))
 
     def _count(self, name: str, n: int = 1) -> None:
         with self._lock:
@@ -782,7 +894,8 @@ class SchedDaemon:
             raise _Shutdown(frame)        # _handle_conn sets the stop flag
         handlers = {"schedule": self._handle_schedule,
                     "autotune": self._handle_autotune,
-                    "plan": self._handle_plan}
+                    "plan": self._handle_plan,
+                    "winner_push": self._handle_winner_push}
         if op not in handlers:
             return wire.encode_frame({"ok": False, "error": "bad_request",
                                       "detail": f"unknown op {op!r}"})
@@ -874,6 +987,7 @@ class SchedDaemon:
                                                         "worker_crashed"):
             self._count("errors")
         if owner_flight is not None:
+            admitted: List[Tuple[Any, Dict[str, Any]]] = []
             with self._lock:
                 self._flights.pop(key, None)
                 if cacheable and resp.get("ok"):
@@ -881,18 +995,63 @@ class SchedDaemon:
                 # winner-store push BEFORE event.set(): a follower woken
                 # by this flight already finds the pushed frame warm
                 for pkey, presp in pushes or ():
-                    if pkey in self._frames or pkey in self._flights:
-                        continue
                     try:
                         pframe = wire.encode_frame(presp)
                     except Exception:
                         continue
-                    if self._frames.put(pkey, pframe,
-                                        compute_s * PUSH_COST_FRACTION):
+                    if self._admit_push_locked(
+                            pkey, pframe, compute_s * PUSH_COST_FRACTION):
                         self.counters["winner_pushes"] += 1
+                        admitted.append((pkey, presp))
             owner_flight.frame = frame
             owner_flight.event.set()
+            if admitted and self.peers:
+                self._push_to_peers(admitted, compute_s)
         return frame
+
+    def _admit_push_locked(self, pkey: Any, pframe: bytes,
+                           cost_s: float) -> bool:
+        """The winner-push admission path (held ``_lock`` required):
+        never displace an existing frame or race an in-flight
+        computation for the same key."""
+        if pkey in self._frames or pkey in self._flights:
+            return False
+        return bool(self._frames.put(pkey, pframe, cost_s))
+
+    # -- peer winner push ---------------------------------------------------
+
+    def _peer_client(self, peer: str):
+        c = self._peer_clients.get(peer)
+        if c is None:
+            c = schedclient.SchedClient(
+                peer, connect_timeout=1.0, request_timeout=10.0,
+                retries=0, key=self.auth_key)
+            self._peer_clients[peer] = c
+        return c
+
+    def _push_to_peers(self, admitted: List[Tuple[Any, Dict[str, Any]]],
+                       compute_s: float) -> None:
+        """Forward freshly admitted winner frames to every ``--peers``
+        daemon, asynchronously and best-effort: a slow or dead peer
+        costs a background thread a timeout, never a client request.
+        Only *locally computed* winners are forwarded (the receiving
+        handler never re-forwards), so a fleet cannot push in circles."""
+
+        def _send() -> None:
+            for peer in self.peers:
+                c = self._peer_client(peer)
+                for pkey, presp in admitted:
+                    try:
+                        with schedclient.local_only():
+                            c._request({"op": "winner_push", "key": pkey,
+                                        "resp": presp,
+                                        "compute_s": compute_s}, 10.0)
+                        self._count("peer_pushes_sent")
+                    except (wire.SchedClientError, OSError):
+                        break             # skip this peer's remaining keys
+
+        threading.Thread(target=_send, name="schedd-peer-push",
+                         daemon=True).start()
 
     def _compute_job(self, key: Optional[Any], op: str,
                      req: Dict[str, Any],
@@ -986,6 +1145,36 @@ class SchedDaemon:
             key = None
         return self._serve_keyed(key, "plan", req, self._deadline(req))
 
+    def _handle_winner_push(self, req: Dict[str, Any]) -> bytes:
+        """A sibling daemon pushing an autotune winner's schedule frame.
+        Reuses the local admission path; never re-forwarded (the sender
+        is the only daemon that computed it), so pushes cannot loop."""
+        pkey = req.get("key")
+        presp = req.get("resp")
+        if not (isinstance(presp, dict) and presp.get("ok")
+                and pkey is not None):
+            return wire.encode_frame({
+                "ok": False, "error": "bad_request",
+                "detail": "winner_push wants key + ok resp"})
+        meta = presp.get("meta")
+        if not (isinstance(meta, dict) and not meta.get("degraded")):
+            return wire.encode_frame({
+                "ok": False, "error": "bad_request",
+                "detail": "refusing a degraded winner push"})
+        try:
+            cost_s = float(req.get("compute_s") or 0.0)
+            pframe = wire.encode_frame(presp)
+        except Exception as e:
+            return wire.encode_frame({
+                "ok": False, "error": "bad_request",
+                "detail": f"unencodable push: {type(e).__name__}: {e}"})
+        with self._lock:
+            admitted = self._admit_push_locked(
+                pkey, pframe, cost_s * PUSH_COST_FRACTION)
+            if admitted:
+                self.counters["peer_pushes_recv"] += 1
+        return wire.encode_frame({"ok": True, "admitted": admitted})
+
     # -- introspection -----------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
@@ -996,6 +1185,9 @@ class SchedDaemon:
         return {
             "pid": os.getpid(),
             "sock": self.sock_path,
+            "listen": self.listen,
+            "tcp_port": self.tcp_port,
+            "peers": list(self.peers),
             "cache_dir": self.cache.dir,
             "counters": counters,
             "inflight": inflight,
@@ -1036,6 +1228,18 @@ def main(argv=None) -> int:
                     help="hard cap on one worker job (wedge guard)")
     ap.add_argument("--frame-cache-cap", type=int, default=256,
                     help="frame-cache entry cap")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="also serve TCP (requires a shared key via "
+                         "--keyfile or $POLYTOPS_SCHEDD_KEY); port 0 "
+                         "binds an ephemeral port (see --port-file)")
+    ap.add_argument("--keyfile", default=None,
+                    help="file holding the shared TCP auth key")
+    ap.add_argument("--peers", default="",
+                    help="comma-separated sibling daemon addresses to "
+                         "push autotune winners to")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound TCP port here once listening "
+                         "(ephemeral-port discovery)")
     ap.add_argument("--chaos", action="store_true",
                     help="enable the test-only test_delay_s / "
                          "test_kill_worker request fields")
@@ -1043,17 +1247,31 @@ def main(argv=None) -> int:
 
     # the daemon's own scheduling work must never route back through a
     # client pointed at ourselves
-    wire.mark_server_process()
+    schedclient.mark_server_process()
 
+    auth_key = wire.load_key(args.keyfile)
+    peers = tuple(p.strip() for p in args.peers.split(",") if p.strip())
     daemon = SchedDaemon(args.sock, cache_dir=args.cache_dir,
                          workers=args.workers,
                          max_inflight=args.max_inflight,
                          conn_timeout=args.conn_timeout,
                          frame_cache_cap=args.frame_cache_cap,
-                         job_timeout=args.job_timeout, chaos=args.chaos)
+                         job_timeout=args.job_timeout, chaos=args.chaos,
+                         listen=args.listen, auth_key=auth_key,
+                         peers=peers)
     daemon.start()
-    print(f"schedd: pid {os.getpid()} listening on {args.sock} "
+    if args.port_file and daemon.tcp_port is not None:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(daemon.tcp_port))
+        os.replace(tmp, args.port_file)
+    listening = " + ".join(
+        s for s in (args.sock,
+                    f"tcp:{daemon.tcp_port}" if daemon.tcp_port else None)
+        if s)
+    print(f"schedd: pid {os.getpid()} listening on {listening} "
           f"(cache {daemon.cache.dir}, workers {args.workers}, "
+          f"peers {len(peers)}, "
           f"journal recovered {len(daemon.recovered)})", flush=True)
 
     def _term(signum, frame):

@@ -9,7 +9,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import config as CFG
-from repro.core.cbackend import array_extents
+from repro.core.cbackend import init_arrays
 from repro.core.codegen import CodeGenerator, interpret_scop
 from repro.core.postproc import tile_schedule
 from repro.core.scheduler import schedule_scop
@@ -25,10 +25,7 @@ SCALARS = {"alpha": 1.5, "beta": 0.7, "zero": 0.0, "one": 1.0,
 
 
 def _arrays(scop, seed=0):
-    ext = array_extents(scop)
-    r = np.random.default_rng(seed)
-    return {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
-            for a, dims in ext.items()}
+    return init_arrays(scop, seed)
 
 
 def _check(scop, cfg, tile=None, wavefront=False):

@@ -21,7 +21,7 @@ import shutil
 import numpy as np
 import pytest
 
-from repro.core.cbackend import array_extents
+from repro.core.cbackend import init_arrays
 from repro.core.codegen import CodeGenerator, interpret_scop
 from repro.core.config import pluto_style, tensor_style
 from repro.core.resilience import (FAULT_SITES, LADDER, REGISTRY, Deadline,
@@ -52,10 +52,7 @@ def _oracle_check(scop, sched):
     """Scheduled numpy emitter vs program-order oracle — the legality
     differential every ladder rung must pass."""
     fn, src = CodeGenerator(sched).build()
-    ext = array_extents(scop)
-    r = np.random.default_rng(0)
-    a1 = {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
-          for a, dims in ext.items()}
+    a1 = init_arrays(scop)
     a2 = {k: v.copy() for k, v in a1.items()}
     sc = {k: SCALARS.get(k, 1.0) for k in scop.scalars}
     interpret_scop(scop, a1, sc)

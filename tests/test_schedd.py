@@ -551,3 +551,175 @@ def test_daemon_surfaces_recovered_journal(tmp_path):
         st = SchedClient(sock, retries=0).daemon_stats()
         assert st["journal_recovered"] == 1
         assert st["journal_recovered_keys"] == ["orphaned-by-kill9"]
+
+
+# ---------------------------------------------------------------------------
+# TCP transport + auth
+# ---------------------------------------------------------------------------
+
+TCP_KEY = b"test-shared-key"
+
+
+@contextmanager
+def tcp_daemon(tmp_path, key=TCP_KEY, **kwargs):
+    kwargs.setdefault("cache_dir", str(tmp_path / "pool"))
+    kwargs.setdefault("chaos", True)
+    d = SchedDaemon(None, listen="127.0.0.1:0", auth_key=key, **kwargs)
+    d.start()
+    try:
+        yield d, f"127.0.0.1:{d.tcp_port}"
+    finally:
+        d.stop()
+
+
+def test_tcp_requires_key():
+    with pytest.raises(ValueError, match="without a shared key"):
+        SchedDaemon(None, listen="127.0.0.1:0", auth_key=None)
+
+
+def test_tcp_roundtrip_and_frame_cache(tmp_path):
+    with tcp_daemon(tmp_path) as (d, addr):
+        c = SchedClient(addr, retries=0, key=TCP_KEY)
+        s1 = c.schedule(tiny_scop())
+        assert not s1.degraded
+        s2 = c.schedule(tiny_scop())
+        assert schedule_fingerprint(s1) == schedule_fingerprint(s2)
+        assert d.counters["computed"] == 1
+        assert d.counters["frame_hits"] == 1
+        assert c.stats.remote_ok == 2 and c.stats.fallbacks == 0
+        c.close()
+
+
+def test_tcp_connection_reuse_one_handshake(tmp_path):
+    """Pooled connections: N sequential requests cost ONE dial (one
+    version/auth handshake), not N — the whole point of reuse over TCP."""
+    with tcp_daemon(tmp_path) as (d, addr):
+        c = SchedClient(addr, retries=0, key=TCP_KEY)
+        for _ in range(5):
+            assert c.ping()["ok"]
+        snap = c.stats.as_dict()
+        assert snap["dials"] == 1
+        assert snap["reuses"] == 4
+        c.close()
+
+
+def test_tcp_wrong_key_typed_and_daemon_survives(tmp_path):
+    with tcp_daemon(tmp_path) as (d, addr):
+        bad = SchedClient(addr, retries=0, key=b"not-the-key")
+        with pytest.raises(wire.AuthFailed):
+            bad.ping()                 # raw path raises typed
+        wait_until(lambda: d.counters["auth_failed"] >= 1,
+                   msg="daemon-side auth_failed count")
+        # the public API degrades to the fallback, not a raise — and
+        # the auth failure trips the breaker immediately (not transient)
+        sched = bad.schedule(tiny_scop("schedd_tcpw"))
+        assert sched is not None
+        assert bad.stats.fallbacks == 1
+        assert bad.stats.auth_failed == 1
+        assert bad.breaker.state == "open"
+        # the daemon keeps serving authenticated clients
+        good = SchedClient(addr, retries=0, key=TCP_KEY)
+        assert good.ping()["ok"]
+        good.close()
+
+
+def test_tcp_missing_key_is_typed(tmp_path):
+    with tcp_daemon(tmp_path) as (d, addr):
+        c = SchedClient(addr, retries=0, key=None)
+        c.key = None                   # defeat any ambient env key
+        with pytest.raises(wire.AuthFailed, match="no key"):
+            c.ping()
+
+
+def test_tcp_tampered_mac_rejected_conn_dropped(tmp_path):
+    """A post-handshake frame whose MAC does not verify gets a typed
+    auth_failed reply and a dropped connection — never unpickled."""
+    with tcp_daemon(tmp_path) as (d, addr):
+        host, port = addr.rsplit(":", 1)
+        s = socketlib.create_connection((host, int(port)), timeout=5.0)
+        try:
+            _, session = wire.client_handshake(
+                s, {"op": "hello", **wire_versions()}, key=TCP_KEY)
+            frame = bytearray(wire.encode_frame({"op": "ping"},
+                                                session=session))
+            frame[-1] ^= 0xFF                      # corrupt the MAC
+            s.sendall(bytes(frame))
+            reply = wire.recv_frame(s, session=session, eof_ok=True)
+            assert reply is not None and reply["error"] == "auth_failed"
+            wait_until(lambda: d.counters["auth_failed"] >= 1,
+                       msg="auth_failed counter")
+        finally:
+            s.close()
+        # unpoisoned: the daemon still serves
+        good = SchedClient(addr, retries=0, key=TCP_KEY)
+        assert good.ping()["ok"]
+        good.close()
+
+
+def test_tcp_idle_conn_closed_quietly_then_redialed(tmp_path):
+    """A pooled connection the daemon idle-closes is NOT a slow-loris
+    (separate counter) and the client transparently redials."""
+    with tcp_daemon(tmp_path, conn_timeout=0.3) as (d, addr):
+        c = SchedClient(addr, retries=0, key=TCP_KEY)
+        assert c.ping()["ok"]
+        wait_until(lambda: d.counters["idle_closed"] >= 1,
+                   msg="idle close")
+        assert d.counters["slow_loris"] == 0
+        assert c.ping()["ok"]          # stale pooled conn -> one redial
+        assert c.stats.dials == 2
+        assert c.stats.remote_errors == 0
+        c.close()
+
+
+def test_addr_env_routes_client(tmp_path, monkeypatch):
+    with tcp_daemon(tmp_path) as (d, addr):
+        monkeypatch.setenv(wire.ADDR_ENV, addr)
+        monkeypatch.setenv(wire.KEY_ENV, TCP_KEY.decode())
+        monkeypatch.delenv(wire.SOCKET_ENV, raising=False)
+        wire._DEFAULT = None
+        try:
+            c = wire.maybe_client()
+            assert c is not None and c.sock_path == addr
+            assert c.ping()["ok"]
+        finally:
+            wire._DEFAULT = None
+
+
+def test_peer_winner_push_between_daemons(tmp_path):
+    """Daemon A's autotune winner lands in daemon B's frame cache: a
+    schedule request for the tuned config on B is a warm frame hit
+    with zero computes."""
+    with tcp_daemon(tmp_path, cache_dir=str(tmp_path / "pb")) as (db, addr_b):
+        with tcp_daemon(tmp_path, cache_dir=str(tmp_path / "pa"),
+                        peers=(addr_b,)) as (da, addr_a):
+            ca = SchedClient(addr_a, retries=0, key=TCP_KEY,
+                             request_timeout=60.0)
+            r = ca.autotune(tiny_scop("schedd_pp"), measure=False, top_k=2)
+            assert not r.degraded
+            assert da.counters["winner_pushes"] == 1
+            wait_until(lambda: db.counters["peer_pushes_recv"] >= 1,
+                       msg="peer push arrival")
+            wait_until(lambda: da.counters["peer_pushes_sent"] >= 1,
+                       msg="peer push sent count")
+            cb = SchedClient(addr_b, retries=0, key=TCP_KEY)
+            sched = cb.schedule(tiny_scop("schedd_pp"),
+                                config=r.config.scheduler_config())
+            assert not sched.degraded
+            assert db.counters["frame_hits"] == 1
+            assert db.counters["computed"] == 0
+            ca.close(); cb.close()
+
+
+def test_winner_push_op_validates(tmp_path):
+    """The winner_push op rejects degraded/malformed pushes with a
+    typed error instead of admitting poison."""
+    with tcp_daemon(tmp_path) as (d, addr):
+        c = SchedClient(addr, retries=0, key=TCP_KEY)
+        with pytest.raises(ProtocolError):
+            c._request({"op": "winner_push"}, 5.0)
+        with pytest.raises(ProtocolError):
+            c._request({"op": "winner_push", "key": ("schedule", "k", False),
+                        "resp": {"ok": True,
+                                 "meta": {"degraded": True}}}, 5.0)
+        assert d.counters["peer_pushes_recv"] == 0
+        c.close()

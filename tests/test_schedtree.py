@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import config as CFG
-from repro.core.cbackend import CCodeGenerator, array_extents
+from repro.core.cbackend import CCodeGenerator, init_arrays
 from repro.core.codegen import CodeGenerator, interpret_scop
 from repro.core.postproc import tile_schedule
 from repro.core.schedtree import build_tree, schedule_tree, tree_from_json, tree_to_json
@@ -50,10 +50,7 @@ def _small_scop(name):
 
 
 def _arrays(scop, seed=0):
-    ext = array_extents(scop)
-    r = np.random.default_rng(seed)
-    return {a: r.standard_normal(tuple(max(d, 1) for d in dims)) * 0.1 + 1.0
-            for a, dims in ext.items()}
+    return init_arrays(scop, seed)
 
 
 def _check_equivalence(scop, sched, scan=None, tree=None):
@@ -63,6 +60,10 @@ def _check_equivalence(scop, sched, scan=None, tree=None):
     interpret_scop(scop, a1, sc)
     fn(**a2, **sc, **scop.params)
     for k in a1:
+        # NaN == NaN under assert_allclose: a kernel whose oracle goes
+        # non-finite (cholesky's old init) would "pass" vacuously
+        assert np.isfinite(a1[k]).all(), \
+            f"{scop.name} {k}: oracle output is not finite"
         np.testing.assert_allclose(
             a1[k], a2[k], rtol=1e-7, atol=1e-9,
             err_msg=f"{scop.name} {k}\n{src}")

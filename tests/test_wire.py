@@ -1,0 +1,406 @@
+"""Wire-layer unit tests: partial TCP delivery, MAC sessions, the
+HMAC handshake, and the client-side retry/stats fixes.
+
+Frames over AF_UNIX arrive whole in practice, so the framing code's
+reassembly paths were never exercised before the TCP transport existed.
+These tests dribble bytes through socketpairs — headers split from
+bodies, MACs split across segments, EOF mid-frame — exactly the
+arrival patterns a real TCP stream produces.
+"""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import wire
+from repro.core.resilience import Deadline
+from repro.core.schedclient import (
+    MIN_RETRY_BUDGET_S,
+    AuthFailed,
+    ClientStats,
+    DaemonUnavailable,
+    ProtocolError,
+    SchedClient,
+)
+
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    return a, b
+
+
+def _dribble(sock, data, chunk=1, delay=0.0):
+    """Write ``data`` in ``chunk``-byte segments from a thread."""
+    def run():
+        for i in range(0, len(data), chunk):
+            sock.sendall(data[i:i + chunk])
+            if delay:
+                time.sleep(delay)
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+# ---------------------------------------------------------------------------
+# partial delivery
+# ---------------------------------------------------------------------------
+
+
+def test_frame_dribbled_byte_by_byte():
+    a, b = _pair()
+    try:
+        payload = {"op": "ping", "blob": list(range(50))}
+        t = _dribble(a, wire.encode_frame(payload), chunk=1)
+        assert wire.recv_frame(b) == payload
+        t.join(timeout=5.0)
+    finally:
+        a.close(); b.close()
+
+
+def test_header_split_from_body():
+    a, b = _pair()
+    try:
+        frame = wire.encode_frame({"x": 1})
+        # header in two pieces, then a pause, then the body in two pieces
+        mid = wire.HEADER_LEN - 2
+        for part in (frame[:3], frame[3:mid], frame[mid:mid + 4],
+                     frame[mid + 4:]):
+            t = _dribble(a, part, chunk=len(part) or 1)
+            t.join(timeout=5.0)
+        assert wire.recv_frame(b) == {"x": 1}
+    finally:
+        a.close(); b.close()
+
+
+def test_mac_split_across_segments():
+    """A MAC'd frame whose 32-byte tag arrives one byte at a time still
+    verifies — and verifies BEFORE the body is decoded."""
+    a, b = _pair()
+    try:
+        tx = wire.Session(b"k" * 32, is_client=True)
+        rx = wire.Session(b"k" * 32, is_client=False)
+        frame = wire.encode_frame({"n": 7}, session=tx)
+        # everything up to mid-MAC at once, then dribble the rest
+        cut = len(frame) - wire.MAC_LEN // 2
+        a.sendall(frame[:cut])
+        t = _dribble(a, frame[cut:], chunk=1)
+        assert wire.recv_frame(b, session=rx) == {"n": 7}
+        t.join(timeout=5.0)
+    finally:
+        a.close(); b.close()
+
+
+def test_eof_mid_header_and_mid_body():
+    for cut in (2, wire.HEADER_LEN + 3):
+        a, b = _pair()
+        try:
+            frame = wire.encode_frame({"x": 1})
+            a.sendall(frame[:cut])
+            a.close()
+            with pytest.raises(ProtocolError, match="truncated"):
+                wire.recv_frame(b)
+        finally:
+            b.close()
+    # EOF exactly at a frame boundary is clean when eof_ok
+    a, b = _pair()
+    try:
+        a.close()
+        assert wire.recv_frame(b, eof_ok=True) is None
+    finally:
+        b.close()
+
+
+def test_eof_mid_mac_is_truncated():
+    a, b = _pair()
+    try:
+        tx = wire.Session(b"k" * 32, is_client=True)
+        rx = wire.Session(b"k" * 32, is_client=False)
+        frame = wire.encode_frame({"n": 1}, session=tx)
+        a.sendall(frame[:-5])       # everything but the MAC tail
+        a.close()
+        with pytest.raises(ProtocolError, match="truncated"):
+            wire.recv_frame(b, session=rx)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# MAC sessions
+# ---------------------------------------------------------------------------
+
+
+def test_tampered_body_fails_before_decode():
+    a, b = _pair()
+    try:
+        tx = wire.Session(b"k" * 32, is_client=True)
+        rx = wire.Session(b"k" * 32, is_client=False)
+        frame = bytearray(wire.encode_frame({"n": 7}, session=tx))
+        frame[wire.HEADER_LEN] ^= 0xFF        # flip a body byte
+        a.sendall(bytes(frame))
+        with pytest.raises(AuthFailed, match="MAC mismatch"):
+            wire.recv_frame(b, session=rx)
+    finally:
+        a.close(); b.close()
+
+
+def test_reordered_frames_fail_sequence_check():
+    """Per-direction sequence numbers: swapping two frames in flight
+    breaks both MACs (no replay / reorder within a connection)."""
+    a, b = _pair()
+    try:
+        tx = wire.Session(b"k" * 32, is_client=True)
+        rx = wire.Session(b"k" * 32, is_client=False)
+        f1 = wire.encode_frame({"n": 1}, session=tx)
+        f2 = wire.encode_frame({"n": 2}, session=tx)
+        a.sendall(f2 + f1)                     # swapped
+        with pytest.raises(AuthFailed):
+            wire.recv_frame(b, session=rx)
+    finally:
+        a.close(); b.close()
+
+
+def test_direction_bytes_prevent_reflection():
+    """A frame signed by the client cannot be verified as if it came
+    from the server (and vice versa)."""
+    tx = wire.Session(b"k" * 32, is_client=True)
+    reflected = wire.Session(b"k" * 32, is_client=True)  # same direction
+    a, b = _pair()
+    try:
+        a.sendall(wire.encode_frame({"n": 1}, session=tx))
+        with pytest.raises(AuthFailed):
+            wire.recv_frame(b, session=reflected)
+    finally:
+        a.close(); b.close()
+
+
+# ---------------------------------------------------------------------------
+# pre-auth cap + JSON codec
+# ---------------------------------------------------------------------------
+
+
+def test_pre_auth_cap_rejects_large_header():
+    a, b = _pair()
+    try:
+        import struct
+        a.sendall(wire.MAGIC
+                  + struct.pack(">I", wire.PRE_AUTH_MAX_FRAME_BYTES + 1))
+        with pytest.raises(ProtocolError, match="cap"):
+            wire.recv_frame(b, max_bytes=wire.PRE_AUTH_MAX_FRAME_BYTES)
+    finally:
+        a.close(); b.close()
+
+
+def test_json_codec_rejects_garbage_and_non_dict():
+    for body in (b"\x80\x04notjson", b"[1,2,3]"):
+        a, b = _pair()
+        try:
+            import struct
+            a.sendall(wire.MAGIC + struct.pack(">I", len(body)) + body)
+            with pytest.raises(ProtocolError):
+                wire.recv_frame(b, json_codec=True)
+        finally:
+            a.close(); b.close()
+
+
+# ---------------------------------------------------------------------------
+# the handshake
+# ---------------------------------------------------------------------------
+
+
+def _server_side(conn, key, require_auth):
+    hello = wire.recv_frame(conn, json_codec=True,
+                            max_bytes=wire.PRE_AUTH_MAX_FRAME_BYTES)
+    return wire.server_handshake(
+        conn, hello, key=key, require_auth=require_auth,
+        hello_ok={"ok": True, "op": "hello", **wire.wire_versions()})
+
+
+def _client_side(sock, key, out):
+    try:
+        out["resp"], out["session"] = wire.client_handshake(
+            sock, {"op": "hello", **wire.wire_versions()}, key=key)
+    except Exception as e:          # surfaced by the test thread join
+        out["error"] = e
+        sock.close()    # like SchedClient._dial: abort is visible as EOF
+
+
+def test_handshake_roundtrip_with_macs():
+    a, b = _pair()
+    try:
+        out = {}
+        t = threading.Thread(target=_client_side,
+                             args=(a, b"shared-key", out), daemon=True)
+        t.start()
+        server_session = _server_side(b, b"shared-key", True)
+        t.join(timeout=5.0)
+        assert "error" not in out, out.get("error")
+        assert out["resp"].get("authed") is True
+        # both sides derived the same session key; MAC'd traffic flows
+        wire.send_frame(a, {"op": "ping"}, session=out["session"])
+        assert wire.recv_frame(b, session=server_session) == {"op": "ping"}
+        wire.send_frame(b, {"ok": True}, session=server_session)
+        assert wire.recv_frame(a, session=out["session"]) == {"ok": True}
+    finally:
+        a.close(); b.close()
+
+
+def test_handshake_wrong_key_typed_both_sides():
+    a, b = _pair()
+    try:
+        out = {}
+        t = threading.Thread(target=_client_side,
+                             args=(a, b"wrong", out), daemon=True)
+        t.start()
+        with pytest.raises(wire.AuthFailed):
+            _server_side(b, b"right", True)
+        t.join(timeout=5.0)
+        assert isinstance(out.get("error"), wire.AuthFailed)
+    finally:
+        a.close(); b.close()
+
+
+def test_handshake_unix_no_auth_no_session():
+    a, b = _pair()
+    try:
+        out = {}
+        t = threading.Thread(target=_client_side, args=(a, None, out),
+                             daemon=True)
+        t.start()
+        assert _server_side(b, None, False) is None
+        t.join(timeout=5.0)
+        assert "error" not in out
+        assert out["session"] is None
+    finally:
+        a.close(); b.close()
+
+
+# ---------------------------------------------------------------------------
+# address parsing + keys
+# ---------------------------------------------------------------------------
+
+
+def test_parse_address():
+    assert wire.parse_address("127.0.0.1:9000") == \
+        ("tcp", ("127.0.0.1", 9000))
+    assert wire.parse_address("example.com:80") == \
+        ("tcp", ("example.com", 80))
+    assert wire.parse_address("/tmp/x/s.sock") == ("unix", "/tmp/x/s.sock")
+    assert wire.parse_address("/tmp/odd:name.sock") == \
+        ("unix", "/tmp/odd:name.sock")          # path separator wins
+    assert wire.parse_address("sock")[0] == "unix"
+    assert wire.parse_address("host:")[0] == "unix"
+    assert wire.parse_address(":123")[0] == "unix"
+
+
+def test_load_key_sources(tmp_path, monkeypatch):
+    monkeypatch.delenv(wire.KEY_ENV, raising=False)
+    assert wire.load_key() is None
+    monkeypatch.setenv(wire.KEY_ENV, "envkey")
+    assert wire.load_key() == b"envkey"
+    kf = tmp_path / "key"
+    kf.write_bytes(b"filekey\n")
+    assert wire.load_key(str(kf)) == b"filekey"   # keyfile beats env
+    (tmp_path / "empty").write_bytes(b"")
+    with pytest.raises(ValueError):
+        wire.load_key(str(tmp_path / "empty"))
+
+
+# ---------------------------------------------------------------------------
+# retry backoff must not eat the whole deadline (regression)
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_retry_skipped_when_budget_below_nap_plus_floor(monkeypatch):
+    """With less budget left than the backoff nap + a minimum useful
+    request, the retry would be dead on arrival — the client must raise
+    the last typed error immediately instead of napping through the
+    deadline and double-counting a breaker failure."""
+    clock = _FakeClock()
+    deadline = Deadline(1.0, clock=clock)
+    c = SchedClient("/nonexistent/sock", retries=3, backoff_s=0.9)
+    calls = []
+
+    def failing_request(payload, timeout):
+        clock.t += 0.2            # each attempt burns fake time
+        calls.append(timeout)
+        raise DaemonUnavailable("down")
+
+    monkeypatch.setattr(c, "_request", failing_request)
+    naps = []
+    monkeypatch.setattr(time, "sleep", lambda s: naps.append(s))
+
+    with pytest.raises(DaemonUnavailable):
+        c._call({"op": "ping"}, deadline)
+    # one attempt burns 0.2s leaving 0.8s < 0.9 nap + floor: no retry
+    assert len(calls) == 1
+    assert naps == []
+    assert c.stats.as_dict()["retries"] == 0
+    # exactly ONE breaker failure for the whole call
+    assert c.breaker.failures == 1
+
+
+def test_retry_proceeds_with_ample_budget(monkeypatch):
+    clock = _FakeClock()
+    deadline = Deadline(10.0, clock=clock)
+    c = SchedClient("/nonexistent/sock", retries=2, backoff_s=0.05)
+    calls = []
+
+    def failing_request(payload, timeout):
+        clock.t += 0.01
+        calls.append(payload["deadline_s"])
+        raise DaemonUnavailable("down")
+
+    monkeypatch.setattr(c, "_request", failing_request)
+    naps = []
+    monkeypatch.setattr(time, "sleep", lambda s: naps.append(s))
+    with pytest.raises(DaemonUnavailable):
+        c._call({"op": "ping"}, deadline)
+    assert len(calls) == 3                  # initial + 2 retries
+    assert naps == [0.05, 0.1]              # exponential, never clipped
+    assert c.stats.as_dict()["retries"] == 2
+    # the wire deadline shrinks as fake time passes
+    assert calls == sorted(calls, reverse=True)
+
+
+def test_min_retry_budget_floor_constant():
+    assert 0.0 < MIN_RETRY_BUDGET_S < 1.0
+
+
+# ---------------------------------------------------------------------------
+# ClientStats under thread contention (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_client_stats_threaded_hammer():
+    """Concurrent increments from many threads lose no updates — the
+    old dataclass ``+=`` did, once SchedClient was shared across
+    connection threads."""
+    stats = ClientStats()
+    threads, per_thread = 8, 2000
+    fields = ["remote_ok", "retries", "fallbacks", "remote_errors"]
+
+    def hammer():
+        for _ in range(per_thread):
+            for f in fields:
+                stats.incr(f)
+
+    ts = [threading.Thread(target=hammer) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = stats.as_dict()
+    for f in fields:
+        assert snap[f] == threads * per_thread, f
+    assert snap["breaker_skips"] == 0
