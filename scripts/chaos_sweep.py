@@ -414,7 +414,9 @@ def run_daemon_scenarios(results):
     sock = os.path.join(_TMP, "schedd.sock")
     pool = os.path.join(_TMP, "schedd_pool")
     daemon = _spawn_daemon(sock, pool, "--max-inflight", "1",
-                           "--conn-timeout", "1.0")
+                           "--conn-timeout", "1.0",
+                           "--push-storm-max", "3",
+                           "--push-storm-window", "60")
 
     def garbage_frame():
         s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
@@ -530,6 +532,34 @@ def run_daemon_scenarios(results):
             raise AssertionError(f"the in-flight request died: {slow_err}")
         return {"fingerprint": fp[:16]}
 
+    def push_storm():
+        """A fleet's worth of winner pushes against a daemon capped at 3
+        per window: exactly 3 admitted, the rest refused-and-tallied,
+        and the daemon keeps serving."""
+        c = SchedClient(sock, retries=0)
+        admitted = capped = 0
+        for i in range(6):
+            resp = c._request(
+                {"op": "winner_push",
+                 "key": ("schedule", f"storm-{i}", False),
+                 "resp": {"ok": True, "schedule": None,
+                          "meta": {"degraded": False}},
+                 "compute_s": 1.0}, 10.0)
+            admitted += 1 if resp.get("admitted") else 0
+            capped += 1 if resp.get("capped") else 0
+        if admitted != 3 or capped != 3:
+            raise AssertionError(f"storm cap broken: admitted={admitted} "
+                                 f"capped={capped} (cap is 3)")
+        st = c.daemon_stats()
+        if st["counters"]["peer_pushes_capped"] < 3:
+            raise AssertionError(f"capped pushes not counted: "
+                                 f"{st['counters']}")
+        if st["frames"]["stats"]["push_capped"] < 3:
+            raise AssertionError(f"push_capped missing from CacheStats: "
+                                 f"{st['frames']['stats']}")
+        SchedClient(sock, retries=0).ping(timeout=2.0)   # daemon lives
+        return {"admitted": admitted, "capped": capped}
+
     try:
         _daemon_scenario(results, "garbage-frame", garbage_frame)
         _daemon_scenario(results, "truncated-frame", truncated_frame)
@@ -537,6 +567,7 @@ def run_daemon_scenarios(results):
         _daemon_scenario(results, "slow-loris", slow_loris)
         _daemon_scenario(results, "stale-version-peer", version_skew)
         _daemon_scenario(results, "overload-shed", overload)
+        _daemon_scenario(results, "push-storm", push_storm)
     finally:
         try:
             SchedClient(sock, retries=0).shutdown(timeout=2.0)

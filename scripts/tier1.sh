@@ -51,6 +51,12 @@
 #                  errors, and shared keys must still coalesce to one
 #                  computation through the authenticated path; writes
 #                  benchmarks/BENCH_loadgen_tcp.json
+#   * serve      — serving-engine bench (benchmarks/bench_serve.py):
+#                  continuous batching (chunked prefill interleaved with
+#                  decode, paged KV, Pallas kernels) vs the alternating
+#                  jnp loop on the granite smoke config; greedy tokens
+#                  must be bit-identical and tokens/sec >= 1.3x; writes
+#                  benchmarks/BENCH_serve.json
 #   * bench_compare — regression gate: fresh BENCH_*.json from this run
 #                  vs benchmarks/baselines/ with per-metric tolerances
 #                  (scripts/bench_compare.py); only host-portable ratio
@@ -73,7 +79,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 ALL_GATES=(tests coverage golden sched_bench polybench pallas chaos schedd
-           loadgen loadgen_tcp bench_compare)
+           loadgen loadgen_tcp serve bench_compare)
 if [ "$#" -gt 0 ]; then
   GATES=("$@")
   for g in "${GATES[@]}"; do
@@ -475,6 +481,49 @@ then
 else
   record loadgen_tcp 0 "$(cat .tier1_loadgen_tcp_detail.json 2>/dev/null || echo '{}')"
   rm -f .tier1_loadgen_tcp_detail.json
+  exit 1
+fi
+fi
+
+if want serve; then
+echo "== serve bench (continuous batching vs alternating loop, 600s budget) =="
+T0=$SECONDS
+if ! JAX_PLATFORMS=cpu timeout 600 python -m benchmarks.bench_serve; then
+  echo "SERVE BENCH FAILED or exceeded 600s budget" >&2
+  record serve 0 "{\"seconds\": $((SECONDS - T0))}"
+  exit 1
+fi
+if python - <<'PY'
+import json, pathlib, sys
+d = json.loads(pathlib.Path("benchmarks/BENCH_serve.json").read_text())
+speedup = d["speedup_tokens_per_s"]
+ident = d["tokens_identical"]
+detail = {"speedup_tokens_per_s": speedup,
+          "tokens_identical": ident,
+          "overlap_ratio": d["overlap_ratio"],
+          "p99_over_p50_inter_token": d["p99_over_p50_inter_token"],
+          "paged_memory_ratio": d["paged_memory_ratio"],
+          "tokens_per_s_continuous": d["continuous"]["tokens_per_s"],
+          "tokens_per_s_baseline": d["baseline"]["tokens_per_s"]}
+pathlib.Path(".tier1_serve_detail.json").write_text(json.dumps(detail))
+bad = []
+if ident != 1:
+    bad.append("continuous-engine greedy tokens differ from the "
+               "alternating baseline (want bit-identical)")
+if speedup is None or speedup < 1.3:
+    bad.append(f"continuous-batching speedup {speedup}x < 1.3x floor")
+if bad:
+    sys.exit("; ".join(bad))
+print(f"serve OK: {speedup}x tokens/sec over the alternating loop "
+      f"(floor 1.3x), bit-identical greedy tokens, overlap ratio "
+      f"{d['overlap_ratio']}")
+PY
+then
+  record serve 1 "$(cat .tier1_serve_detail.json)"
+  rm -f .tier1_serve_detail.json
+else
+  record serve 0 "$(cat .tier1_serve_detail.json 2>/dev/null || echo '{}')"
+  rm -f .tier1_serve_detail.json
   exit 1
 fi
 fi

@@ -199,13 +199,57 @@ def _remote_plan(kind: str, *args, **kwargs) -> Optional[KernelPlan]:
     return plan if isinstance(plan, KernelPlan) else None
 
 
-def _plan_memo(maxsize: int):
+#: default in-process memo capacity per planner.  Ragged serving shapes
+#: produce one (seq_q, seq_k, head_dim) triple per distinct chunk×page
+#: geometry, so attention needs far more than the historical 8 entries
+#: (which thrashed: every continuous-batching tick re-planned).
+#: Override per planner with ``POLYTOPS_PLAN_MEMO_<NAME>`` or globally
+#: with ``POLYTOPS_PLAN_MEMO``.
+PLAN_MEMO_DEFAULTS: Dict[str, int] = {
+    "matmul": 64, "attention": 64, "mamba_scan": 16, "scan_gate": 16,
+}
+
+#: per-planner :class:`~repro.core.schedcache.CacheStats` — hits/misses/
+#: evicted of the in-process plan memos, inspectable via
+#: :func:`plan_memo_stats` (serve/bench surface them next to the
+#: schedule-cache stats).
+_PLAN_MEMO_STATS: Dict[str, "object"] = {}
+
+
+def plan_memo_size(name: str) -> int:
+    """Resolved memo capacity for planner ``name`` (env-overridable)."""
+    import os
+    raw = (os.environ.get(f"POLYTOPS_PLAN_MEMO_{name.upper()}")
+           or os.environ.get("POLYTOPS_PLAN_MEMO"))
+    if raw:
+        try:
+            return max(1, int(raw))
+        except ValueError:
+            pass
+    return PLAN_MEMO_DEFAULTS.get(name, 16)
+
+
+def plan_memo_stats() -> Dict[str, Dict[str, object]]:
+    """``{planner: CacheStats.as_dict()}`` for every registered memo."""
+    return {name: st.as_dict() for name, st in _PLAN_MEMO_STATS.items()}
+
+
+def _plan_memo(name: str):
     """Like ``functools.lru_cache`` but degraded plans are returned
     without being pinned: a plan lowered from a fault- or deadline-
     degraded schedule must not be served for the rest of the process —
     the next call re-plans and caches the clean result once the
     transient clears (the in-memory twin of schedcache's rule that
-    degraded schedules are never published)."""
+    degraded schedules are never published).
+
+    Capacity is resolved per call via :func:`plan_memo_size`, so a
+    serving process can widen a thrashing memo with one env var; every
+    hit/miss/eviction is counted in the planner's
+    :class:`~repro.core.schedcache.CacheStats`."""
+    from .schedcache import CacheStats
+
+    stats = _PLAN_MEMO_STATS.setdefault(name, CacheStats())
+
     def deco(fn):
         memo: Dict[tuple, KernelPlan] = {}
 
@@ -213,20 +257,24 @@ def _plan_memo(maxsize: int):
         def wrapper(*args):
             hit = memo.get(args)
             if hit is not None:
+                stats.hits += 1
                 return hit
+            stats.misses += 1
             plan = fn(*args)
             if not plan.degraded:
-                if len(memo) >= maxsize:     # FIFO, same spirit as lru
+                while len(memo) >= plan_memo_size(name):  # FIFO, as lru
                     memo.pop(next(iter(memo)))
+                    stats.evicted += 1
                 memo[args] = plan
             return plan
 
         wrapper.cache_clear = memo.clear
+        wrapper.stats = stats
         return wrapper
     return deco
 
 
-@_plan_memo(maxsize=64)
+@_plan_memo("matmul")
 def plan_matmul(m: int, n: int, k: int,
                 strategy: str = "tensor") -> KernelPlan:
     """PolyTOPS-planned matmul: tensor-style scheduling yields the
@@ -247,7 +295,7 @@ def plan_matmul(m: int, n: int, k: int,
     return lower_to_kernel_plan(schedule_tree(sched), sched=sched)
 
 
-@_plan_memo(maxsize=8)
+@_plan_memo("attention")
 def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
     """Schedule the S = Q·Kᵀ core (q, k, d loops): contiguity puts d
     innermost (lanes) and yields the q-block × k-block band that the
@@ -271,7 +319,7 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int) -> KernelPlan:
     return replace(plan, tile=tile)
 
 
-@_plan_memo(maxsize=16)
+@_plan_memo("mamba_scan")
 def plan_mamba_scan(seq: int, d_inner: int, state: int) -> KernelPlan:
     """Selective-scan (Mamba-1) recurrence h_t = a_t ⊙ h_{t-1} + b_t with
     y_t = h_t · c_t: the scheduler discovers t sequential-outermost (the
@@ -296,3 +344,58 @@ def plan_mamba_scan(seq: int, d_inner: int, state: int) -> KernelPlan:
     return lower_to_kernel_plan(schedule_tree(sched), stmt_idx=0,
                                 bytes_per_elem=4, n_buffers=2,
                                 fixed_tiles={"n": state}, sched=sched)
+
+
+def _scan_gate_scop(seq: int, d_inner: int, state: int) -> Scop:
+    """Fused Mamba tail: recurrence + C-contraction (3-deep) and the
+    skip+gate epilogue (2-deep) share one t/d nest, so the scheduler
+    sees the fusion and tiles t/d for the combined working set."""
+    s = Scop("scan_gate", params={"T": seq, "D": d_inner, "S": state})
+    with s.loop("t", 0, "T"):
+        with s.loop("d", 0, "D"):
+            with s.loop("n", 0, "S"):
+                s.stmt("H[d,n] = A[t,d,n] * H[d,n] + B[t,d,n]")
+                s.stmt("Y[t,d] = Y[t,d] + H[d,n] * Cs[t,n]")
+            s.stmt("O[t,d] = (Y[t,d] + X[t,d] * Dk[d]) * G[t,d]")
+    return s
+
+
+@_plan_memo("scan_gate")
+def plan_scan_gate(seq: int, d_inner: int, state: int) -> KernelPlan:
+    """Plan the fused scan+skip+gate kernel (``repro.kernels.scan_gate``).
+
+    Unlike the single-schedule planners this one is *autotuned*: the
+    fused SCoP's schedule bases are enumerated and statically ranked by
+    :func:`repro.core.autotune.rank_pallas_plans` (the PolyTOPS
+    reconfigurability story — the cost model picks among legal
+    schedules), and the best lowerable candidate's t/d tiles become the
+    kernel's chunk/d_block.  Falls back to the ladder path on any
+    autotune failure so planning stays total."""
+    remote = _remote_plan("scan_gate", seq, d_inner, state)
+    if remote is not None:
+        return remote
+    scop = _scan_gate_scop(seq, d_inner, state)
+    plan: Optional[KernelPlan] = None
+    try:
+        from .autotune import rank_pallas_plans
+
+        cands = rank_pallas_plans(scop, top_k=4, cache=global_cache())
+        for cand in cands:
+            if cand.plan is not None and "t" in cand.plan.tile \
+                    and "d" in cand.plan.tile:
+                plan = cand.plan
+                break
+    except Exception:
+        plan = None
+    if plan is None:
+        cfg = tensor_style()
+        sched = schedule_with_ladder(scop, cfg, cache=global_cache(),
+                                     with_tree=True)
+        plan = lower_to_kernel_plan(schedule_tree(sched), stmt_idx=0,
+                                    bytes_per_elem=4, n_buffers=2,
+                                    fixed_tiles={"n": state}, sched=sched)
+    # kernel constraint (same as mamba_scan): the (d_block × state)
+    # hidden state is VMEM-resident across chunks — state stays whole.
+    tile = dict(plan.tile)
+    tile["n"] = state
+    return replace(plan, tile=tile)

@@ -155,8 +155,10 @@ class CacheStats:
     entry/byte caps).  ``bytes`` and ``latency_saved_s`` are maintained
     by :class:`FrameCache` only: the bytes currently retained, and the
     cumulative measured compute-seconds that warm hits avoided
-    recomputing.  Indexable like the historical stats dict
-    (``stats["hits"]``) so existing callers keep working.
+    recomputing.  ``push_capped`` counts peer winner pushes refused by
+    the schedd storm cap (rate-bounded admission protecting the frame
+    cache from fleet-wide push bursts).  Indexable like the historical
+    stats dict (``stats["hits"]``) so existing callers keep working.
     """
     hits: int = 0
     misses: int = 0
@@ -165,6 +167,7 @@ class CacheStats:
     evicted: int = 0
     bytes: int = 0
     latency_saved_s: float = 0.0
+    push_capped: int = 0
 
     def __getitem__(self, k: str):
         return getattr(self, k)

@@ -600,7 +600,8 @@ def _local_plan(kind: str, *args, **kwargs):
     from . import akg
 
     planners = {"matmul": akg.plan_matmul, "attention": akg.plan_attention,
-                "mamba_scan": akg.plan_mamba_scan}
+                "mamba_scan": akg.plan_mamba_scan,
+                "scan_gate": akg.plan_scan_gate}
     if kind not in planners:
         raise ValueError(f"unknown plan kind {kind!r}; "
                          f"known: {', '.join(sorted(planners))}")

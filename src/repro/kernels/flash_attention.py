@@ -6,6 +6,12 @@ the QKᵀ core: head_dim → lanes, q/k block band → grid). Grid is
 (max, sum, acc) state lives in VMEM scratch across k blocks. Causality
 is handled by masking within the diagonal block and by pl.when-skipping
 blocks above the diagonal.
+
+``q_offset`` supports chunked prefill: the q rows are a contiguous
+chunk starting at that (traced, scalar) position of the sequence, so
+causality masks against ``q_offset + row`` — one compiled kernel serves
+every chunk position.  The offset rides in SMEM; 0 recovers the plain
+causal kernel bit-for-bit.
 """
 from __future__ import annotations
 
@@ -22,10 +28,11 @@ from ..core.akg import plan_attention
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+def _kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, bq: int, bk: int, k_steps: int, scale: float, causal: bool):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
+    off = off_ref[0]
 
     @pl.when(ki == 0)
     def _init():
@@ -38,7 +45,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         k = k_ref[0].astype(jnp.float32)                  # (bk, d)
         s = q @ k.T                                       # (bq, bk)
         if causal:
-            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            rows = off + qi * bq \
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(rows >= cols, s, NEG_INF)
         m_prev = m_ref[...]
@@ -50,8 +58,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         m_ref[...] = m_new
 
     if causal:
-        # skip blocks entirely above the diagonal
-        pl.when(qi * bq + bq - 1 >= ki * bk)(_block)
+        # skip blocks entirely above the (offset) diagonal
+        pl.when(off + qi * bq + bq - 1 >= ki * bk)(_block)
     else:
         _block()
 
@@ -63,9 +71,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     causal: bool = True, block_q: Optional[int] = None,
                     block_k: Optional[int] = None,
+                    q_offset: Optional[jnp.ndarray] = None,
                     interpret: bool = True) -> jnp.ndarray:
     """q, k, v: (bh, seq, d) — batch×heads flattened. GQA repetition is
-    handled by the ops wrapper."""
+    handled by the ops wrapper.  ``q_offset`` (scalar int32, traced)
+    places the q rows at that sequence position for causal masking —
+    the chunked-prefill case where k holds ``q_offset + sq`` (or more,
+    trailing rows masked out by causality) valid entries."""
     bh, sq, d = q.shape
     _, sk, _ = k.shape
     plan = plan_attention(sq, sk, d)
@@ -78,11 +90,15 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     k_steps = sk // bk
     grid = (bh, sq // bq, k_steps)
     scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = jnp.zeros((), jnp.int32)
+    off = jnp.asarray(q_offset, jnp.int32).reshape((1,))
     return pl.pallas_call(
         functools.partial(_kernel, bq=bq, bk=bk, k_steps=k_steps,
                           scale=scale, causal=causal),
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
@@ -95,4 +111,4 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(off, q, k, v)

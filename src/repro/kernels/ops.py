@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import flash_attention as _fa
 from . import mamba_scan as _ms
 from . import matmul_polytops as _mm
+from . import scan_gate as _sg
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
@@ -25,8 +26,11 @@ def matmul(a, b, interpret: bool = INTERPRET):
 
 
 @partial(jax.jit, static_argnames=("causal", "interpret"))
-def flash_attention(q, k, v, causal: bool = True, interpret: bool = INTERPRET):
-    """q: (b, s, h, d); k/v: (b, s, hkv, d) — GQA repeats kv heads."""
+def flash_attention(q, k, v, causal: bool = True, q_offset=None,
+                    interpret: bool = INTERPRET):
+    """q: (b, s, h, d); k/v: (b, s, hkv, d) — GQA repeats kv heads.
+    ``q_offset`` (scalar int32) positions the q chunk for causal
+    masking against a longer kv prefix (chunked prefill)."""
     b, sq, h, d = q.shape
     hkv = k.shape[2]
     rep = h // hkv
@@ -36,10 +40,20 @@ def flash_attention(q, k, v, causal: bool = True, interpret: bool = INTERPRET):
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
-    out = _fa.flash_attention(qf, kf, vf, causal=causal, interpret=interpret)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, q_offset=q_offset,
+                              interpret=interpret)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def selective_scan(a_bar, b_bar, c, interpret: bool = INTERPRET):
     return _ms.selective_scan(a_bar, b_bar, c, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def scan_gate(a_bar, b_bar, c, x_skip, d_skip, z, h0=None,
+              interpret: bool = INTERPRET):
+    """Fused selective-scan + skip + SiLU gate with state carry.
+    Returns (o (b, s, di), h_last (b, di, st))."""
+    return _sg.scan_gate(a_bar, b_bar, c, x_skip, d_skip, z, h0=h0,
+                         interpret=interpret)

@@ -36,3 +36,25 @@ def selective_scan_ref(a_bar: jnp.ndarray, b_bar: jnp.ndarray,
     _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
     y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
     return y.astype(a_bar.dtype)
+
+
+def scan_gate_ref(a_bar: jnp.ndarray, b_bar: jnp.ndarray, c: jnp.ndarray,
+                  x_skip: jnp.ndarray, d_skip: jnp.ndarray, z: jnp.ndarray,
+                  h0: jnp.ndarray = None):
+    """Fused scan+skip+gate reference: h_t = a⊙h+b from h0, then
+    o_t = (h_t·c_t + x_t⊙d_skip) ⊙ silu(z_t).  Returns (o, h_last)."""
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    a32 = a_bar.astype(jnp.float32)
+    b32 = b_bar.astype(jnp.float32)
+    cum_a, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    if h0 is not None:
+        h = h + cum_a * h0.astype(jnp.float32)[:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
+    y = y + x_skip.astype(jnp.float32) * d_skip.astype(jnp.float32)
+    z32 = z.astype(jnp.float32)
+    o = y * (z32 * jax.nn.sigmoid(z32))
+    return o.astype(x_skip.dtype), h[:, -1]

@@ -1,0 +1,108 @@
+"""Fused selective-scan + skip + SiLU-gate Pallas kernel (Mamba block tail).
+
+One kernel computes what the jnp path spreads over four ops:
+
+    h_t = a_t ⊙ h_{t-1} + b_t                      (recurrence)
+    y_t = h_t · c_t + x_t ⊙ d_skip                 (contraction + skip)
+    o_t = y_t ⊙ silu(z_t)                          (gate)
+
+with the hidden state (d_block × state) VMEM-resident across sequence
+chunks and an explicit initial state ``h0`` — the carry that lets a
+serving engine process a prompt in chunks (continuous batching) without
+ever materializing the (b, s, d, n) hidden-state tensor in HBM between
+ops.  The final state is returned for the next chunk.
+
+Block geometry comes from the scheduler: ``repro.core.akg.plan_scan_gate``
+builds the fused SCoP (recurrence + gate statement in one t/d nest),
+ranks the enumerated schedule bases with
+:func:`repro.core.autotune.rank_pallas_plans`, and lowers the winner
+through the same ``lower_to_kernel_plan`` bridge as every other kernel —
+chunk = the t tile, d_block = the d tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, c_ref, x_ref, dk_ref, z_ref, h0_ref,
+            o_ref, hout_ref, h_ref, *, chunk: int, n_chunks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    dk = dk_ref[0].astype(jnp.float32)               # (bd,)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)        # (bd, st)
+        b_t = b_ref[0, t].astype(jnp.float32)        # (bd, st)
+        c_t = c_ref[0, t].astype(jnp.float32)        # (st,)
+        x_t = x_ref[0, t].astype(jnp.float32)        # (bd,)
+        z_t = z_ref[0, t].astype(jnp.float32)        # (bd,)
+        h = a_t * h + b_t
+        y = h @ c_t + x_t * dk
+        o_ref[0, t] = (y * (z_t * jax.nn.sigmoid(z_t))).astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(pl.program_id(2) == n_chunks - 1)
+    def _store_state():
+        hout_ref[0] = h_ref[...]
+
+
+def scan_gate(a_bar: jnp.ndarray, b_bar: jnp.ndarray, c: jnp.ndarray,
+              x_skip: jnp.ndarray, d_skip: jnp.ndarray, z: jnp.ndarray,
+              h0: Optional[jnp.ndarray] = None,
+              d_block: Optional[int] = None, chunk: Optional[int] = None,
+              interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a_bar, b_bar: (b, s, di, st); c: (b, s, st); x_skip, z: (b, s, di);
+    d_skip: (di,); h0: (b, di, st) f32 or None (zeros).
+    Returns (o (b, s, di), h_last (b, di, st) f32)."""
+    bsz, seq, di, st = a_bar.shape
+    if d_block is None or chunk is None:
+        from ..core.akg import plan_scan_gate
+        plan = plan_scan_gate(seq, di, st)
+        d_block = d_block if d_block is not None else plan.tile["d"]
+        chunk = chunk if chunk is not None else plan.tile["t"]
+    d_block = min(d_block, di)
+    while di % d_block:
+        d_block //= 2
+    chunk = min(chunk, seq)
+    while seq % chunk:
+        chunk //= 2
+    n_chunks = seq // chunk
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, st), jnp.float32)
+    dk2 = d_skip.reshape(1, di)
+    grid = (bsz, di // d_block, n_chunks)
+    out, h_last = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block, st), lambda b, dblk, t: (b, t, dblk, 0)),
+            pl.BlockSpec((1, chunk, d_block, st), lambda b, dblk, t: (b, t, dblk, 0)),
+            pl.BlockSpec((1, chunk, st), lambda b, dblk, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, d_block), lambda b, dblk, t: (b, t, dblk)),
+            pl.BlockSpec((1, d_block), lambda b, dblk, t: (0, dblk)),
+            pl.BlockSpec((1, chunk, d_block), lambda b, dblk, t: (b, t, dblk)),
+            pl.BlockSpec((1, d_block, st), lambda b, dblk, t: (b, dblk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b, dblk, t: (b, t, dblk)),
+            pl.BlockSpec((1, d_block, st), lambda b, dblk, t: (b, dblk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, seq, di), x_skip.dtype),
+            jax.ShapeDtypeStruct((bsz, di, st), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, st), jnp.float32)],
+        interpret=interpret,
+    )(a_bar, b_bar, c, x_skip, dk2, z, h0.astype(jnp.float32))
+    return out, h_last

@@ -122,7 +122,8 @@ import socket
 import sys
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from ..core import schedclient, wire
 from ..core.resilience import Deadline, fault_point, provenance, \
@@ -142,6 +143,17 @@ JOURNAL_FILE = "schedd_journal.jsonl"
 #: schedule computation, not the whole search — but the push should
 #: still outrank millisecond plan frames under eviction pressure
 PUSH_COST_FRACTION = 0.1
+
+#: peer winner-push storm cap: at most MAX pushes *admitted* per sliding
+#: WINDOW seconds.  A large fleet autotuning in lock-step pushes its
+#: winners everywhere at once; unbounded admission would churn a
+#: daemon's own hot frames through the latency-saved eviction fight.
+#: Excess pushes are refused (not errors — the sender treats pushes as
+#: best-effort) and tallied as ``push_capped`` on the frame cache's
+#: CacheStats.  Overridable per daemon via --push-storm-max/-window or
+#: $POLYTOPS_PUSH_STORM_MAX / $POLYTOPS_PUSH_STORM_WINDOW.
+PUSH_STORM_MAX = 32
+PUSH_STORM_WINDOW_S = 10.0
 
 #: set in pool workers only — guards the chaos-only self-kill field so
 #: an inline daemon can never SIGKILL itself
@@ -334,7 +346,8 @@ def _compute_plan(req, cache, deadline):
     kind = req.get("kind")
     planners = {"matmul": akg.plan_matmul,
                 "attention": akg.plan_attention,
-                "mamba_scan": akg.plan_mamba_scan}
+                "mamba_scan": akg.plan_mamba_scan,
+                "scan_gate": akg.plan_scan_gate}
     if kind not in planners:
         return ({"ok": False, "error": "bad_request",
                  "detail": f"unknown plan kind {kind!r}"}, False, [])
@@ -645,7 +658,9 @@ class SchedDaemon:
                  job_timeout: float = 600.0, chaos: bool = False,
                  listen: Optional[str] = None,
                  auth_key: Optional[bytes] = None,
-                 peers: Tuple[str, ...] = ()):
+                 peers: Tuple[str, ...] = (),
+                 push_storm_max: Optional[int] = None,
+                 push_storm_window: Optional[float] = None):
         self.sock_path = sock_path
         self.listen = listen
         self.auth_key = auth_key
@@ -680,12 +695,22 @@ class SchedDaemon:
         self._accept_threads: List[threading.Thread] = []
         self._stop = threading.Event()
         self._peer_clients: Dict[str, Any] = {}
+        if push_storm_max is None:
+            push_storm_max = int(os.environ.get(
+                "POLYTOPS_PUSH_STORM_MAX", PUSH_STORM_MAX))
+        if push_storm_window is None:
+            push_storm_window = float(os.environ.get(
+                "POLYTOPS_PUSH_STORM_WINDOW", PUSH_STORM_WINDOW_S))
+        self.push_storm_max = max(push_storm_max, 0)
+        self.push_storm_window = max(push_storm_window, 0.0)
+        self._push_admits: Deque[float] = deque()
         self.counters: Dict[str, int] = {
             "requests": 0, "computed": 0, "coalesced": 0, "frame_hits": 0,
             "shed": 0, "bad_frames": 0, "version_skew": 0, "slow_loris": 0,
             "degraded": 0, "errors": 0, "pool_jobs": 0, "worker_crashes": 0,
             "winner_pushes": 0, "auth_failed": 0, "idle_closed": 0,
             "peer_pushes_sent": 0, "peer_pushes_recv": 0,
+            "peer_pushes_capped": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -1131,7 +1156,7 @@ class SchedDaemon:
 
     def _handle_plan(self, req: Dict[str, Any]) -> bytes:
         kind = req.get("kind")
-        if kind not in ("matmul", "attention", "mamba_scan"):
+        if kind not in ("matmul", "attention", "mamba_scan", "scan_gate"):
             # reject before burning a flight slot or a pool worker
             return wire.encode_frame({
                 "ok": False, "error": "bad_request",
@@ -1169,11 +1194,27 @@ class SchedDaemon:
                 "ok": False, "error": "bad_request",
                 "detail": f"unencodable push: {type(e).__name__}: {e}"})
         with self._lock:
+            if not self._push_storm_ok_locked():
+                self.counters["peer_pushes_capped"] += 1
+                self._frames.stats["push_capped"] += 1
+                return wire.encode_frame({"ok": True, "admitted": False,
+                                          "capped": True})
             admitted = self._admit_push_locked(
                 pkey, pframe, cost_s * PUSH_COST_FRACTION)
             if admitted:
                 self.counters["peer_pushes_recv"] += 1
+                self._push_admits.append(time.monotonic())
         return wire.encode_frame({"ok": True, "admitted": admitted})
+
+    def _push_storm_ok_locked(self) -> bool:
+        """Sliding-window admission bound on peer pushes (held ``_lock``
+        required): True while fewer than ``push_storm_max`` pushes were
+        admitted in the trailing ``push_storm_window`` seconds."""
+        now = time.monotonic()
+        horizon = now - self.push_storm_window
+        while self._push_admits and self._push_admits[0] < horizon:
+            self._push_admits.popleft()
+        return len(self._push_admits) < self.push_storm_max
 
     # -- introspection -----------------------------------------------------
 
@@ -1240,6 +1281,14 @@ def main(argv=None) -> int:
     ap.add_argument("--port-file", default=None,
                     help="write the bound TCP port here once listening "
                          "(ephemeral-port discovery)")
+    ap.add_argument("--push-storm-max", type=int, default=None,
+                    help="peer winner pushes admitted per storm window "
+                         f"(default $POLYTOPS_PUSH_STORM_MAX or "
+                         f"{PUSH_STORM_MAX})")
+    ap.add_argument("--push-storm-window", type=float, default=None,
+                    help="sliding window seconds for --push-storm-max "
+                         f"(default $POLYTOPS_PUSH_STORM_WINDOW or "
+                         f"{PUSH_STORM_WINDOW_S})")
     ap.add_argument("--chaos", action="store_true",
                     help="enable the test-only test_delay_s / "
                          "test_kill_worker request fields")
@@ -1258,7 +1307,9 @@ def main(argv=None) -> int:
                          frame_cache_cap=args.frame_cache_cap,
                          job_timeout=args.job_timeout, chaos=args.chaos,
                          listen=args.listen, auth_key=auth_key,
-                         peers=peers)
+                         peers=peers,
+                         push_storm_max=args.push_storm_max,
+                         push_storm_window=args.push_storm_window)
     daemon.start()
     if args.port_file and daemon.tcp_port is not None:
         tmp = args.port_file + ".tmp"

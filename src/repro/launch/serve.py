@@ -1,25 +1,39 @@
-"""Batched serving launcher: continuous-batching-style loop.
+"""Batched serving launcher: continuous batching over PolyTOPS-planned
+kernels.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b \
-        --batch 4 --prompt-len 32 --gen 16 [--smoke]
+        --batch 4 --prompt-len 32 --gen 16 [--engine continuous] \
+        [--pallas] [--smoke]
 
-Maintains a request queue; each engine iteration either prefills a
-waiting batch slot or decodes one token for all active slots (the
-simple alternating policy — a production engine would interleave at
-finer granularity; the step functions are the same ones the dry-run
-lowers at scale).
+Two engines share the model's step functions:
+
+* :class:`ServeEngine` — the legacy alternating loop: whole-prompt
+  prefill into a slot, then lock-step decode of every active slot with a
+  shared ``max(lengths)`` cache length.  Kept as the baseline the bench
+  compares against (and because the dry-run lowers its step functions).
+* :class:`ContinuousEngine` — finer-grained continuous batching:
+  per-request admission into free slots, prompt prefill in fixed-size
+  chunks interleaved with decode ticks (a long prompt never stalls
+  in-flight decodes), ragged per-slot cache lengths, and paged KV — the
+  decode tick reads only the page-aligned used prefix of the cache, page
+  size from ``plan_attention``'s k tile.  One host sync per tick.  With
+  ``use_pallas=True`` the model layers route through the Pallas kernels
+  (flash attention with the SMEM q-offset for prefill chunks, the fused
+  scan+gate kernel for Mamba archs) — see :mod:`repro.model.pallas_mode`.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.registry import get_arch
+from ..model import pallas_mode
 from ..model import transformer as T
 
 
@@ -29,10 +43,33 @@ class Request:
     prompt: jnp.ndarray            # (1, plen)
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    max_new: int = 0               # 0 = engine default
+    t_submit: float = 0.0
+    t_first: float = 0.0           # first generated token (prefill done)
+    token_times: List[float] = field(default_factory=list)
+
+
+def _merge_slot(cache: Dict, pre: Dict, slot) -> Dict:
+    """Write a b=1 prefill cache into batch slot ``slot`` structurally:
+    "slots" entries carry batch on axis 1, "tail" entries on axis 0 (a
+    fact of init_cache's layout — not a shape heuristic; matching on
+    sizes silently skipped mismatched leaves and left stale rows)."""
+    def wr(axis):
+        def go(dst, src):
+            starts = [0] * dst.ndim
+            starts[axis] = slot
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                                starts)
+        return go
+    return {"slots": [jax.tree.map(wr(1), c, sc)
+                      for c, sc in zip(cache["slots"], pre["slots"])],
+            "tail": [jax.tree.map(wr(0), c, sc)
+                     for c, sc in zip(cache["tail"], pre["tail"])]}
 
 
 class ServeEngine:
-    """Fixed-batch decode engine with greedy sampling."""
+    """Fixed-batch decode engine with greedy sampling (alternating
+    prefill/decode baseline)."""
 
     def __init__(self, cfg, params, batch: int, max_len: int):
         self.cfg, self.params = cfg, params
@@ -44,33 +81,27 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, c, n: T.decode_step(p, cfg, t, c, n))
         self._prefill = jax.jit(lambda p, t: T.prefill(p, cfg, t))
+        self._merge = jax.jit(
+            lambda c, pre, s: _merge_slot(T.zero_cache_slot(c, s), pre, s))
 
     def admit(self, req: Request, slot: int):
         logits, pre = self._prefill(self.params, req.prompt)
-        # copy the prefilled cache rows into the batch cache at `slot`
-        plen = req.prompt.shape[1]
-
-        def merge(dst, src):
-            if dst.ndim != src.ndim:
-                return dst
-            # dst: (..., batch, S, ...); src: (..., 1, plen, ...)
-            bdim = next((i for i in range(dst.ndim)
-                         if dst.shape[i] == self.batch
-                         and src.shape[i] == 1), None)
-            if bdim is None:
-                return dst
-            idx = [slice(None)] * dst.ndim
-            idx[bdim] = slice(slot, slot + 1)
-            sdim = bdim + 1
-            idx[sdim] = slice(0, src.shape[sdim])
-            return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-
-        self.cache = jax.tree.map(merge, self.cache, pre)
+        # zero the slot's rows first (reused-slot hygiene: a shorter new
+        # prompt must not expose the previous occupant's KV rows through
+        # the shared max(lengths) decode mask), then merge structurally.
+        self.cache = self._merge(self.cache, pre, jnp.int32(slot))
         self.slots[slot] = req
-        self.lengths[slot] = plen
+        self.lengths[slot] = req.prompt.shape[1]
         nxt = int(jnp.argmax(logits[0]))
         req.generated.append(nxt)
         self.tokens = self.tokens.at[slot, 0].set(nxt)
+
+    def reset(self):
+        """Back to the post-init state, keeping compiled step functions."""
+        self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+        self.tokens = jnp.zeros((self.batch, 1), jnp.int32)
+        self.lengths = [0] * self.batch
+        self.slots = [None] * self.batch
 
     def step(self):
         n = max(self.lengths)
@@ -84,7 +115,308 @@ class ServeEngine:
                 self.lengths[i] += 1
 
 
-def warm_kernel_plans(cfg, max_len: int) -> None:
+FREE, PREFILL, DECODE = 0, 1, 2
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: per-request admission, chunked
+    prefill interleaved with decode ticks, ragged paged KV.
+
+    All decode-loop state (last token, per-slot lengths, generated-token
+    buffer) lives on device and is updated functionally inside the jit'd
+    ticks, so the steady-state loop dispatches work without a single
+    host sync — tokens are fetched in one blocking read per *request*
+    (at retirement), not per token.  The host keeps an exact mirror of
+    lengths/counters (greedy decoding with a token budget is
+    deterministic bookkeeping), so admission and retirement decisions
+    never have to read the device.  ``eos``-triggered stopping and
+    ``sync=True`` (per-token latency measurement) opt back into one
+    fetch per tick."""
+
+    def __init__(self, cfg, params, batch: int, max_len: int, *,
+                 chunk: int = 16, page: Optional[int] = None,
+                 use_pallas: bool = False, max_new: int = 16,
+                 eos: Optional[int] = None, sync: bool = False,
+                 pallas_opts: Optional[Dict] = None):
+        from ..core import akg
+
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch, max_len
+        self.chunk, self.max_new, self.eos = chunk, max_new, eos
+        self.sync = sync or eos is not None
+        # pallas_opts: extra PallasMode fields (threshold overrides for
+        # small-shape parity tests; see model/pallas_mode.py)
+        self._mode_kw = dict(enabled=use_pallas, **(pallas_opts or {}))
+        # paged-KV geometry from the scheduler: the attention plan's k
+        # tile is the unit the flash kernel streams, so pages align with
+        # kernel blocks and the page bound costs no masking slop
+        plan = akg.plan_attention(max(chunk, 8), max_len, cfg.hd)
+        self.page = page or max(min(plan.tile.get("kk", 128), max_len), 8)
+
+        self.cache = T.init_cache(cfg, batch, max_len)
+        # device-resident decode state: (tokens (b,1), lengths (b,),
+        # out_buf (b, max_new), out_pos (b,))
+        self.dev = (jnp.zeros((batch, 1), jnp.int32),
+                    jnp.zeros((batch,), jnp.int32),
+                    jnp.zeros((batch, max_new), jnp.int32),
+                    jnp.zeros((batch,), jnp.int32))
+        self.lengths = [0] * batch          # host mirror of dev[1]
+        self.gen_count = [0] * batch        # host mirror of dev[3]
+        self.state = [FREE] * batch
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.prefill_pos = [0] * batch
+        self.queue: Deque[Request] = deque()
+        self._active = jnp.zeros((batch,), bool)
+        # tick accounting for the prefill/decode overlap ratio
+        self.ticks = self.ticks_decode = self.ticks_prefill = 0
+        self.ticks_overlap = 0
+
+        def _decode_tick(p, c, dev, act, kv):
+            toks, lens, buf, pos = dev
+            logits, c = T.serve_decode_step(p, cfg, toks, c, lens, act, kv)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)        # (b,)
+            toks = jnp.where(act[:, None], nxt[:, None], toks)
+            lens = lens + act
+            upd = jax.vmap(lambda b, t, i:
+                           jax.lax.dynamic_update_slice(b, t[None], (i,)))
+            buf = jnp.where(act[:, None], upd(buf, nxt, pos), buf)
+            pos = pos + act
+            return c, (toks, lens, buf, pos), nxt
+
+        def _chunk_tick(p, toks, c, dev, off, slot, last, kv):
+            sub = T.cache_slot_view(c, slot)
+            logits, sub = T.chunk_step(p, cfg, toks, sub, off, kv)
+            c = T.cache_slot_write(c, sub, slot)
+            t, lens, buf, pos = dev
+            sl = jnp.arange(t.shape[0]) == slot
+            end = off + toks.shape[1]
+            lens = jnp.where(sl, end, lens)
+            # final chunk: its last-position logits seed decoding
+            ctok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            fin = sl & last
+            t = jnp.where(fin[:, None], ctok, t)
+            buf = jnp.where(fin[:, None]
+                            & (jnp.arange(buf.shape[1]) == 0)[None, :],
+                            ctok, buf)
+            pos = jnp.where(fin, 1, pos)
+            return c, (t, lens, buf, pos)
+
+        def _mixed_tick(p, toks, c, dev, act, off, slot, last, kv_d, kv_p):
+            # overlap tick: decode every active slot AND land one prefill
+            # chunk in a single dispatch.  Decode runs first: its garbage
+            # write into the prefilling slot (row = that slot's current
+            # length) is overwritten by the chunk that follows.
+            c, dev, nxt = _decode_tick(p, c, dev, act, kv_d)
+            c, dev = _chunk_tick(p, toks, c, dev, off, slot, last, kv_p)
+            return c, dev, nxt
+
+        def _decode_k(p, c, dev, act, kv, k):
+            # k decode steps fused into one dispatch (steady state: no
+            # prefill pending, so nothing competes for the tick)
+            def body(carry, _):
+                c, dev = carry
+                c, dev, _ = _decode_tick(p, c, dev, act, kv)
+                return (c, dev), None
+            (c, dev), _ = jax.lax.scan(body, (c, dev), None, length=k)
+            return c, dev
+
+        self._decode = jax.jit(_decode_tick, static_argnames=("kv",),
+                               donate_argnums=(1, 2))
+        self._decode_k = jax.jit(_decode_k, static_argnames=("kv", "k"),
+                                 donate_argnums=(1, 2))
+        self._chunk = jax.jit(_chunk_tick, static_argnames=("kv",),
+                              donate_argnums=(2, 3))
+        self._mixed = jax.jit(_mixed_tick,
+                              static_argnames=("kv_d", "kv_p"),
+                              donate_argnums=(2, 3))
+
+        def _admit(c, dev, s):
+            t, lens, buf, pos = dev
+            sl = jnp.arange(t.shape[0]) == s
+            return (T.zero_cache_slot(c, s),
+                    (t, jnp.where(sl, 0, lens), buf, jnp.where(sl, 0, pos)))
+
+        self._admit = jax.jit(_admit, donate_argnums=(0, 1))
+
+    # -- admission -------------------------------------------------------
+    def submit(self, req: Request):
+        plen = req.prompt.shape[1]
+        if plen + (req.max_new or self.max_new) > self.max_len:
+            raise ValueError(f"request {req.rid} exceeds max_len")
+        if (req.max_new or self.max_new) > self.dev[2].shape[1]:
+            raise ValueError(f"request {req.rid} exceeds token buffer")
+        req.t_submit = req.t_submit or time.time()
+        self.queue.append(req)
+
+    def _set_state(self, i: int, st: int):
+        self.state[i] = st
+        self._active = jnp.asarray([s == DECODE for s in self.state])
+
+    def _admit_free_slots(self):
+        for i in range(self.batch):
+            if not self.queue:
+                return
+            if self.state[i] == FREE:
+                req = self.queue.popleft()
+                # reused-slot hygiene: drop every cache row the previous
+                # occupant wrote before the new request's chunks land
+                self.cache, self.dev = self._admit(self.cache, self.dev,
+                                                   jnp.int32(i))
+                self.slots[i] = req
+                self._set_state(i, PREFILL)
+                self.prefill_pos[i] = 0
+                self.lengths[i] = 0
+                self.gen_count[i] = 0
+
+    def _bucket(self, need: int) -> int:
+        return min(-(-need // self.page) * self.page, self.max_len)
+
+    # -- one engine tick -------------------------------------------------
+    def tick(self) -> bool:
+        """Run one engine iteration; returns True if any work was done."""
+        pallas_mode.configure(**self._mode_kw)
+        self._admit_free_slots()
+        decoding = [i for i in range(self.batch) if self.state[i] == DECODE]
+        prefilling = [i for i in range(self.batch)
+                      if self.state[i] == PREFILL]
+        if not decoding and not prefilling:
+            return False
+        self.ticks += 1
+        nxt_dev = None
+
+        if decoding and not prefilling and not self.queue and not self.sync:
+            # steady state: every slot is decoding and nothing is waiting,
+            # so fuse up to 16 greedy steps into one dispatch.  Safe
+            # because retirement is count-based host bookkeeping: the
+            # earliest any slot can retire is min remaining-budget steps
+            # away, and a roomier kv bucket only adds exact-zero masked
+            # rows (bit-identical logits).
+            rem = min((self.slots[i].max_new or self.max_new)
+                      - self.gen_count[i] for i in decoding)
+            k = min(rem, 16)
+            k = 1 << (k.bit_length() - 1)           # quantize: few traces
+            if k > 1:
+                kv = self._bucket(max(self.lengths[i]
+                                      for i in decoding) + k)
+                self.cache, self.dev = self._decode_k(
+                    self.params, self.cache, self.dev, self._active, kv, k)
+                self.ticks += k - 1
+                self.ticks_decode += k
+                for i in decoding:
+                    self.lengths[i] += k
+                    self.gen_count[i] += k
+                    self._maybe_retire(i)
+                return True
+
+        kv_d = (self._bucket(max(self.lengths[i] for i in decoding) + 1)
+                if decoding else 0)
+        ci = prefilling[0] if prefilling else None
+        if ci is not None:
+            req = self.slots[ci]
+            off = self.prefill_pos[ci]
+            c = min(self.chunk, req.prompt.shape[1] - off)
+            toks = req.prompt[:, off:off + c]
+            kv_p = self._bucket(off + c)
+            last = off + c == req.prompt.shape[1]
+
+        if decoding and ci is not None:
+            self.cache, self.dev, nxt_dev = self._mixed(
+                self.params, toks, self.cache, self.dev, self._active,
+                jnp.int32(off), jnp.int32(ci), jnp.asarray(last),
+                kv_d, kv_p)
+            self.ticks_decode += 1
+            self.ticks_prefill += 1
+            self.ticks_overlap += 1
+        elif decoding:
+            self.cache, self.dev, nxt_dev = self._decode(
+                self.params, self.cache, self.dev, self._active, kv_d)
+            self.ticks_decode += 1
+        else:
+            self.cache, self.dev = self._chunk(
+                self.params, toks, self.cache, self.dev, jnp.int32(off),
+                jnp.int32(ci), jnp.asarray(last), kv_p)
+            self.ticks_prefill += 1
+
+        if decoding:
+            for i in decoding:
+                self.lengths[i] += 1
+                self.gen_count[i] += 1
+        if ci is not None:
+            self.prefill_pos[ci] = off + c
+            self.lengths[ci] = off + c
+            if last:
+                self._set_state(ci, DECODE)
+                self.gen_count[ci] = 1
+
+        if self.sync:
+            # per-token observation: one fetch per tick (EOS stopping /
+            # latency measurement); otherwise the loop stays async
+            nxt = jax.device_get(nxt_dev) if nxt_dev is not None else None
+            now = time.time()
+            for i in decoding:
+                req = self.slots[i]
+                req.generated.append(int(nxt[i]))
+                req.token_times.append(now)
+            if ci is not None and self.state[ci] == DECODE \
+                    and self.gen_count[ci] == 1:
+                req = self.slots[ci]
+                req.t_first = now
+                tok0 = int(jax.device_get(self.dev[0][ci, 0]))
+                req.generated.append(tok0)
+                req.token_times.append(now)
+
+        for i in range(self.batch):
+            if self.state[i] == DECODE:
+                self._maybe_retire(i)
+        return True
+
+    def _maybe_retire(self, i: int):
+        req = self.slots[i]
+        limit = req.max_new or self.max_new
+        if self.gen_count[i] >= limit or \
+                (self.eos is not None and req.generated
+                 and req.generated[-1] == self.eos):
+            if not self.sync:
+                # one blocking read per request: its finished token row
+                n = self.gen_count[i]
+                req.generated = [int(x) for x in
+                                 jax.device_get(self.dev[2][i, :n])]
+            req.done = True
+            self._set_state(i, FREE)
+            self.lengths[i] = 0
+
+    def run(self) -> int:
+        """Tick until the queue and all slots drain; returns tick count."""
+        n = 0
+        while self.tick():
+            n += 1
+        return n
+
+    def reset(self):
+        """Back to the post-init state, keeping compiled tick functions."""
+        b = self.batch
+        self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+        self.dev = (jnp.zeros((b, 1), jnp.int32),
+                    jnp.zeros((b,), jnp.int32),
+                    jnp.zeros_like(self.dev[2]),
+                    jnp.zeros((b,), jnp.int32))
+        self.lengths = [0] * b
+        self.gen_count = [0] * b
+        self.state = [FREE] * b
+        self.slots = [None] * b
+        self.prefill_pos = [0] * b
+        self.queue.clear()
+        self._active = jnp.zeros((b,), bool)
+        self.ticks = self.ticks_decode = self.ticks_prefill = 0
+        self.ticks_overlap = 0
+
+    def overlap_ratio(self) -> float:
+        busy = max(self.ticks_decode + self.ticks_prefill
+                   - self.ticks_overlap, 1)
+        return self.ticks_overlap / busy
+
+
+def warm_kernel_plans(cfg, max_len: int, chunk: int = 16) -> None:
     """Plan the serving kernels up front, through a schedd daemon when
     ``$POLYTOPS_SCHEDD_SOCK`` names one (so N serving processes
     amortize one scheduler) and in-process otherwise — ``akg``'s remote
@@ -94,7 +426,11 @@ def warm_kernel_plans(cfg, max_len: int) -> None:
 
     client = maybe_client()
     plans = [akg.plan_matmul(cfg.d_model, cfg.d_ff, cfg.d_model),
-             akg.plan_attention(max_len, max_len, cfg.hd)]
+             akg.plan_attention(max_len, max_len, cfg.hd),
+             akg.plan_attention(max(chunk, 8), max_len, cfg.hd)]
+    if cfg.d_inner and cfg.ssm_state:
+        plans.append(akg.plan_scan_gate(max(chunk, 8), cfg.d_inner,
+                                        cfg.ssm_state))
     degraded = sum(1 for p in plans if p.degraded)
     if client is not None:
         st = client.stats.as_dict()
@@ -112,28 +448,46 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--engine", choices=("alternating", "continuous"),
+                    default="continuous")
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    warm_kernel_plans(cfg, args.prompt_len + args.gen + 1)
+    max_len = args.prompt_len + args.gen + 1
+    warm_kernel_plans(cfg, max_len, args.chunk)
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
-    eng = ServeEngine(cfg, params, args.batch,
-                      args.prompt_len + args.gen + 1)
-    for i in range(args.batch):
-        prompt = jax.random.randint(jax.random.fold_in(key, i),
-                                    (1, args.prompt_len), 2, cfg.vocab)
-        eng.admit(Request(i, prompt), slot=i)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (1, args.prompt_len), 2, cfg.vocab)
+               for i in range(args.batch)]
     t0 = time.time()
-    for _ in range(args.gen):
-        eng.step()
+    if args.engine == "alternating":
+        eng = ServeEngine(cfg, params, args.batch, max_len)
+        for i, prompt in enumerate(prompts):
+            eng.admit(Request(i, prompt), slot=i)
+        for _ in range(args.gen - 1):
+            eng.step()
+        reqs = [r for r in eng.slots if r is not None]
+    else:
+        ceng = ContinuousEngine(cfg, params, args.batch, max_len,
+                                chunk=args.chunk, use_pallas=args.pallas,
+                                max_new=args.gen)
+        reqs = [Request(i, p) for i, p in enumerate(prompts)]
+        for r in reqs:
+            ceng.submit(r)
+        ceng.run()
+        print(f"overlap ratio: {ceng.overlap_ratio():.2f}, "
+              f"page={ceng.page}")
     dt = time.time() - t0
-    print(f"{args.batch} seqs × {args.gen} tokens in {dt:.2f}s "
-          f"({args.batch*args.gen/max(dt,1e-9):.1f} tok/s, CPU smoke)")
-    for req in eng.slots:
+    ntok = sum(len(r.generated) for r in reqs)
+    print(f"{len(reqs)} seqs, {ntok} tokens in {dt:.2f}s "
+          f"({ntok/max(dt,1e-9):.1f} tok/s, CPU smoke, {args.engine})")
+    for req in reqs:
         print(f"req{req.rid}: {req.generated[:10]}")
 
 

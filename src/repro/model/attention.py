@@ -27,6 +27,16 @@ NEG_INF = -2.3819763e38
 ATTN_CHUNK = 0
 
 
+def _pallas():
+    from .pallas_mode import mode
+    return mode()
+
+
+def _flash(q, k, v, q_offset=None):
+    from ..kernels import ops
+    return ops.flash_attention(q, k, v, causal=True, q_offset=q_offset)
+
+
 def init_attention(key, cfg: ArchConfig, dtype) -> Dict:
     hd = cfg.hd
     k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -117,7 +127,10 @@ def attention(p, cfg: ArchConfig, x, positions, *, window: int = 0,
     q, k, v = _qkv(p, cfg, x, positions, mrope_positions)
     sq = x.shape[1]
     n_rep = cfg.n_heads // cfg.n_kv_heads
-    if ATTN_CHUNK and sq > ATTN_CHUNK and sq % ATTN_CHUNK == 0:
+    md = _pallas()
+    if md.enabled and window == 0 and sq >= md.min_attn_q:
+        out = _flash(q, k, v)
+    elif ATTN_CHUNK and sq > ATTN_CHUNK and sq % ATTN_CHUNK == 0:
         out = _sdpa_chunked(q, k, v, n_rep, window, ATTN_CHUNK)
     else:
         out = _sdpa(q, k, v, causal_mask(sq, window), n_rep)
@@ -178,3 +191,74 @@ def decode_attention(p, cfg: ArchConfig, x, k_cache, v_cache, cache_len,
                 cfg.n_heads // cfg.n_kv_heads)
     out = out.reshape(b, 1, -1) @ p["wo"]
     return out, k_all, v_all
+
+
+# ---------------------------------------------------------------------------
+# serving fast path: chunked prefill + ragged paged decode
+# ---------------------------------------------------------------------------
+
+def chunk_attention(p, cfg: ArchConfig, x, k_cache, v_cache, offset, kv_len,
+                    *, window: int = 0
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked-prefill self-attention: x (b, c, d) holds rows
+    ``[offset, offset+c)`` of the sequence (``offset`` a traced scalar);
+    the chunk's k/v are written into the cache at ``offset`` and
+    attention runs causally over ``cache[:, :kv_len]`` — ``kv_len`` the
+    static page-aligned prefix covering ``offset + c`` (unwritten rows
+    beyond the diagonal are masked, so the page bound is exact).  The
+    Pallas route uses the flash kernel's SMEM ``q_offset``: one compiled
+    kernel serves every chunk position.  Returns (out, k_cache, v_cache).
+    """
+    b, c, _ = x.shape
+    positions = jnp.broadcast_to(offset + jnp.arange(c)[None, :], (b, c))
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), offset, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), offset, axis=1)
+    kp = k_cache[:, :kv_len]
+    vp = v_cache[:, :kv_len]
+    md = _pallas()
+    if md.enabled and window == 0 and c >= md.min_attn_q:
+        out = _flash(q, kp, vp, q_offset=offset)
+    else:
+        rows = offset + jnp.arange(c)[:, None]
+        cols = jnp.arange(kv_len)[None, :]
+        m = rows >= cols
+        if window:
+            m &= (rows - cols) < window
+        out = _sdpa(q, kp, vp, jnp.broadcast_to(m[None], (b, c, kv_len)),
+                    cfg.n_heads // cfg.n_kv_heads)
+    out = out.reshape(b, c, -1) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def paged_decode_attention(p, cfg: ArchConfig, x, k_cache, v_cache, lengths,
+                           kv_len, *, window: int = 0
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Ragged one-token decode over a page-aligned KV prefix.
+
+    x: (b, 1, d); lengths: (b,) int32 per-slot valid lengths (each
+    slot's token is written at its own ``lengths[i]`` — no shared
+    ``max(lengths)`` that would expose stale rows in shorter slots);
+    ``kv_len``: static, attention reads only ``cache[:, :kv_len]``.
+    Bit-identical to :func:`decode_attention` over the full cache —
+    masked entries contribute exact zeros to the softmax — while moving
+    only the used pages.  Returns (out, k_cache, v_cache)."""
+    b = x.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    upd = jax.vmap(
+        lambda c, n, l: jax.lax.dynamic_update_slice_in_dim(c, n, l, axis=0))
+    k_cache = upd(k_cache, k_new.astype(k_cache.dtype), lengths)
+    v_cache = upd(v_cache, v_new.astype(v_cache.dtype), lengths)
+    kp = k_cache[:, :kv_len]
+    vp = v_cache[:, :kv_len]
+    j = jnp.arange(kv_len)[None, None, :]
+    mask = j <= lengths[:, None, None]
+    if window:
+        mask &= j > (lengths[:, None, None] - window)
+    out = _sdpa(q, kp, vp, jnp.broadcast_to(mask, (b, 1, kv_len)),
+                cfg.n_heads // cfg.n_kv_heads)
+    out = out.reshape(b, 1, -1) @ p["wo"]
+    return out, k_cache, v_cache

@@ -29,6 +29,21 @@ def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict:
 
 
 def mlp(p, x):
+    from .pallas_mode import mode
+    md = mode()
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    if md.enabled and rows >= md.min_matmul_rows:
+        # PolyTOPS-planned matmul kernel: worth it once the token count
+        # amortizes the grid (below the threshold one XLA dot wins)
+        from ..kernels import ops
+        x2 = x.reshape(rows, x.shape[-1])
+        h = jax.nn.silu(ops.matmul(x2, p["w_gate"])) * ops.matmul(x2, p["w_up"])
+        h = h.reshape(x.shape[:-1] + (h.shape[-1],))
+        h = shard_activation(h, ("batch", "seq", "ffn"))
+        return ops.matmul(h.reshape(rows, -1),
+                          p["w_down"]).reshape(x.shape)
     h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
     h = shard_activation(h, ("batch", "seq", "ffn"))
     return h @ p["w_down"]

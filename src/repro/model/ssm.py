@@ -42,8 +42,9 @@ def _ssm_scan(a, b):
     return jax.lax.associative_scan(combine, (a, b), axis=1)
 
 
-def _selective_ssm(p, cfg: ArchConfig, xs, return_last: bool = False):
-    """xs: (b, s, di) post-conv activations; returns ((b, s, di), h_last)."""
+def _ssm_inputs(p, cfg: ArchConfig, xs):
+    """Input-dependent recurrence coefficients from post-conv
+    activations xs (b, s, di): (a_bar, b_bar (b, s, di, st), Cm (b, s, st))."""
     st, dtr = cfg.ssm_state, cfg.dt_rank_
     proj = xs @ p["x_proj"]                                     # (b, s, dtr+2st)
     dt_r, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dtr, dtr + st], axis=-1)
@@ -51,6 +52,19 @@ def _selective_ssm(p, cfg: ArchConfig, xs, return_last: bool = False):
     A = -jnp.exp(p["a_log"])                                    # (di, st)
     a_bar = jnp.exp(dt[..., None] * A)                          # (b, s, di, st)
     b_bar = (dt[..., None] * Bm[..., None, :]) * xs.astype(jnp.float32)[..., None]
+    return a_bar, b_bar, Cm
+
+
+def _fused_scan_gate(cfg: ArchConfig, xs) -> bool:
+    from .pallas_mode import mode
+    md = mode()
+    return (md.enabled and md.fused_scan_gate
+            and xs.shape[1] >= md.min_scan_seq)
+
+
+def _selective_ssm(p, cfg: ArchConfig, xs, return_last: bool = False):
+    """xs: (b, s, di) post-conv activations; returns ((b, s, di), h_last)."""
+    a_bar, b_bar, Cm = _ssm_inputs(p, cfg, xs)
     _, h = _ssm_scan(a_bar, b_bar)                              # (b, s, di, st)
     y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
     y = y + xs.astype(jnp.float32) * p["d_skip"]
@@ -70,8 +84,14 @@ def mamba(p, cfg: ArchConfig, x, return_state: bool = False):
     pad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (cw - 1, 0), (0, 0)))
     conv = sum(pad[:, i:i + xs.shape[1], :] * w[i] for i in range(cw))
     xs = jax.nn.silu(conv + p["conv_b"]).astype(x.dtype)
-    y, h_last = _selective_ssm(p, cfg, xs, return_last=return_state)
-    y = y * jax.nn.silu(z)
+    if _fused_scan_gate(cfg, xs):
+        from ..kernels import ops
+        a_bar, b_bar, Cm = _ssm_inputs(p, cfg, xs)
+        y, h_full = ops.scan_gate(a_bar, b_bar, Cm, xs, p["d_skip"], z)
+        h_last = h_full if return_state else None
+    else:
+        y, h_last = _selective_ssm(p, cfg, xs, return_last=return_state)
+        y = y * jax.nn.silu(z)
     y = shard_activation(y, ("batch", "seq", "ffn"))
     out = y @ p["out_proj"]
     if return_state:
@@ -111,3 +131,39 @@ def mamba_decode(p, cfg: ArchConfig, x, conv_state, ssm_state
     y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
     out = y @ p["out_proj"]
     return out, hist[:, 1:].astype(conv_state.dtype), h
+
+
+def mamba_chunk(p, cfg: ArchConfig, x, conv_state, ssm_state
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked-prefill Mamba with explicit state carry: x (b, c, d) is a
+    contiguous chunk of the sequence; conv_state (b, cw-1, di) and
+    ssm_state (b, di, st) carry the causal conv tail and hidden state
+    from the previous chunk.  The fused Pallas route hands ``ssm_state``
+    to the scan+gate kernel's ``h0``; the jnp route folds it in through
+    the associative scan's cumulative decay.  Returns
+    (out, new_conv_state, h_last)."""
+    di = cfg.d_inner
+    c = x.shape[1]
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, [di], axis=-1)                       # (b, c, di)
+    w = p["conv_w"].astype(jnp.float32)
+    cw = w.shape[0]
+    pre = jnp.concatenate([conv_state, xs], axis=1)            # (b, cw-1+c, di)
+    hist = pre.astype(jnp.float32)
+    conv = sum(hist[:, i:i + c, :] * w[i] for i in range(cw))
+    new_conv = pre[:, -(cw - 1):, :] if cw > 1 else conv_state
+    xs = jax.nn.silu(conv + p["conv_b"]).astype(x.dtype)
+    a_bar, b_bar, Cm = _ssm_inputs(p, cfg, xs)
+    if _fused_scan_gate(cfg, xs):
+        from ..kernels import ops
+        y, h_last = ops.scan_gate(a_bar, b_bar, Cm, xs, p["d_skip"], z,
+                                  h0=ssm_state)
+    else:
+        cum_a, h = _ssm_scan(a_bar, b_bar)
+        h = h + cum_a * ssm_state.astype(jnp.float32)[:, None]
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+        y = (y + xs.astype(jnp.float32) * p["d_skip"]).astype(xs.dtype)
+        y = y * jax.nn.silu(z)
+        h_last = h[:, -1]
+    out = y @ p["out_proj"]
+    return out, new_conv, h_last

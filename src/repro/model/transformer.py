@@ -360,6 +360,51 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
     return {"slots": slots, "tail": tail}
 
 
+# In a cache built by init_cache, "slots" entries are stacked over
+# layer-repeats so batch is axis 1; "tail" entries are per-layer so
+# batch is axis 0.  The helpers below use that structural fact (not a
+# shape heuristic — matching on sizes is exactly the ``bdim is None``
+# bug the serving engine used to have).
+
+def _slot_axis_map(cache, fn_slots, fn_tail):
+    return {"slots": [jax.tree.map(fn_slots, c) for c in cache["slots"]],
+            "tail": [jax.tree.map(fn_tail, c) for c in cache["tail"]]}
+
+
+def cache_slot_view(cache: Dict, i) -> Dict:
+    """Batch-size-1 view of batch slot ``i`` (traced index ok)."""
+    return _slot_axis_map(
+        cache,
+        lambda v: jax.lax.dynamic_slice_in_dim(v, i, 1, axis=1),
+        lambda v: jax.lax.dynamic_slice_in_dim(v, i, 1, axis=0))
+
+
+def cache_slot_write(cache: Dict, sub: Dict, i) -> Dict:
+    """Write a b=1 sub-cache (from :func:`cache_slot_view`) back at slot
+    ``i``; under jit with donated operands this is an in-place row
+    update, not a full-cache copy."""
+    def wr(axis):
+        return lambda v, s: jax.lax.dynamic_update_slice_in_dim(
+            v, s.astype(v.dtype), i, axis=axis)
+    return {"slots": [jax.tree.map(wr(1), c, sc)
+                      for c, sc in zip(cache["slots"], sub["slots"])],
+            "tail": [jax.tree.map(wr(0), c, sc)
+                     for c, sc in zip(cache["tail"], sub["tail"])]}
+
+
+def zero_cache_slot(cache: Dict, i) -> Dict:
+    """Zero every cache row of batch slot ``i`` — reused-slot hygiene:
+    a new request admitted into a slot must never see KV rows, conv
+    tails or SSM state left by a longer previous occupant."""
+    def z(axis):
+        def go(v):
+            row = jax.lax.dynamic_slice_in_dim(v, i, 1, axis=axis)
+            return jax.lax.dynamic_update_slice_in_dim(
+                v, jnp.zeros_like(row), i, axis=axis)
+        return go
+    return _slot_axis_map(cache, z(1), z(0))
+
+
 def _decode_layer(p, spec: LayerSpec, cfg: ArchConfig, x, cache, cache_len,
                   memory=None, mrope_positions=None):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -428,6 +473,137 @@ def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache: Dict,
         x, nc = _decode_layer(p, specs[repeats * period + i], cfg, x,
                               cache["tail"][i], cache_len, memory, mrope_pos)
         new_cache["tail"].append(nc)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(x[:, 0, :], head)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# serving fast path: chunked prefill + ragged paged decode
+# ---------------------------------------------------------------------------
+
+def _chunk_layer(p, spec: LayerSpec, cfg: ArchConfig, x, cache, offset,
+                 kv_len):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        h, k_all, v_all = ATT.chunk_attention(
+            p["mixer"], cfg, h, cache["k"], cache["v"], offset, kv_len,
+            window=spec.window)
+        new_cache = {"k": k_all, "v": v_all}
+    else:
+        h, conv, ssm_st = SSM.mamba_chunk(p["mixer"], cfg, h,
+                                          cache["conv"], cache["ssm"])
+        new_cache = {"conv": conv, "ssm": ssm_st}
+    x = x + h
+    if spec.ffn == "mlp":
+        x = x + MLP.mlp(p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    elif spec.ffn == "moe":
+        h, _ = MLP.moe(p["ffn"], cfg, rmsnorm(x, p["ln2"], cfg.norm_eps))
+        x = x + h
+    return x, new_cache
+
+
+def _stack_walk(params, cfg: ArchConfig, x, cache, layer_fn):
+    """Shared slot-scan + tail walk for the serving step functions:
+    ``layer_fn(p, spec, x, layer_cache) -> (x, new_layer_cache)``."""
+    specs = layer_specs(cfg, "decoder")
+    period = pattern_period(cfg, "decoder")
+    repeats = len(specs) // period
+    new_cache: Dict[str, Any] = {"slots": [], "tail": []}
+    if repeats:
+        def body(carry, xs):
+            xc = carry
+            slot_params, slot_caches = xs
+            new_slots = []
+            for s in range(period):
+                p_s = gather_params_for_compute(slot_params[s])
+                xc, nc = layer_fn(p_s, specs[s], xc, slot_caches[s])
+                new_slots.append(nc)
+            return xc, tuple(new_slots)
+        scan_xs = (tuple(params["decoder"]["slots"]), tuple(cache["slots"]))
+        if UNROLL:
+            ys_list = []
+            for r in range(repeats):
+                x, y = body(x, jax.tree.map(lambda v: v[r], scan_xs))
+                ys_list.append(y)
+            new_slots = jax.tree.map(lambda *vs: jnp.stack(vs), *ys_list)
+        else:
+            x, new_slots = jax.lax.scan(body, x, scan_xs)
+        new_cache["slots"] = list(new_slots)
+    for i, p in enumerate(params["decoder"]["tail"]):
+        x, nc = layer_fn(p, specs[repeats * period + i], x, cache["tail"][i])
+        new_cache["tail"].append(nc)
+    return x, new_cache
+
+
+def chunk_step(params, cfg: ArchConfig, tokens: jnp.ndarray, cache: Dict,
+               offset, kv_len: int) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill one chunk of a sequence into an existing cache.
+
+    tokens: (b, c) — rows ``[offset, offset+c)`` of the prompt (offset a
+    traced scalar, 0 for the first chunk); cache: (typically a b=1
+    :func:`cache_slot_view`) with all rows < offset already prefilled.
+    Returns (logits (b, c, vocab) for *every* chunk position — the
+    caller picks the last real one to seed decoding — and the updated
+    cache)."""
+    x = embed(tokens, params["embed"])
+    x = shard_activation(x, ("batch", "seq", None))
+    x, new_cache = _stack_walk(
+        params, cfg, x, cache,
+        lambda p, spec, xc, lc: _chunk_layer(p, spec, cfg, xc, lc, offset,
+                                             kv_len))
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(x, head)
+    return logits, new_cache
+
+
+def _serve_decode_layer(p, spec: LayerSpec, cfg: ArchConfig, x, cache,
+                        lengths, active, kv_len):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        h, k_all, v_all = ATT.paged_decode_attention(
+            p["mixer"], cfg, h, cache["k"], cache["v"], lengths, kv_len,
+            window=spec.window)
+        # inactive slots (mid-prefill / retired) write at their own
+        # lengths[i] — a row the next prefill chunk or admission zeroing
+        # overwrites, so no select is needed on the KV pages
+        new_cache = {"k": k_all, "v": v_all}
+    else:
+        h, conv, ssm_st = SSM.mamba_decode(p["mixer"], cfg, h,
+                                           cache["conv"], cache["ssm"])
+        # the recurrent states are the *carry* of an in-flight prefill:
+        # a garbage decode update would corrupt the next chunk, so keep
+        # inactive slots' states untouched
+        sel = active[:, None, None]
+        new_cache = {"conv": jnp.where(sel, conv, cache["conv"]),
+                     "ssm": jnp.where(sel, ssm_st, cache["ssm"])}
+    x = x + h
+    if spec.ffn == "mlp":
+        x = x + MLP.mlp(p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    elif spec.ffn == "moe":
+        h, _ = MLP.moe(p["ffn"], cfg, rmsnorm(x, p["ln2"], cfg.norm_eps))
+        x = x + h
+    return x, new_cache
+
+
+def serve_decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                      cache: Dict, lengths: jnp.ndarray,
+                      active: jnp.ndarray, kv_len: int
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """Ragged continuous-batching decode step.
+
+    token: (b, 1) int32; lengths: (b,) per-slot valid cache lengths
+    (each slot attends to and extends its *own* prefix — no shared
+    ``max(lengths)``); active: (b,) bool — slots currently decoding;
+    kv_len: static page-aligned bound ≥ max(lengths)+1.  Returns
+    (logits (b, vocab), new cache)."""
+    x = embed(token, params["embed"])
+    x, new_cache = _stack_walk(
+        params, cfg, x, cache,
+        lambda p, spec, xc, lc: _serve_decode_layer(p, spec, cfg, xc, lc,
+                                                    lengths, active, kv_len))
     x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
     logits = unembed(x[:, 0, :], head)

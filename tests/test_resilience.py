@@ -289,7 +289,7 @@ def test_cache_stats_roundtrip(tmp_path):
     assert c2.stats.disk_hits == 1 and c2.stats["disk_hits"] == 1
     assert set(c2.stats.as_dict()) == {"hits", "misses", "disk_hits",
                                        "corrupt", "evicted", "bytes",
-                                       "latency_saved_s"}
+                                       "latency_saved_s", "push_capped"}
 
 
 def test_cache_corrupt_pickle_quarantined(tmp_path):

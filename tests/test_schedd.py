@@ -710,6 +710,38 @@ def test_peer_winner_push_between_daemons(tmp_path):
             ca.close(); cb.close()
 
 
+def test_winner_push_storm_cap(tmp_path):
+    """Admitted peer pushes are bounded per sliding window: a push storm
+    cannot churn the frame cache.  Refusals are typed (admitted=False,
+    capped=True) and tallied on both the daemon counters and the frame
+    cache's CacheStats; once the window slides past, pushes admit
+    again."""
+    with tcp_daemon(tmp_path, push_storm_max=2,
+                    push_storm_window=60.0) as (d, addr):
+        c = SchedClient(addr, retries=0, key=TCP_KEY)
+
+        def push(i):
+            return c._request(
+                {"op": "winner_push",
+                 "key": ("schedule", f"storm-{i}", False),
+                 "resp": {"ok": True, "schedule": None,
+                          "meta": {"degraded": False}},
+                 "compute_s": 1.0}, 5.0)
+
+        rs = [push(i) for i in range(5)]
+        assert [bool(r.get("admitted")) for r in rs] == \
+            [True, True, False, False, False]
+        assert all(rs[i].get("capped") for i in range(2, 5))
+        assert d.counters["peer_pushes_recv"] == 2
+        assert d.counters["peer_pushes_capped"] == 3
+        assert d._frames.stats["push_capped"] == 3
+        # slide the window: pretend the admits happened long ago
+        with d._lock:
+            d._push_admits.clear()
+        assert push(9).get("admitted") is True
+        c.close()
+
+
 def test_winner_push_op_validates(tmp_path):
     """The winner_push op rejects degraded/malformed pushes with a
     typed error instead of admitting poison."""
